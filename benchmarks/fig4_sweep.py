@@ -1,0 +1,80 @@
+"""Paper Fig. 4 case study: accuracy + EDP vs embedding dim x quantization
+bits x subarray column size (MANN task).
+
+Reproduced trends (paper §IV-B1):
+  * 2-bit quantization hurts accuracy much more than 3-bit;
+  * for the same column size, smaller dims tend to higher accuracy
+    (fewer voting segments -> less voting error);
+  * for the same dim, larger subarrays have higher accuracy but worse EDP;
+  * EDP grows with embedding dimension.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from repro.core import CAMASim
+
+from . import mann_task
+
+
+def run(dims=(64, 128, 256), bits=(2, 3), cols=(64, 128),
+        episodes: int = 8, steps: int = 300):
+    results = []
+    nets = {d: mann_task.train_embedding(dim=d, steps=steps) for d in dims}
+    for d in dims:
+        fp = mann_task.eval_mann(nets[d], None, use_cam=False,
+                                 episodes=episodes)
+        for b in bits:
+            for c in cols:
+                if c > d:       # column wider than the vector: same as c=d
+                    continue
+                cfg = mann_task.mann_cam_config(d, b, rows=32, cols=c)
+                acc = mann_task.eval_mann(nets[d], cfg, episodes=episodes)
+                sim = CAMASim(cfg)
+                sim.write(jnp.zeros((32, d)))
+                perf = sim.eval_perf()
+                edp_ajs = perf["latency_ns"] * perf["energy_pj"] * 1e-3
+                results.append(dict(dim=d, bits=b, cols=c, acc=acc,
+                                    acc_fp=fp, edp_aj_s=edp_ajs,
+                                    latency_ns=perf["latency_ns"],
+                                    energy_pj=perf["energy_pj"]))
+    return results
+
+
+def check_trends(results) -> dict:
+    """Assert the paper's qualitative findings hold."""
+    import statistics as st
+    by = lambda **kw: [r for r in results
+                       if all(r[k] == v for k, v in kw.items())]
+    drop = lambda r: r["acc_fp"] - r["acc"]
+    mean = lambda xs: st.mean(xs) if xs else float("nan")
+    dims = sorted(set(r["dim"] for r in results))
+    out = {
+        "drop_2b": mean([drop(r) for r in by(bits=2)]),
+        "drop_3b": mean([drop(r) for r in by(bits=3)]),
+        # EDP increases with dim at fixed bits/cols (min vs max dim present)
+        "edp_lo": mean([r["edp_aj_s"] for r in by(dim=dims[0])]),
+        "edp_hi": mean([r["edp_aj_s"] for r in by(dim=dims[-1])]),
+    }
+    out["2b_worse_than_3b"] = out["drop_2b"] > out["drop_3b"]
+    out["edp_grows_with_dim"] = out["edp_hi"] > out["edp_lo"]
+    return out
+
+
+def main():
+    t0 = time.perf_counter()
+    results = run(dims=(64, 128), bits=(2, 3), cols=(64,), episodes=4,
+                  steps=150)
+    dt = (time.perf_counter() - t0) * 1e6
+    tr = check_trends(results)
+    for r in results:
+        print(f"fig4_d{r['dim']}_b{r['bits']}_c{r['cols']},{dt/len(results):.0f},"
+              f"acc={r['acc']:.3f}(fp{r['acc_fp']:.3f})_edp={r['edp_aj_s']:.3f}aJs")
+    print(f"fig4_trend_2b_worse,{dt:.0f},{tr['2b_worse_than_3b']}")
+    print(f"fig4_trend_edp_dim,{dt:.0f},{tr['edp_grows_with_dim']}")
+
+
+if __name__ == "__main__":
+    main()

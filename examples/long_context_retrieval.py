@@ -1,0 +1,58 @@
+"""CAM-retrieval attention on a long context (the long_500k story, scaled
+to CPU): a needle-in-a-haystack retrieval demo.
+
+A reduced model decodes against a long KV cache; with CAM retrieval ON the
+attention only touches the top-k best-match entries — we verify the
+planted "needle" key is retrieved from far back in the cache and compare
+the bytes touched vs dense attention.
+
+    PYTHONPATH=src python examples/long_context_retrieval.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.attention import decode_attention
+from repro.models.cam_attention import cam_decode_attention
+
+S = 8192                 # long cache (500k in the production dry-run)
+B, KVH, G, D = 1, 2, 2, 32
+H = KVH * G
+TOPK = 64
+
+cfg = get_config("granite-8b").reduced().replace(cam_topk=TOPK)
+key = jax.random.PRNGKey(0)
+k1, k2, k3 = jax.random.split(key, 3)
+
+# a haystack of near-orthogonal keys + one planted needle at position 1234
+k_cache = 0.1 * jax.random.normal(k1, (B, S, KVH, D))
+v_cache = 0.1 * jax.random.normal(k2, (B, S, KVH, D))
+needle = jax.random.normal(k3, (D,))
+k_cache = k_cache.at[0, 1234].set(jnp.stack([needle, needle]))
+v_cache = v_cache.at[0, 1234].set(7.0)
+
+q = jnp.broadcast_to(needle, (B, H, D)) * 0.9   # query resembles the needle
+pos = jnp.full((B,), S - 1, jnp.int32)
+
+dense = decode_attention(q, k_cache, v_cache, pos)
+cam = cam_decode_attention(q, k_cache, v_cache, pos, cfg)
+
+print(f"cache length        : {S} entries")
+print(f"CAM retrieval top-k : {TOPK} ({100*TOPK/S:.1f}% of the cache)")
+print(f"needle value found  : dense={float(dense.mean()):.3f} "
+      f"cam={float(cam.mean()):.3f} (planted 7.0)")
+
+bytes_dense = S * KVH * D * 2 * 2          # read all K and V
+bytes_cam = S * KVH * D * 2 + TOPK * G * KVH * D * 2   # K scan + k of V
+print(f"value bytes touched : dense={bytes_dense/1e6:.2f} MB "
+      f"cam={bytes_cam/1e6:.2f} MB "
+      f"({bytes_dense/bytes_cam:.1f}x reduction)")
+
+# the interesting part: softmax over 8192 near-zero scores DILUTES the
+# needle (weight ~exp(s)/(exp(s)+S)), while the CAM best-match search
+# concentrates attention on the retrieved set — exactly the MANN behaviour
+# the paper validates, transplanted into an LM decode step.
+assert float(cam.mean()) > 3.0, "CAM retrieval must recover the needle"
+assert float(cam.mean()) > float(dense.mean()) + 1.0
+print("OK: CAM best-match retrieval recovered the needle that dense "
+      "attention diluted.")

@@ -1,0 +1,3 @@
+from .ckpt import committed_steps, restore, restore_sharded, save
+
+__all__ = ["save", "restore", "restore_sharded", "committed_steps"]

@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic, keep-N, async, mesh-agnostic.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json        tree structure, shapes, dtypes, leaf files
+        leaf_00000.npy ...   one .npy per leaf (written tmp + atomic rename)
+    <dir>/step_000123.COMMITTED   commit marker (written last)
+
+Restore picks the newest *committed* step, so a crash mid-write can never
+yield a torn checkpoint.  Arrays are saved device-agnostic (gathered to
+host) and resharded on load to whatever mesh the restarted job runs on —
+this is what makes elastic re-scaling work (runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> Tuple[List[Any], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+# numpy can't natively (de)serialize ml_dtypes (bfloat16, fp8, ...): store
+# them as a same-width uint view and record the true dtype in the manifest.
+_VIEW_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_storable(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    dtype_name = str(arr.dtype)
+    try:
+        np.dtype(dtype_name)
+        native = arr.dtype.kind in "biufc?SUO"
+    except TypeError:
+        native = False
+    if native:
+        return arr, dtype_name
+    return arr.view(_VIEW_WIDTH[arr.dtype.itemsize]), dtype_name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_name:
+        return arr
+    import ml_dtypes  # ships with jax
+    return arr.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+
+
+def save(directory: str, step: int, tree, keep: int = 3,
+         async_write: bool = False) -> str:
+    """Write a checkpoint; returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    leaves, treedef = _leaf_paths(tree)
+    host = [np.asarray(jax.device_get(l)) for l in leaves]
+
+    def write():
+        name = f"step_{step:08d}"
+        final = os.path.join(directory, name)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {
+            "step": step,
+            "treedef_str": str(treedef),   # debugging aid only; restore
+            "leaves": [],                  # maps leaves by flatten order
+        }
+        for i, arr in enumerate(host):
+            fname = f"leaf_{i:05d}.npy"
+            storable, dtype_name = _to_storable(arr)
+            np.save(os.path.join(tmp, fname), storable)
+            manifest["leaves"].append(
+                {"file": fname, "shape": list(arr.shape),
+                 "dtype": dtype_name})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # commit marker written last: restore only trusts committed steps
+        with open(final + ".COMMITTED", "w") as f:
+            f.write(str(step))
+        _gc(directory, keep)
+        return final
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return os.path.join(directory, f"step_{step:08d}")
+    return write()
+
+
+def committed_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for f in os.listdir(directory):
+        if f.endswith(".COMMITTED"):
+            out.append(int(f[len("step_"):-len(".COMMITTED")]))
+    return sorted(out)
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = committed_steps(directory)
+    for s in steps[:-keep] if keep > 0 else []:
+        name = os.path.join(directory, f"step_{s:08d}")
+        for p in (name, name + ".COMMITTED"):
+            if os.path.isdir(p):
+                shutil.rmtree(p)
+            elif os.path.exists(p):
+                os.remove(p)
+
+
+def restore(directory: str, treedef_example, step: Optional[int] = None
+            ) -> Tuple[int, Any]:
+    """Restore the newest committed checkpoint as host numpy arrays.
+
+    ``treedef_example``: any pytree with the same structure (e.g. the
+    freshly-initialized state) — leaf order defines file mapping.
+    """
+    steps = committed_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    _, treedef = jax.tree_util.tree_flatten(treedef_example)
+    leaves = [_from_storable(np.load(os.path.join(path, e["file"])),
+                             e["dtype"])
+              for e in manifest["leaves"]]
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected "
+            f"{treedef.num_leaves} — structure mismatch")
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore_sharded(directory: str, example_tree, shardings,
+                    step: Optional[int] = None) -> Tuple[int, Any]:
+    """Restore + place each leaf with the given NamedSharding tree
+    (elastic re-shard: the target mesh may differ from the writer's)."""
+    step, host = restore(directory, example_tree, step)
+    flat_h, treedef = jax.tree_util.tree_flatten(host)
+    flat_s = treedef.flatten_up_to(shardings)
+    placed = [jax.device_put(h, s) for h, s in zip(flat_h, flat_s)]
+    return step, jax.tree_util.tree_unflatten(treedef, placed)

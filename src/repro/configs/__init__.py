@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>``.
+
+One module per assigned architecture (exact published config), plus the
+paper's own validation applications (MANN / HDC / DRL CAM setups live in
+repro.core configs, not here — these are the LM backbones).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import SHAPE_SPECS, SHAPES, ModelConfig
+
+ARCH_IDS: List[str] = [
+    "musicgen-large",
+    "granite-20b",
+    "qwen2-1.5b",
+    "minicpm3-4b",
+    "granite-8b",
+    "deepseek-moe-16b",
+    "moonshot-v1-16b-a3b",
+    "chameleon-34b",
+    "mamba2-2.7b",
+    "zamba2-7b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+__all__ = ["ModelConfig", "SHAPES", "SHAPE_SPECS", "ARCH_IDS", "get_config",
+           "all_configs"]

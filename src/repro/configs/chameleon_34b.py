@@ -1,0 +1,21 @@
+"""chameleon-34b [vlm]: early-fusion mixed-modal transformer.
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536
+[arXiv:2405.09818; unverified]
+
+The VQ image tokenizer is a STUB: image patches arrive pre-tokenized as ids
+in the unified 65536 vocab (input_mode='tokens'; see DESIGN.md §3).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    cam_attention=True,
+)

@@ -1,0 +1,23 @@
+"""deepseek-moe-16b [moe]: fine-grained MoE, 2 shared + 64 routed top-6.
+
+28L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=102400
+[arXiv:2401.06066; hf:deepseek-ai/deepseek-moe-16b-base]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    moe_d_ff=1408,
+    n_experts=64,
+    n_shared_experts=2,
+    moe_top_k=6,
+    vocab_size=102400,
+    cam_attention=True,
+    cam_router=True,         # the paper's best-match CAM search as router
+)

@@ -1,0 +1,19 @@
+"""granite-20b [dense]: llama-arch code model, MQA.
+
+52L d_model=6144 48H (GQA kv=1 == MQA) d_ff=24576 vocab=49152
+[arXiv:2405.04324; hf:ibm-granite/granite-20b-code-base]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    mlp_type="gelu",          # gpt-bigcode arch: 2-matrix GELU MLP
+    vocab_size=49152,
+    cam_attention=True,
+)

@@ -1,0 +1,27 @@
+"""mamba2-2.7b [ssm]: SSD (state-space duality), attention-free.
+
+64L d_model=2560 d_inner=5120 (expand 2) headdim=64 state=128 vocab=50280
+[arXiv:2405.21060; hf:state-spaces/mamba2-2.7b]
+
+The paper's CAM technique is inapplicable to the token-mixing path (no KV
+store to search — DESIGN.md §Arch-applicability); implemented without it.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    attention="none",
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    cam_attention=False,
+)

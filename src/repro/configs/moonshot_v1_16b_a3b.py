@@ -1,0 +1,23 @@
+"""moonshot-v1-16b-a3b [moe]: kimi/moonlight, 64 routed top-6 experts.
+
+48L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=163840
+[hf:moonshotai/Moonlight-16B-A3B]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    moe_d_ff=1408,
+    n_experts=64,
+    n_shared_experts=2,
+    moe_top_k=6,
+    vocab_size=163840,
+    cam_attention=True,
+    cam_router=True,
+)

@@ -1,0 +1,23 @@
+"""musicgen-large [audio]: decoder-only over EnCodec tokens.
+
+48L d_model=2048 32H (GQA kv=32 == MHA) d_ff=8192 vocab=2048
+[arXiv:2306.05284; hf:facebook/musicgen-large]
+
+The EnCodec modality frontend is a STUB: input_specs() provides precomputed
+frame embeddings (input_mode='embeddings'); the backbone + LM head over the
+2048-entry codebook vocab is what we model.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    input_mode="embeddings",
+    cam_attention=True,      # CAM-retrieval attention at decode
+)

@@ -1,0 +1,25 @@
+"""zamba2-7b [hybrid]: Mamba2 backbone + weight-shared attention blocks.
+
+81L d_model=3584 32H (kv=32) d_ff=14336 ssm_state=64 vocab=32000
+shared attention+MLP block applied every 6 mamba layers
+[arXiv:2411.15242; hf:Zyphra/Zamba2-7B; simplified weight-sharing, see
+DESIGN.md]
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=256,
+    hybrid_attn_every=6,
+    cam_attention=True,      # used by the shared attention blocks
+)

@@ -1,0 +1,17 @@
+"""CAMASim core — the paper's contribution, as a composable JAX library.
+
+Functional simulator (accuracy) + performance evaluator (latency/energy/area)
+for CAM-based in-memory search accelerators, configurable across the
+application / architecture / circuit / device levels (paper Table III).
+"""
+from .camasim import CAMASim
+from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                     DeviceConfig)
+from .functional import CAMState, FunctionalSimulator
+from .perf import PerfResult, estimate_arch, predict_search, predict_write
+
+__all__ = [
+    "CAMASim", "CAMConfig", "AppConfig", "ArchConfig", "CircuitConfig",
+    "DeviceConfig", "CAMState", "FunctionalSimulator", "PerfResult",
+    "estimate_arch", "predict_search", "predict_write",
+]

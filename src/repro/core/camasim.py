@@ -1,0 +1,86 @@
+"""CAMASim facade (paper Fig. 1a): write / query APIs + performance report.
+
+    sim = CAMASim(config)
+    state = sim.write(stored)            # (K, N)
+    idx, mask = sim.query(state, q)      # (Q, N) -> (Q, k), (Q, K')
+    perf = sim.eval_perf(n_queries=Q)    # latency / energy / area / EDP
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import CAMConfig
+from .functional import CAMState, FunctionalSimulator
+from .perf import (ArchSpecifics, PerfResult, estimate_arch, predict_search,
+                   predict_write)
+
+
+class CAMASim:
+    def __init__(self, config: CAMConfig, use_kernel: bool = False):
+        config.validate()
+        self.config = config
+        self.functional = FunctionalSimulator(config, use_kernel=use_kernel)
+        self._arch: Optional[ArchSpecifics] = None
+        self._KN: Optional[Tuple[int, int]] = None
+
+    # ------------------------------------------------------------ write
+    def write(self, stored: jax.Array,
+              key: Optional[jax.Array] = None) -> CAMState:
+        self._KN = tuple(stored.shape[:2])   # ACAM ranges carry a 3rd dim
+        self._arch = estimate_arch(self.config, *self._KN)
+        return self.functional.write(stored, key)
+
+    # ------------------------------------------------------------ query
+    def query(self, state: CAMState, queries: jax.Array,
+              key: Optional[jax.Array] = None):
+        return self.functional.query(state, queries, key)
+
+    # ----------------------------------------------------------- perf
+    def arch_specifics(self) -> ArchSpecifics:
+        if self._arch is None:
+            raise RuntimeError("call write() before querying arch specifics")
+        return self._arch
+
+    def eval_perf(self, n_queries: int = 1, include_write: bool = False,
+                  ops_per_query: int = 1,
+                  clock_hz: Optional[float] = None) -> dict:
+        """Hardware performance prediction for the written store.
+
+        ``clock_hz``: system clock — each search cycle is quantized to
+        max(combinational search latency, one clock period)."""
+        arch = self.arch_specifics()
+        search = predict_search(self.config, arch, ops_per_query=1)
+        if clock_hz is not None:
+            cycle = max(search.latency_ns, 1e9 / clock_hz)
+        else:
+            cycle = search.latency_ns
+        from .perf.estimator import PerfResult
+        search = PerfResult(latency_ns=cycle * ops_per_query,
+                            energy_pj=search.energy_pj * ops_per_query,
+                            area_um2=search.area_um2,
+                            breakdown=search.breakdown)
+        out = {
+            "arch": arch.describe(),
+            "search": search,
+            "latency_ns": search.latency_ns,
+            "energy_pj": search.energy_pj * n_queries,
+            "area_um2": search.area_um2,
+            "edp_pj_ns": search.edp,
+        }
+        if include_write:
+            w = predict_write(self.config, arch)
+            out["write"] = w
+            out["energy_pj"] += w.energy_pj
+        return out
+
+    # ------------------------------------------------------- convenience
+    def search(self, stored: jax.Array, queries: jax.Array,
+               key: Optional[jax.Array] = None):
+        """One-shot write+query (store-once-search-many still preferred)."""
+        kw, kq = (jax.random.split(key) if key is not None
+                  else (None, None))
+        state = self.write(stored, kw)
+        return self.query(state, queries, kq)

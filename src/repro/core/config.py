@@ -1,0 +1,175 @@
+"""CAMASim 4-level configuration (paper Table III).
+
+The design space of a CAM-based accelerator is described by four nested
+configs — application, architecture, circuit, device — mirroring Table III of
+the paper.  Configs are plain frozen dataclasses so they can be used as jit
+static arguments, hashed, and serialized to/from JSON.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Enumerated choices (kept as strings for JSON friendliness; validated below)
+# ---------------------------------------------------------------------------
+DISTANCES = ("hamming", "l1", "l2", "dot", "range")
+MATCH_TYPES = ("exact", "best", "threshold")
+CELL_TYPES = ("bcam", "tcam", "mcam", "acam")
+H_MERGE = ("and", "voting", "adder")  # 'adder' = beyond-paper exact-sum merge
+V_MERGE = ("gather", "comparator")
+DEVICES = ("cmos", "fefet", "reram", "skyrmion")
+VARIATION_TYPES = ("none", "d2d", "c2c", "both")
+VARIATION_SPECS = ("stat", "exper")
+
+
+def _check(value, allowed, name):
+    if value not in allowed:
+        raise ValueError(f"{name}={value!r} not in {allowed}")
+
+
+@dataclass(frozen=True)
+class AppConfig:
+    """Application-level choices (Table III, app. config.)."""
+    distance: str = "l2"           # Hamm./L1/L2 (+ dot, beyond-paper)
+    match_type: str = "best"       # exact / best / threshold
+    match_param: int = 1           # #neighbours (best) or threshold (thr/exact)
+    data_bits: int = 3             # data type: number of bits per cell (0 = fp)
+
+    def __post_init__(self):
+        _check(self.distance, DISTANCES, "distance")
+        _check(self.match_type, MATCH_TYPES, "match_type")
+        if self.match_param < 0:
+            raise ValueError("match_param must be >= 0")
+        if not (0 <= self.data_bits <= 8):
+            raise ValueError("data_bits must be in [0, 8] (0 = full precision)")
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Architecture-level choices (Table III, arch. config.)."""
+    subarrays_per_array: int = 4
+    arrays_per_mat: int = 4
+    mats_per_bank: int = 4
+    h_merge: str = "voting"        # horizontal merge: and / voting / adder
+    v_merge: str = "comparator"    # vertical merge: gather / comparator
+
+    def __post_init__(self):
+        _check(self.h_merge, H_MERGE, "h_merge")
+        _check(self.v_merge, V_MERGE, "v_merge")
+        for f_ in ("subarrays_per_array", "arrays_per_mat", "mats_per_bank"):
+            if getattr(self, f_) < 1:
+                raise ValueError(f"{f_} must be >= 1")
+
+
+@dataclass(frozen=True)
+class CircuitConfig:
+    """Circuit-level choices (Table III, circ. config.)."""
+    rows: int = 64                 # R: rows per subarray
+    cols: int = 64                 # C: cols per subarray
+    cell_type: str = "mcam"        # bcam / tcam / mcam / acam
+    sensing: str = "best"          # sensing circuit type: exact/best/threshold
+    sensing_limit: float = 0.0     # SL: min detectable signal difference
+                                   # (in quantized-LSB distance units)
+
+    def __post_init__(self):
+        _check(self.cell_type, CELL_TYPES, "cell_type")
+        _check(self.sensing, MATCH_TYPES, "sensing")
+        if self.rows < 1 or self.cols < 1:
+            raise ValueError("rows/cols must be >= 1")
+        if self.sensing_limit < 0:
+            raise ValueError("sensing_limit must be >= 0")
+
+
+@dataclass(frozen=True)
+class DeviceConfig:
+    """Device-level choices (Table III, dev. config.)."""
+    device: str = "fefet"          # cmos / fefet / reram / skyrmion
+    variation: str = "none"        # none / d2d / c2c / both
+    variation_spec: str = "stat"   # stat (Gaussian) / exper (empirical table)
+    variation_std: float = 0.0     # Gaussian STD in LSBs (stat spec)
+    # experimental spec: per-level empirical stds (e.g. measured from chips);
+    # length must be 2**data_bits when used.
+    exper_table: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        _check(self.device, DEVICES, "device")
+        _check(self.variation, VARIATION_TYPES, "variation")
+        _check(self.variation_spec, VARIATION_SPECS, "variation_spec")
+        if self.variation_std < 0:
+            raise ValueError("variation_std must be >= 0")
+
+
+@dataclass(frozen=True)
+class CAMConfig:
+    """Full 4-level CAMASim configuration."""
+    app: AppConfig = field(default_factory=AppConfig)
+    arch: ArchConfig = field(default_factory=ArchConfig)
+    circuit: CircuitConfig = field(default_factory=CircuitConfig)
+    device: DeviceConfig = field(default_factory=DeviceConfig)
+
+    # ------------------------------------------------------------------ io
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CAMConfig":
+        dev = dict(d.get("device", {}))
+        if dev.get("exper_table") is not None:
+            dev["exper_table"] = tuple(dev["exper_table"])
+        return cls(
+            app=AppConfig(**d.get("app", {})),
+            arch=ArchConfig(**d.get("arch", {})),
+            circuit=CircuitConfig(**dev_free(d.get("circuit", {}))),
+            device=DeviceConfig(**dev),
+        )
+
+    @classmethod
+    def from_json(cls, s: str) -> "CAMConfig":
+        return cls.from_dict(json.loads(s))
+
+    # ------------------------------------------------------------- helpers
+    def replace(self, **sections) -> "CAMConfig":
+        """Replace whole sections or nested fields.
+
+        ``cfg.replace(circuit=dict(rows=128))`` merges into the existing
+        circuit config.
+        """
+        out = {}
+        for name in ("app", "arch", "circuit", "device"):
+            cur = getattr(self, name)
+            if name in sections:
+                val = sections[name]
+                if isinstance(val, dict):
+                    out[name] = dataclasses.replace(cur, **val)
+                else:
+                    out[name] = val
+            else:
+                out[name] = cur
+        return CAMConfig(**out)
+
+    def validate(self) -> None:
+        """Cross-level validation (paper Fig. 3b constraints)."""
+        if self.app.match_type == "threshold" and self.arch.h_merge in ("voting",):
+            raise ValueError(
+                "threshold match has no voting-based horizontal merge "
+                "(paper: no existing efficient scheme)")
+        if self.app.match_type == "exact" and self.arch.h_merge == "voting":
+            raise ValueError("exact match uses AND horizontal merge, not voting")
+        if self.app.match_type == "best" and self.arch.v_merge == "gather":
+            raise ValueError("best match requires comparator vertical merge")
+        if self.circuit.cell_type == "bcam" and self.app.data_bits > 1:
+            raise ValueError("BCAM stores 1 bit per cell")
+        if self.circuit.cell_type == "tcam" and self.app.data_bits > 1:
+            raise ValueError("TCAM stores 1 bit (+don't-care) per cell")
+
+
+def dev_free(d: dict) -> dict:
+    """Drop keys that are not CircuitConfig fields (forward compat)."""
+    keep = {f.name for f in dataclasses.fields(CircuitConfig)}
+    return {k: v for k, v in d.items() if k in keep}

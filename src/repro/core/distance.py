@@ -1,0 +1,77 @@
+"""Distance functions for CAM search (paper Table I/III: Hamming, L1, L2).
+
+All distances operate on the *code domain* (possibly noisy, possibly masked
+by padding) and are written to broadcast a batch of queries against a batch
+of stored rows:
+
+    stored : (..., R, C)
+    query  : (..., C)      -> dist (..., R)
+
+``valid`` masks padded columns so partitioning never changes results.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _masked(x: jax.Array, valid: jax.Array | None) -> jax.Array:
+    if valid is None:
+        return x
+    return x * valid
+
+
+def hamming(stored: jax.Array, query: jax.Array,
+            valid: jax.Array | None = None) -> jax.Array:
+    """#cells whose codes differ (exact cell mismatch count)."""
+    diff = (stored != query[..., None, :]).astype(jnp.float32)
+    return jnp.sum(_masked(diff, valid), axis=-1)
+
+
+def l1(stored: jax.Array, query: jax.Array,
+       valid: jax.Array | None = None) -> jax.Array:
+    diff = jnp.abs(stored - query[..., None, :])
+    return jnp.sum(_masked(diff, valid), axis=-1)
+
+
+def l2(stored: jax.Array, query: jax.Array,
+       valid: jax.Array | None = None) -> jax.Array:
+    """Squared L2 (monotone in L2; what the analog ML discharge integrates)."""
+    diff = jnp.square(stored - query[..., None, :])
+    return jnp.sum(_masked(diff, valid), axis=-1)
+
+
+def dot(stored: jax.Array, query: jax.Array,
+        valid: jax.Array | None = None) -> jax.Array:
+    """Negative inner product, so that smaller == more similar (beyond-paper;
+    used by CAM-retrieval attention)."""
+    prod = stored * query[..., None, :]
+    return -jnp.sum(_masked(prod, valid), axis=-1)
+
+
+def range_violations(stored: jax.Array, query: jax.Array,
+                     valid: jax.Array | None = None) -> jax.Array:
+    """ACAM range match: stored (..., R, C, 2) holds [lo, hi] per cell;
+    distance = number of cells whose range excludes the query value
+    (0 == full row match, as in X-TIME-style decision-tree inference)."""
+    lo = stored[..., 0]
+    hi = stored[..., 1]
+    q = query[..., None, :]
+    viol = ((q < lo) | (q > hi)).astype(jnp.float32)
+    return jnp.sum(_masked(viol, valid), axis=-1)
+
+
+DISTANCE_FNS = {
+    "hamming": hamming,
+    "l1": l1,
+    "l2": l2,
+    "dot": dot,
+    "range": range_violations,
+}
+
+
+def get_distance(name: str):
+    try:
+        return DISTANCE_FNS[name]
+    except KeyError:
+        raise ValueError(f"unknown distance {name!r}; have {list(DISTANCE_FNS)}")

@@ -1,0 +1,141 @@
+"""Functional simulator (paper Fig. 1b): write simulation + query simulation.
+
+Write:  stored data --quantize--> codes --map--> subarray grid --D2D-->
+        CAM data (what the physical cells actually hold).
+Query:  query data --quantize(shared scale)--> segments; per query cycle the
+        CAM data sees fresh C2C noise; each subarray searches in parallel;
+        merge produces application-level match indices.
+
+Everything is jit-able; queries are processed as a batch (vmapped over the
+query axis) which is exactly the CAM usage model: store once, search many.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mapping, merge, quantize, subarray, variation
+from .config import CAMConfig
+
+
+@dataclass
+class CAMState:
+    """State produced by write simulation (a pytree)."""
+    grid: jax.Array          # (nv, nh, R, C) noisy stored codes
+    lo: jax.Array            # quantization range (shared with queries)
+    hi: jax.Array
+    spec: mapping.GridSpec   # static partition spec
+    col_valid: jax.Array     # (nh, C)
+    row_valid: jax.Array     # (nv, R)
+
+
+jax.tree_util.register_pytree_node(
+    CAMState,
+    lambda s: ((s.grid, s.lo, s.hi, s.col_valid, s.row_valid), s.spec),
+    lambda spec, leaves: CAMState(leaves[0], leaves[1], leaves[2], spec,
+                                  leaves[3], leaves[4]),
+)
+
+
+class FunctionalSimulator:
+    """Automated in-memory search simulation (accuracy path of CAMASim)."""
+
+    def __init__(self, config: CAMConfig, use_kernel: bool = False):
+        config.validate()
+        self.config = config
+        self.use_kernel = use_kernel
+
+    # ------------------------------------------------------------- write
+    def write(self, stored: jax.Array, key: Optional[jax.Array] = None
+              ) -> CAMState:
+        """Write simulation: quantize + map + D2D variation.
+
+        ACAM accepts ``stored`` of shape (K, N, 2) holding per-cell
+        [lo, hi] ranges (X-TIME-style); other cells take (K, N) values."""
+        cfg = self.config
+        if stored.ndim == 3:
+            assert cfg.circuit.cell_type == "acam",                 "range stores need cell_type='acam'"
+        K, N = stored.shape[:2]
+        spec = mapping.grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols)
+        return self._write_jit(stored, spec,
+                               key if key is not None
+                               else jax.random.PRNGKey(0))
+
+    @partial(jax.jit, static_argnums=(0, 2))
+    def _write_jit(self, stored, spec, key):
+        cfg = self.config
+        if stored.ndim == 3:        # ACAM ranges: no quantization
+            codes, lo, hi = stored, jnp.zeros(()), jnp.ones(())
+        else:
+            codes, lo, hi = quantize.quantize_for_cell(
+                stored, cfg.circuit.cell_type, cfg.app.data_bits)
+        grid = mapping.partition_stored(codes, spec)
+        grid = variation.apply_d2d(grid, cfg.device, cfg.app.data_bits, key)
+        return CAMState(grid=grid, lo=lo, hi=hi, spec=spec,
+                        col_valid=mapping.col_valid_mask(spec),
+                        row_valid=mapping.row_valid_mask(spec))
+
+    # ------------------------------------------------------------- query
+    def query(self, state: CAMState, queries: jax.Array,
+              key: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+        """Query simulation.
+
+        queries: (Q, N) application-domain query batch.
+        Returns (indices (Q, k), mask (Q, padded_K)); indices padded with -1.
+        """
+        if queries.ndim == 1:
+            idx, mask = self.query(state, queries[None],
+                                   key)
+            return idx[0], mask[0]
+        return self._query_jit(state, queries,
+                               key if key is not None
+                               else jax.random.PRNGKey(1))
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _query_jit(self, state: CAMState, queries, key):
+        cfg = self.config
+        bits = cfg.app.data_bits
+        qcodes, _, _ = quantize.quantize_for_cell(
+            queries, cfg.circuit.cell_type, bits, state.lo, state.hi)
+        qseg = mapping.partition_query(qcodes, state.spec)   # (Q, nh, C)
+
+        c2c = cfg.device.variation in ("c2c", "both")
+        if c2c:
+            keys = variation.split_for_queries(key, queries.shape[0])
+
+            def one(q, k):
+                g = variation.apply_c2c(state.grid, cfg.device, bits, k)
+                return self._search_one(g, q, state)
+            return jax.vmap(one)(qseg, keys)
+        # no per-query noise: broadcast the query batch through the grid
+        return jax.vmap(lambda q: self._search_one(state.grid, q, state)
+                        )(qseg)
+
+    def _search_one(self, grid, qseg, state: CAMState):
+        cfg = self.config
+        dist, match = subarray.subarray_query(
+            grid, qseg,
+            distance=cfg.app.distance,
+            sensing=cfg.circuit.sensing,
+            sensing_limit=cfg.circuit.sensing_limit,
+            threshold=float(cfg.app.match_param)
+            if cfg.app.match_type == "threshold" else 0.0,
+            col_valid=state.col_valid,
+            row_valid=state.row_valid,
+            use_kernel=self.use_kernel)
+        k = cfg.app.match_param if cfg.app.match_type == "best" else max(
+            1, min(state.spec.padded_K, 16))
+        return merge.merge(
+            dist, match,
+            match_type=cfg.app.match_type,
+            h_merge=cfg.arch.h_merge,
+            v_merge=cfg.arch.v_merge,
+            match_param=k,
+            sensing_limit=cfg.circuit.sensing_limit,
+            threshold=float(cfg.app.match_param)
+            if cfg.app.match_type == "threshold" else 0.0)

@@ -1,0 +1,85 @@
+"""Mapping submodule (paper §III-C): partition stored data into subarrays.
+
+Given stored data of K entries × N dims and a subarray of R rows × C cols,
+partition into an (nv, nh) grid of (R, C) subarrays:
+
+    nv = ceil(K / R)   vertical   blocks (entries split across subarrays)
+    nh = ceil(N / C)   horizontal blocks (dimensions split across subarrays)
+
+Padding cells/rows are tracked with masks so that search results are
+identical to the unpartitioned reference (a property test asserts this).
+The 2-D grid is then laid onto the bank-mat-array-subarray hierarchy by the
+performance estimator.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class GridSpec:
+    K: int           # entries
+    N: int           # dims
+    R: int           # rows / subarray
+    C: int           # cols / subarray
+    nv: int          # vertical blocks
+    nh: int          # horizontal blocks
+
+    @property
+    def n_subarrays(self) -> int:
+        return self.nv * self.nh
+
+    @property
+    def padded_K(self) -> int:
+        return self.nv * self.R
+
+    @property
+    def padded_N(self) -> int:
+        return self.nh * self.C
+
+
+def grid_spec(K: int, N: int, R: int, C: int) -> GridSpec:
+    return GridSpec(K=K, N=N, R=R, C=C,
+                    nv=math.ceil(K / R), nh=math.ceil(N / C))
+
+
+def partition_stored(data: jax.Array, spec: GridSpec) -> jax.Array:
+    """(K, N[, 2]) -> (nv, nh, R, C[, 2]) with zero padding.
+
+    The optional trailing dim carries ACAM [lo, hi] ranges."""
+    K, N = data.shape[:2]
+    assert (K, N) == (spec.K, spec.N), (data.shape, spec)
+    extra = data.shape[2:]
+    pad = ((0, spec.padded_K - K), (0, spec.padded_N - N)) +         ((0, 0),) * len(extra)
+    x = jnp.pad(data, pad)
+    x = x.reshape(spec.nv, spec.R, spec.nh, spec.C, *extra)
+    perm = (0, 2, 1, 3) + tuple(range(4, 4 + len(extra)))
+    return x.transpose(*perm)  # (nv, nh, R, C[, 2])
+
+
+def partition_query(q: jax.Array, spec: GridSpec) -> jax.Array:
+    """(..., N) -> (..., nh, C) query segments."""
+    pad = [(0, 0)] * (q.ndim - 1) + [(0, spec.padded_N - spec.N)]
+    x = jnp.pad(q, pad)
+    return x.reshape(*q.shape[:-1], spec.nh, spec.C)
+
+
+def col_valid_mask(spec: GridSpec) -> jax.Array:
+    """(nh, C) 1.0 where the column holds real data, 0.0 where padding."""
+    idx = jnp.arange(spec.padded_N).reshape(spec.nh, spec.C)
+    return (idx < spec.N).astype(jnp.float32)
+
+
+def row_valid_mask(spec: GridSpec) -> jax.Array:
+    """(nv, R) 1.0 where the row holds a real entry."""
+    idx = jnp.arange(spec.padded_K).reshape(spec.nv, spec.R)
+    return (idx < spec.K).astype(jnp.float32)
+
+
+def global_row_index(spec: GridSpec) -> jax.Array:
+    """(nv, R) global entry index of each subarray row."""
+    return jnp.arange(spec.padded_K).reshape(spec.nv, spec.R)

@@ -1,0 +1,162 @@
+"""Merging submodule (paper §III-B/III-C, Fig. 3): the partition-and-merge
+problem.
+
+Horizontal merge (N > C): combine results across the ``nh`` axis — each
+subarray only saw a segment of the query vector.
+    exact  -> AND of per-segment exact matches (exact, lossless)
+    best   -> voting: each subarray votes for its best rows; the row with the
+              most votes is the approximate global best (Kazemi et al. [7])
+    adder  -> (beyond-paper extension) sum per-segment distances: lossless
+              best/threshold merge at the cost of an adder tree per row
+threshold -> no existing efficient scheme (paper Fig. 3b); only 'adder'.
+
+Vertical merge (K > R): combine results across the ``nv`` axis — different
+subarrays hold different entries.
+    exact/threshold -> gather: concatenate match lines (lossless)
+    best            -> comparator tree over subarray winners
+
+Inputs use the shapes produced by ``subarray.subarray_query``:
+    dist  (..., nv, nh, R)
+    match (..., nv, nh, R)
+Outputs are global, fixed-shape results over padded_K = nv*R rows.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Horizontal merge: (..., nv, nh, R) -> per-row scores (..., nv, R)
+# --------------------------------------------------------------------------
+def h_merge_and(match: jax.Array) -> jax.Array:
+    """Exact-match AND across segments: 1.0 iff every segment matched."""
+    return jnp.prod(match, axis=-2)
+
+
+def h_merge_voting(match: jax.Array) -> jax.Array:
+    """Voting: count segments in which this row was sensed as a match.
+    Higher vote count == better approximate match."""
+    return jnp.sum(match, axis=-2)
+
+
+def h_merge_adder(dist: jax.Array) -> jax.Array:
+    """Adder: exact full-vector distance = sum of segment distances.
+    (Lossless for L1/L2^2/Hamming, all of which are coordinate-separable.)"""
+    return jnp.sum(dist, axis=-2)
+
+
+# --------------------------------------------------------------------------
+# Vertical merge: per-row scores (..., nv, R) -> global results (..., nv*R)
+# --------------------------------------------------------------------------
+def v_merge_gather(row_scores: jax.Array) -> jax.Array:
+    """Gather: flatten the (nv, R) grid into global match lines."""
+    return row_scores.reshape(*row_scores.shape[:-2], -1)
+
+
+def v_merge_comparator_topk(values: jax.Array, k: int, largest: bool
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Comparator tree: global top-k over all nv*R rows.
+
+    values: (..., nv, R) per-row scores (votes if ``largest`` else distances).
+    Returns (topk_values, topk_global_indices).
+    """
+    flat = values.reshape(*values.shape[:-2], -1)
+    sign = 1.0 if largest else -1.0
+    v, idx = jax.lax.top_k(sign * flat, k)
+    return sign * v, idx
+
+
+# --------------------------------------------------------------------------
+# Full merge dispatch
+# --------------------------------------------------------------------------
+def merge(dist: jax.Array, match: jax.Array, *, match_type: str,
+          h_merge: str, v_merge: str, match_param: int,
+          sensing_limit: float = 0.0, threshold: float = 0.0
+          ) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-subarray results into application-level search results.
+
+    Returns ``(indices, mask)``:
+      * ``indices`` (..., match_param): top-k matched entry indices for best
+        match (or first-k matches for exact/threshold), padded with -1.
+      * ``mask``    (..., padded_K): 1.0 for every matched entry
+        (exact/threshold) or for the top-k set (best).
+    """
+    nh = dist.shape[-2]
+    k = max(1, match_param)
+
+    if match_type in ("exact", "threshold"):
+        if h_merge == "and":
+            if match_type == "threshold" and nh > 1:
+                # Paper Fig. 3b: no existing efficient horizontal merge for
+                # threshold match.  Use 'adder' (our beyond-paper extension).
+                raise ValueError(
+                    "threshold match with horizontal partitioning (nh>1) has "
+                    "no AND/voting merge (paper Fig. 3b); use h_merge='adder'")
+            row = h_merge_and(match)                       # (..., nv, R)
+        elif h_merge == "adder":
+            total = h_merge_adder(dist)                    # exact distance
+            total = jnp.where(jnp.isfinite(total), total, 3.4e38)
+            thr = sensing_limit if match_type == "exact" else (
+                threshold + sensing_limit)
+            row = (total <= thr).astype(jnp.float32)
+        elif h_merge == "voting":
+            raise ValueError(f"{match_type} match has no voting h-merge "
+                             "(paper Fig. 3b)")
+        else:
+            raise ValueError(f"unknown h_merge {h_merge!r}")
+        if v_merge != "gather":
+            raise ValueError(f"{match_type} match uses gather v-merge")
+        mask = v_merge_gather(row)                          # (..., K)
+        # first-k matched indices (fixed shape), -1 padded
+        score = mask * 2.0 - jnp.arange(mask.shape[-1]) / mask.shape[-1]
+        _, idx = jax.lax.top_k(score, k)
+        got = jnp.take_along_axis(mask, idx, axis=-1) > 0
+        idx = jnp.where(got, idx, -1)
+        return idx, mask
+
+    if match_type == "best":
+        if v_merge != "comparator":
+            raise ValueError("best match requires comparator v-merge")
+        if h_merge == "voting":
+            votes = h_merge_voting(match)                   # (..., nv, R)
+            # lexicographic (votes desc, distance asc): normalize the
+            # distance into [0, 1) so it can never flip a vote difference
+            # (votes are small ints — exactly representable in f32).
+            total = h_merge_adder(dist)
+            finite = jnp.isfinite(total)
+            dmax = jnp.max(jnp.where(finite, total, 0.0)) + 1.0
+            norm = jnp.clip(jnp.where(finite, total, dmax) / dmax,
+                            0.0, 0.999)
+            score = votes - norm
+            sv, idx = v_merge_comparator_topk(score, k, largest=True)
+            valid = sv > 0
+        elif h_merge == "adder":
+            total = h_merge_adder(dist)
+            dv, idx = v_merge_comparator_topk(total, k, largest=False)
+            valid = jnp.isfinite(dv)
+        elif h_merge == "and" and nh == 1:
+            # no horizontal partitioning: distances are already global
+            total = dist[..., 0, :]                         # (..., nv, R)
+            dv, idx = v_merge_comparator_topk(total, k, largest=False)
+            valid = jnp.isfinite(dv)
+        else:
+            raise ValueError(f"best match h_merge {h_merge!r} unsupported")
+        idx = jnp.where(valid, idx, -1)
+        K = dist.shape[-3] * dist.shape[-1]
+        mask = jnp.zeros((*idx.shape[:-1], K))
+        mask = put_topk_mask(mask, idx)
+        return idx, mask
+
+    raise ValueError(f"unknown match_type {match_type!r}")
+
+
+def put_topk_mask(mask: jax.Array, idx: jax.Array) -> jax.Array:
+    """Scatter 1.0 at top-k indices (ignoring -1 padding)."""
+    safe = jnp.maximum(idx, 0)
+    upd = (idx >= 0).astype(mask.dtype)
+    # one-hot scatter-add, batched over leading dims
+    oh = jax.nn.one_hot(safe, mask.shape[-1], dtype=mask.dtype) * upd[..., None]
+    return jnp.clip(mask + oh.sum(axis=-2), 0.0, 1.0)

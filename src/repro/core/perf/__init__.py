@@ -1,0 +1,10 @@
+from .devices import CellModel, get_cell_model, register_cell_model
+from .estimator import (ArchSpecifics, PerfResult, estimate_arch,
+                        predict_search, predict_write)
+from .peripherals import PeripheralBill, estimate_merge_peripherals
+
+__all__ = [
+    "CellModel", "get_cell_model", "register_cell_model",
+    "ArchSpecifics", "PerfResult", "estimate_arch", "predict_search",
+    "predict_write", "PeripheralBill", "estimate_merge_peripherals",
+]

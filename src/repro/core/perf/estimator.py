@@ -1,0 +1,174 @@
+"""Performance evaluator (paper Fig. 1c).
+
+Two stages:
+  1. *Architecture specifics estimation* — from the stored-data size and the
+     arch config, determine the number of compute blocks at each hierarchy
+     level (bank-mat-array-subarray) and run the peripheral estimator per
+     level for the configured merge scheme.
+  2. *Performance prediction* — hierarchical rollup bank→mat→array→subarray
+     of CAM (device LUT), peripheral (ALADDIN-like), and interconnect
+     (NVSim-like RC) latency / energy / area for search and write.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from ..config import CAMConfig
+from ..mapping import GridSpec, grid_spec
+from . import interconnect
+from .devices import get_cell_model
+from .peripherals import PeripheralBill, estimate_merge_peripherals
+
+
+@dataclass
+class LevelSpec:
+    name: str                 # 'array' | 'mat' | 'bank' | 'top'
+    n_children: int           # blocks merged at this level
+    merging_horizontal: bool  # does this level merge across query segments?
+    bill: PeripheralBill = field(default_factory=PeripheralBill)
+
+
+@dataclass
+class ArchSpecifics:
+    """Output of stage 1: block counts + peripheral bills per level."""
+    spec: GridSpec
+    n_subarrays: int
+    n_arrays: int
+    n_mats: int
+    n_banks: int
+    levels: List[LevelSpec] = field(default_factory=list)
+
+    def describe(self) -> str:
+        s = (f"grid {self.spec.nv}x{self.spec.nh} "
+             f"({self.n_subarrays} subarrays of "
+             f"{self.spec.R}x{self.spec.C}) -> {self.n_arrays} arrays, "
+             f"{self.n_mats} mats, {self.n_banks} banks")
+        return s
+
+
+@dataclass
+class PerfResult:
+    """Output of stage 2 (per search or write operation)."""
+    latency_ns: float
+    energy_pj: float
+    area_um2: float
+    breakdown: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    @property
+    def edp(self) -> float:
+        """Energy-delay product in pJ*ns (1e-21 J*s = zJ*s)."""
+        return self.latency_ns * self.energy_pj
+
+    @property
+    def edp_aj_s(self) -> float:
+        """EDP in aJ*s (units used by paper Fig. 4)."""
+        return self.edp * 1e-3 * 1e-9  # pJ->aJ is *1e6; ns->s is *1e-9
+        # (kept explicit: pJ*ns = 1e-12 J * 1e-9 s = 1e-21 J*s = 1e-3 aJ*s)
+
+
+def estimate_arch(config: CAMConfig, K: int, N: int) -> ArchSpecifics:
+    """Stage 1: architecture specifics estimation.
+
+    CAMASim assumes all stored data fits in the CAM (paper §III-D) and
+    derives block counts at the array/mat/bank layers from arch config and
+    the stored-data size.
+    """
+    cfg = config
+    spec = grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols)
+    n_sub = spec.n_subarrays
+    spa = cfg.arch.subarrays_per_array
+    apm = cfg.arch.arrays_per_mat
+    mpb = cfg.arch.mats_per_bank
+    n_arrays = math.ceil(n_sub / spa)
+    n_mats = math.ceil(n_arrays / apm)
+    n_banks = math.ceil(n_mats / mpb)
+
+    # Which levels merge horizontally vs vertically: the mapper lays the
+    # (nv, nh) grid row-major onto subarray slots, so the lowest levels that
+    # span multiple horizontal segments merge horizontally first (paper
+    # Fig. 2 shows the voting peripherals at the array level).
+    a = ArchSpecifics(spec=spec, n_subarrays=n_sub, n_arrays=n_arrays,
+                      n_mats=n_mats, n_banks=n_banks)
+    remaining_h = spec.nh
+    for name, n_children in (("array", min(spa, n_sub)),
+                             ("mat", min(apm, max(1, n_arrays))),
+                             ("bank", min(mpb, max(1, n_mats))),
+                             ("top", max(1, n_banks))):
+        merging_h = remaining_h > 1
+        consumed = min(remaining_h, max(1, n_children))
+        if merging_h:
+            remaining_h = math.ceil(remaining_h / consumed)
+        bill = estimate_merge_peripherals(
+            n_children, cfg.circuit.rows,
+            match_type=cfg.app.match_type,
+            h_merge=cfg.arch.h_merge, v_merge=cfg.arch.v_merge,
+            merging_horizontal=merging_h)
+        a.levels.append(LevelSpec(name, n_children, merging_h, bill))
+    return a
+
+
+def predict_search(config: CAMConfig, arch: ArchSpecifics,
+                   ops_per_query: int = 1) -> PerfResult:
+    """Stage 2: hierarchical performance prediction for one query.
+
+    ``ops_per_query`` models applications whose logical operation issues
+    multiple sequential CAM search cycles (e.g. the DRL sampling routine
+    [4] — see benchmarks/table4_validation.py).
+    """
+    cfg = config
+    cell = get_cell_model(cfg.device.device, cfg.circuit.cell_type,
+                          cfg.app.data_bits)
+    R, C = cfg.circuit.rows, cfg.circuit.cols
+    breakdown: Dict[str, Dict[str, float]] = {}
+
+    # --- subarray level: all subarrays search in parallel ------------------
+    t = cell.search_latency(R, C)
+    e = cell.search_energy_pj(R, C) * arch.n_subarrays
+    a_sub = cell.area_um2(R, C)
+    area = a_sub * arch.n_subarrays
+    breakdown["subarray"] = {"latency_ns": t, "energy_pj": e,
+                             "area_um2": area}
+
+    # --- merge hierarchy: array -> mat -> bank -> top ----------------------
+    child_area = a_sub
+    n_blocks_at = {"array": arch.n_arrays, "mat": arch.n_mats,
+                   "bank": arch.n_banks, "top": 1}
+    for lvl in arch.levels:
+        n_here = n_blocks_at[lvl.name]
+        t_p = lvl.bill.latency()
+        e_p = lvl.bill.energy() * n_here
+        a_p = lvl.bill.area() * n_here
+        ic = interconnect.level_interconnect(
+            lvl.n_children, child_area,
+            bits_down=C * max(1, cfg.app.data_bits),
+            bits_up=2 * math.ceil(math.log2(max(2, arch.spec.padded_K))))
+        t += t_p + ic["latency_ns"]
+        e += e_p + ic["energy_pj"] * n_here
+        area += a_p + ic["area_um2"] * n_here
+        breakdown[lvl.name] = {
+            "latency_ns": t_p + ic["latency_ns"],
+            "energy_pj": e_p + ic["energy_pj"] * n_here,
+            "area_um2": a_p + ic["area_um2"] * n_here}
+        child_area = child_area * lvl.n_children + a_p / max(1, n_here)
+
+    return PerfResult(latency_ns=t * ops_per_query,
+                      energy_pj=e * ops_per_query,
+                      area_um2=area, breakdown=breakdown)
+
+
+def predict_write(config: CAMConfig, arch: ArchSpecifics) -> PerfResult:
+    """Write-path prediction: program all rows (row-parallel across
+    subarrays, row-serial within a subarray)."""
+    cfg = config
+    cell = get_cell_model(cfg.device.device, cfg.circuit.cell_type,
+                          cfg.app.data_bits)
+    R, C = cfg.circuit.rows, cfg.circuit.cols
+    rows_eff = min(R, arch.spec.K)  # rows written per subarray (serial)
+    t = cell.write_latency(rows_eff)
+    e = cell.write_energy_pj(R, C) * arch.n_subarrays
+    a = cell.area_um2(R, C) * arch.n_subarrays
+    return PerfResult(latency_ns=t, energy_pj=e, area_um2=a,
+                      breakdown={"write": {"latency_ns": t, "energy_pj": e,
+                                           "area_um2": a}})

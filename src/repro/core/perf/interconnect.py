@@ -1,0 +1,49 @@
+"""Interconnect estimation (NVSim-like RC H-tree, paper §III-D).
+
+Each hierarchy level routes query data down to its children and match
+results back up through an H-tree.  We estimate wire length from the
+children's footprint (sqrt of aggregate area) and apply distributed-RC
+delay + switching energy per the NVSim methodology, with 22nm wire
+constants.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# 22nm global-layer wire constants
+R_WIRE = 3.0       # ohm/um
+C_WIRE = 0.20e-3   # pF/um  (0.2 fF/um)
+E_WIRE = 0.02e-3   # pJ/um per bit toggled (CV^2 at ~0.8V, activity 0.5)
+T_REPEATER = 2.0e-4  # ns/um repeated-wire delay (~200 ps/mm at 22nm)
+
+
+@dataclass(frozen=True)
+class WireStats:
+    length_um: float
+    latency_ns: float
+    energy_pj_per_bit: float
+
+
+def htree_level(children: int, child_area_um2: float) -> WireStats:
+    """One H-tree level spanning ``children`` blocks of given area."""
+    if children <= 1 or child_area_um2 <= 0:
+        return WireStats(0.0, 0.0, 0.0)
+    side = math.sqrt(children * child_area_um2)
+    length = side  # root-to-leaf H-tree ~ half-perimeter ~ side
+    # repeated wire: delay linear in length (RC quadratic term buffered out)
+    latency = T_REPEATER * length
+    energy = E_WIRE * length
+    return WireStats(length, latency, energy)
+
+
+def level_interconnect(children: int, child_area_um2: float,
+                       bits_down: int, bits_up: int) -> dict:
+    """Latency/energy/area for one level's query-broadcast + result-gather."""
+    w = htree_level(children, child_area_um2)
+    return {
+        "latency_ns": 2 * w.latency_ns,                       # down + up
+        "energy_pj": w.energy_pj_per_bit * (bits_down + bits_up),
+        "area_um2": 0.15 * w.length_um * max(bits_down, bits_up) ** 0.5,
+        "length_um": w.length_um,
+    }

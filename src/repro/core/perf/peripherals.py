@@ -1,0 +1,111 @@
+"""Peripheral circuit catalog (ALADDIN-like pre-RTL models, paper §III-D).
+
+Commonly-used peripherals for merge schemes: comparators, adders, registers,
+voting counters, and result buffers.  Latency in ns, energy in pJ, area um^2
+— 22nm, consistent with the device LUT calibration.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PeripheralModel:
+    t_op: float      # ns per stage/operation
+    e_op: float      # pJ per operation
+    area: float      # um^2 per instance
+
+
+# 22nm pre-RTL estimates (ALADDIN-style)
+COMPARATOR = PeripheralModel(t_op=0.30, e_op=0.020, area=18.0)   # b-bit cmp
+ADDER = PeripheralModel(t_op=0.35, e_op=0.030, area=24.0)
+REGISTER = PeripheralModel(t_op=0.05, e_op=0.005, area=6.0)
+VOTE_COUNTER = PeripheralModel(t_op=0.25, e_op=0.012, area=14.0)
+ENCODER = PeripheralModel(t_op=0.20, e_op=0.010, area=10.0)      # prio encoder
+BUFFER_BYTE = PeripheralModel(t_op=0.10, e_op=0.002, area=0.9)   # per byte
+
+
+def tree_depth(n: int) -> int:
+    return max(0, math.ceil(math.log2(max(1, n))))
+
+
+@dataclass
+class PeripheralBill:
+    """Peripheral requirements estimated for one hierarchy level."""
+    comparators: int = 0
+    adders: int = 0
+    registers: int = 0
+    vote_counters: int = 0
+    encoders: int = 0
+    buffer_bytes: int = 0
+    tree_levels: int = 0       # critical-path depth through this level
+
+    def latency(self) -> float:
+        t = self.tree_levels * max(
+            COMPARATOR.t_op if self.comparators else 0.0,
+            ADDER.t_op if self.adders else 0.0,
+            VOTE_COUNTER.t_op if self.vote_counters else 0.0)
+        if self.encoders:
+            t += ENCODER.t_op
+        if self.registers:
+            t += REGISTER.t_op
+        return t
+
+    def energy(self) -> float:
+        return (self.comparators * COMPARATOR.e_op +
+                self.adders * ADDER.e_op +
+                self.registers * REGISTER.e_op +
+                self.vote_counters * VOTE_COUNTER.e_op +
+                self.encoders * ENCODER.e_op +
+                self.buffer_bytes * BUFFER_BYTE.e_op)
+
+    def area(self) -> float:
+        return (self.comparators * COMPARATOR.area +
+                self.adders * ADDER.area +
+                self.registers * REGISTER.area +
+                self.vote_counters * VOTE_COUNTER.area +
+                self.encoders * ENCODER.area +
+                self.buffer_bytes * BUFFER_BYTE.area)
+
+
+def estimate_merge_peripherals(n_blocks: int, rows: int, *, match_type: str,
+                               h_merge: str, v_merge: str,
+                               merging_horizontal: bool) -> PeripheralBill:
+    """Peripheral estimator (paper Fig. 1c / Fig. 2).
+
+    Given ``n_blocks`` lower-level blocks merged at this level, estimate the
+    peripheral circuits required by the configured merge scheme.  E.g. for
+    the voting scheme, one vote counter per row plus a comparator tree to
+    pick the max-vote row; for exact match, an AND/gather needs only
+    registers and a priority encoder.
+    """
+    bill = PeripheralBill()
+    depth = tree_depth(n_blocks)
+    if n_blocks <= 1:
+        return bill
+    if merging_horizontal:
+        if h_merge == "voting":
+            bill.vote_counters = rows
+            bill.comparators = rows - 1          # max-vote comparator tree
+            bill.tree_levels = depth
+            bill.buffer_bytes = rows             # vote buffers
+        elif h_merge == "adder":
+            bill.adders = rows * (n_blocks - 1)  # per-row adder tree
+            bill.tree_levels = depth
+            bill.buffer_bytes = 4 * rows
+        else:  # 'and' — wired-AND across segment match lines
+            bill.registers = rows
+            bill.tree_levels = 1
+    else:
+        if match_type == "best" and v_merge == "comparator":
+            bill.comparators = n_blocks - 1      # winner comparator tree
+            bill.registers = n_blocks            # winner (idx, val) latches
+            bill.tree_levels = depth
+            bill.buffer_bytes = 8 * n_blocks
+        else:  # gather
+            bill.registers = n_blocks
+            bill.encoders = 1
+            bill.tree_levels = 1
+            bill.buffer_bytes = max(1, rows * n_blocks // 8)
+    return bill

@@ -1,0 +1,81 @@
+"""Quantization submodule (paper §III-C).
+
+Transforms application-level data into the representations storable by the
+underlying CAM cells: binary for BCAM/TCAM, 2/3-bit (or n-bit) integer codes
+for MCAM, analog ranges for ACAM.  The paper uses linear quantization; other
+techniques can be plugged in via ``QUANTIZERS``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_quantize(x: jax.Array, bits: int,
+                    lo: float | jax.Array | None = None,
+                    hi: float | jax.Array | None = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Linear quantization to ``bits``-bit integer codes.
+
+    Returns ``(codes, lo, hi)`` where codes are float-typed integers in
+    ``[0, 2**bits - 1]`` (kept float so variation noise can be added in the
+    code domain, as the paper does for conductance-domain noise).
+
+    ``bits == 0`` means full precision (identity, used for ACAM / fp cells).
+    """
+    if bits == 0:
+        z = jnp.zeros((), x.dtype)
+        return x, z, z + 1.0
+    if lo is None:
+        lo = jnp.min(x)
+    if hi is None:
+        hi = jnp.max(x)
+    lo = jnp.asarray(lo, x.dtype)
+    hi = jnp.asarray(hi, x.dtype)
+    levels = (1 << bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / levels, jnp.ones((), x.dtype))
+    q = jnp.round((x - lo) / scale)
+    q = jnp.clip(q, 0, levels)
+    return q.astype(jnp.float32), lo, hi
+
+
+def dequantize(codes: jax.Array, bits: int, lo: jax.Array,
+               hi: jax.Array) -> jax.Array:
+    if bits == 0:
+        return codes
+    levels = (1 << bits) - 1
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    return codes * scale + lo
+
+
+def binarize(x: jax.Array, threshold: float | None = None) -> jax.Array:
+    """1-bit quantization for BCAM/TCAM (sign/threshold binarization)."""
+    thr = jnp.mean(x) if threshold is None else threshold
+    return (x > thr).astype(jnp.float32)
+
+
+def acam_ranges(x: jax.Array, margin: float = 0.0
+                ) -> Tuple[jax.Array, jax.Array]:
+    """ACAM cells store analog [lo, hi] ranges; a point value maps to a
+    degenerate range widened by ``margin``."""
+    return x - margin, x + margin
+
+
+def quantize_for_cell(x: jax.Array, cell_type: str, bits: int,
+                      lo=None, hi=None):
+    """Dispatch on CAM cell type (paper: BCAM/TCAM 1b, MCAM nb, ACAM analog)."""
+    if cell_type in ("bcam", "tcam"):
+        return binarize(x), jnp.zeros(()), jnp.ones(())
+    if cell_type == "mcam":
+        return linear_quantize(x, bits, lo, hi)
+    if cell_type == "acam":
+        return linear_quantize(x, 0, lo, hi)  # identity
+    raise ValueError(f"unknown cell type {cell_type!r}")
+
+
+QUANTIZERS = {
+    "linear": linear_quantize,
+    "binary": binarize,
+}

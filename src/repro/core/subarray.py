@@ -1,0 +1,100 @@
+"""Subarray query simulation (paper §III-C).
+
+Simulates the in-array search: every subarray computes, in parallel, the
+distance between its stored rows and the corresponding query segment, and the
+sensing circuit converts the analog signal into digital match outputs.
+
+Sensing limit (SL): the smallest voltage/current difference the sense
+amplifier can detect.  Entries whose signal is within SL of the detected
+signal are indistinguishable and are all reported as matches — e.g. for best
+match, the 2nd-closest entry within SL of the closest is also flagged.
+
+Shapes:
+    stored : (nv, nh, R, C)  code-domain subarray grid
+    query  : (..., nh, C)    query segments
+    out    : dist  (..., nv, nh, R)   per-subarray distances
+             match (..., nv, nh, R)   sensing-circuit digital outputs
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .distance import get_distance
+
+
+def subarray_distances(stored: jax.Array, query: jax.Array,
+                       distance: str,
+                       col_valid: jax.Array | None = None,
+                       use_kernel: bool = False) -> jax.Array:
+    """Per-subarray distances.
+
+    ``col_valid``: (nh, C) mask of real (non-padded) columns.
+    ``use_kernel``: route through the Pallas cam_search kernel (TPU path).
+    """
+    if stored.ndim == 5:                            # ACAM [lo, hi] ranges
+        from .distance import range_violations
+        q = query[..., None, :, :]
+        valid = None if col_valid is None else col_valid[..., None, :]
+        return range_violations(stored, q, valid)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.cam_search(stored, query, distance=distance,
+                               col_valid=col_valid)
+    fn = get_distance(distance)
+    # broadcast query (..., nh, C) against stored (nv, nh, R, C):
+    # -> (..., nv, nh, R)
+    q = query[..., None, :, :]                      # (..., 1, nh, C)
+    valid = None if col_valid is None else col_valid[..., None, :]
+    return fn(stored, q, valid)
+
+
+def sense(dist: jax.Array, sensing: str, sensing_limit: float,
+          threshold: float = 0.0,
+          row_valid: jax.Array | None = None) -> jax.Array:
+    """Sense-amplifier model: distances -> digital match lines.
+
+    exact     : match iff dist <= SL              (ideal SA: dist == 0)
+    best      : match iff dist <= min(dist) + SL  (winner-take-all SA)
+    threshold : match iff dist <= threshold + SL
+    ``row_valid``: (nv, R) mask, padding rows never match.
+    """
+    if sensing == "exact":
+        m = dist <= sensing_limit
+    elif sensing == "best":
+        # min over rows of this subarray (last axis)
+        big = jnp.where(_rv(dist, row_valid) > 0, dist, jnp.inf)
+        m = dist <= (jnp.min(big, axis=-1, keepdims=True) + sensing_limit)
+    elif sensing == "threshold":
+        m = dist <= (threshold + sensing_limit)
+    else:
+        raise ValueError(f"unknown sensing {sensing!r}")
+    m = m.astype(jnp.float32)
+    if row_valid is not None:
+        m = m * _rv(m, row_valid)
+    return m
+
+
+def _rv(x: jax.Array, row_valid: jax.Array | None) -> jax.Array:
+    """Broadcast (nv, R) row mask against (..., nv, nh, R)."""
+    if row_valid is None:
+        return jnp.ones_like(x)
+    return jnp.broadcast_to(row_valid[:, None, :], x.shape[-3:]).astype(x.dtype)
+
+
+def subarray_query(stored: jax.Array, query: jax.Array, *, distance: str,
+                   sensing: str, sensing_limit: float, threshold: float = 0.0,
+                   col_valid: jax.Array | None = None,
+                   row_valid: jax.Array | None = None,
+                   use_kernel: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Full subarray search: distances + sensed matches."""
+    dist = subarray_distances(stored, query, distance, col_valid, use_kernel)
+    if row_valid is not None:
+        # padding rows get +inf distance so they never win a best-match
+        rv = jnp.broadcast_to(row_valid[:, None, :], dist.shape[-3:])
+        dist = jnp.where(rv > 0, dist, jnp.inf)
+    match = sense(dist, sensing, sensing_limit, threshold, row_valid)
+    return dist, match

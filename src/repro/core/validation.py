@@ -1,0 +1,81 @@
+"""Paper Table IV validation setups (DRL / MANN / HDC).
+
+Each entry reproduces the application/architecture/circuit/device setup the
+paper adopted from the respective publication, plus the published (pub.)
+and CAMASim-reported (sim.) reference numbers we validate against.
+
+DRL's logical operation is a CAM-based stochastic sampling routine that
+issues ~142 sequential search cycles at the 150 MHz system clock (the paper
+notes the "randomness inherent in the implemented sampling operation");
+MANN/HDC are single-search queries.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                     DeviceConfig)
+
+
+@dataclass(frozen=True)
+class ValidationTarget:
+    name: str
+    config: CAMConfig
+    K: int                      # stored entries
+    N: int                      # dims
+    n_subarrays: int            # paper Table IV column
+    ops_per_query: int = 1
+    clock_hz: Optional[float] = None
+    pub_latency_ns: float = 0.0
+    sim_latency_ns: float = 0.0   # CAMASim paper's own reported value
+    pub_energy_pj: float = 0.0
+    sim_energy_pj: float = 0.0
+
+
+MANN = ValidationTarget(
+    name="MANN [8]",
+    config=CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=1,
+                      data_bits=3),
+        arch=ArchConfig(subarrays_per_array=4, arrays_per_mat=4,
+                        mats_per_bank=4, h_merge="voting",
+                        v_merge="comparator"),
+        circuit=CircuitConfig(rows=32, cols=64, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet")),
+    K=32, N=512, n_subarrays=8,
+    pub_latency_ns=6.5, sim_latency_ns=6.4,
+    pub_energy_pj=16.6, sim_energy_pj=17.7)
+
+HDC = ValidationTarget(
+    name="HDC [7]",
+    config=CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=1,
+                      data_bits=2),
+        arch=ArchConfig(subarrays_per_array=4, arrays_per_mat=4,
+                        mats_per_bank=4, h_merge="voting",
+                        v_merge="comparator"),
+        circuit=CircuitConfig(rows=32, cols=128, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet")),
+    K=26, N=2048, n_subarrays=16,
+    pub_latency_ns=12.2, sim_latency_ns=12.8,
+    pub_energy_pj=269.0, sim_energy_pj=252.0)
+
+DRL = ValidationTarget(
+    name="DRL [4]",
+    config=CAMConfig(
+        app=AppConfig(distance="hamming", match_type="exact",
+                      match_param=1, data_bits=1),
+        arch=ArchConfig(subarrays_per_array=4, arrays_per_mat=4,
+                        mats_per_bank=4, h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=64, cols=64, cell_type="tcam",
+                              sensing="exact"),
+        device=DeviceConfig(device="cmos")),
+    K=4096, N=64, n_subarrays=64,
+    ops_per_query=142, clock_hz=150e6,
+    pub_latency_ns=1000.0, sim_latency_ns=950.0,
+    pub_energy_pj=None or 46.0e6, sim_energy_pj=46.0e6)
+
+TARGETS = (DRL, MANN, HDC)

@@ -1,0 +1,55 @@
+"""Variation modelling submodule (paper §III-C, dev. config.).
+
+Two variation types:
+  * D2D (device-to-device): a one-time perturbation applied when data is
+    written into the CAM (each physical cell deviates from its programmed
+    level).  Applied once to the stored codes.
+  * C2C (cycle-to-cycle): a per-query perturbation (each search cycle sees a
+    slightly different effective level).  Applied dynamically per query.
+
+Two specifications:
+  * 'stat'  — Gaussian with configurable STD (in code-domain LSBs).
+  * 'exper' — empirical per-level STD table measured from fabricated chips
+    (level-dependent noise, e.g. higher conductance levels are noisier).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import DeviceConfig
+
+
+def _sigma_for(codes: jax.Array, cfg: DeviceConfig, bits: int) -> jax.Array:
+    """Per-cell noise STD, from either a scalar or a per-level table."""
+    if cfg.variation_spec == "stat" or cfg.exper_table is None:
+        return jnp.full_like(codes, cfg.variation_std)
+    table = jnp.asarray(cfg.exper_table, jnp.float32)
+    levels = table.shape[0]
+    idx = jnp.clip(codes.astype(jnp.int32), 0, levels - 1)
+    return table[idx]
+
+
+def apply_d2d(codes: jax.Array, cfg: DeviceConfig, bits: int,
+              key: jax.Array) -> jax.Array:
+    """Write-time (one-shot) variation on stored codes."""
+    if cfg.variation not in ("d2d", "both"):
+        return codes
+    sigma = _sigma_for(codes, cfg, bits)
+    return codes + sigma * jax.random.normal(key, codes.shape, codes.dtype)
+
+
+def apply_c2c(codes: jax.Array, cfg: DeviceConfig, bits: int,
+              key: jax.Array) -> jax.Array:
+    """Per-query (dynamic) variation; fresh noise every search cycle."""
+    if cfg.variation not in ("c2c", "both"):
+        return codes
+    sigma = _sigma_for(codes, cfg, bits)
+    return codes + sigma * jax.random.normal(key, codes.shape, codes.dtype)
+
+
+def split_for_queries(key: jax.Array, n_queries: int) -> jax.Array:
+    """One independent C2C key per query cycle."""
+    return jax.random.split(key, n_queries)

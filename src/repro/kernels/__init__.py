@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for CAMASim's compute hot-spots.
+
+  cam_search    — tiled subarray distance search (the CAM array analogue)
+  cam_topk      — streaming best-match top-k (winner-take-all SA analogue;
+                  hot loop of CAM-retrieval attention)
+  hamming_pack  — bit-packed XOR+popcount TCAM search
+
+Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
+(ref.py); tests sweep shapes/dtypes and assert_allclose against the oracle.
+Kernels execute via interpret=True off-TPU.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: tiled CAM subarray search.
+
+TPU adaptation of the CAM array (DESIGN.md §2): each grid step loads one
+(R, C) subarray tile from HBM into VMEM — the analogue of the data resident
+in a physical CAM array — broadcasts the query segment across the rows on
+the VPU, and reduces along the match-line (column) axis.  The grid iterates
+the (nv, nh) subarray mesh, exactly the partition produced by the mapping
+submodule.
+
+Block layout (per grid step (i, j)):
+    stored    (1, 1, R, C)  VMEM   <- HBM tile (i, j)
+    query     (1, C)        VMEM   <- segment j (revisited across i: stays hot)
+    col_valid (1, C)        VMEM
+    out       (1, 1, R)     VMEM   -> dist tile (i, j)
+
+For MXU alignment choose C as a multiple of 128 and R a multiple of 8 where
+possible; unaligned sizes still lower but waste lanes (the circuit-level
+analogue: a partially used subarray).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dist_block(stored, q, valid, distance: str):
+    if distance == "hamming":
+        d = (stored != q).astype(jnp.float32)
+    elif distance == "l1":
+        d = jnp.abs(stored - q)
+    elif distance == "l2":
+        d = jnp.square(stored - q)
+    elif distance == "dot":
+        d = -(stored * q)
+    else:
+        raise ValueError(distance)
+    return jnp.sum(d * valid, axis=-1)
+
+
+def _kernel(stored_ref, query_ref, valid_ref, out_ref, *, distance: str):
+    stored = stored_ref[0, 0]          # (R, C)
+    q = query_ref[0]                   # (C,)
+    valid = valid_ref[0]               # (C,)
+    out_ref[0, 0] = _dist_block(stored, q[None, :], valid[None, :], distance)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("distance", "interpret"))
+def cam_search_pallas(stored: jax.Array, query: jax.Array,
+                      col_valid: jax.Array, *, distance: str = "l2",
+                      interpret: bool = False) -> jax.Array:
+    """stored (nv, nh, R, C), query (nh, C), col_valid (nh, C)
+    -> dist (nv, nh, R)."""
+    nv, nh, R, C = stored.shape
+    assert query.shape == (nh, C), (query.shape, (nh, C))
+    grid = (nv, nh)
+    return pl.pallas_call(
+        functools.partial(_kernel, distance=distance),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, R, C), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, C), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, C), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((nv, nh, R), jnp.float32),
+        interpret=interpret,
+    )(stored.astype(jnp.float32), query.astype(jnp.float32),
+      col_valid.astype(jnp.float32))

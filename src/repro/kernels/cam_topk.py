@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: streaming best-match top-k (the CAM winner-take-all).
+
+This is the sense-amplifier analogue for best-match CAM (DESIGN.md §2) and
+the hot loop of CAM-retrieval attention: stream the stored keys through VMEM
+chunk by chunk, score each chunk against the query, and maintain a running
+top-k (score, index) set in VMEM scratch — never materializing the full
+(S,)-sized score vector in HBM.
+
+Grid: (S // chunk,) — sequential on TPU, so scratch carries across steps.
+Per step:
+    keys   (chunk, D)  VMEM  <- HBM chunk c
+    query  (1, D)      VMEM  (resident)
+    scratch top_vals (1, k) / top_idx (1, k)  VMEM
+On the last step the merged top-k is written out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _score_chunk(keys, q, distance: str):
+    if distance == "dot":
+        return keys @ q                         # (chunk,)
+    if distance == "l2":
+        return -jnp.sum(jnp.square(keys - q[None, :]), axis=-1)
+    if distance == "l1":
+        return -jnp.sum(jnp.abs(keys - q[None, :]), axis=-1)
+    raise ValueError(distance)
+
+
+def _kernel(keys_ref, query_ref, out_vals_ref, out_idx_ref,
+            top_vals, top_idx, *, k: int, chunk: int, distance: str,
+            valid_len: int):
+    c = pl.program_id(0)
+    n_chunks = pl.num_programs(0)
+
+    @pl.when(c == 0)
+    def _init():
+        top_vals[0, :] = jnp.full((k,), -jnp.inf, jnp.float32)
+        top_idx[0, :] = jnp.full((k,), -1, jnp.int32)
+
+    keys = keys_ref[...]                        # (chunk, D)
+    q = query_ref[0]                            # (D,)
+    scores = _score_chunk(keys, q, distance)    # (chunk,)
+    idx = c * chunk + jax.lax.iota(jnp.int32, chunk)
+    # padding rows (idx >= valid_len) must never win the top-k
+    scores = jnp.where(idx < valid_len, scores, -jnp.inf)
+
+    # merge running top-k with this chunk then re-select top-k
+    all_vals = jnp.concatenate([top_vals[0, :], scores])
+    all_idx = jnp.concatenate([top_idx[0, :], idx])
+    new_vals, sel = jax.lax.top_k(all_vals, k)
+    top_vals[0, :] = new_vals
+    top_idx[0, :] = jnp.take(all_idx, sel)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit():
+        out_vals_ref[0, :] = top_vals[0, :]
+        out_idx_ref[0, :] = top_idx[0, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "chunk", "distance", "interpret",
+                                    "valid_len"))
+def cam_topk_pallas(keys: jax.Array, query: jax.Array, *, k: int,
+                    chunk: int = 512, distance: str = "dot",
+                    valid_len: int = -1, interpret: bool = False):
+    """keys (S, D), query (D,) -> (scores (k,), indices (k,)).
+
+    S must be a multiple of ``chunk``; rows at index >= valid_len are
+    excluded inside the kernel (-inf score) so zero-padding can never win.
+    Scores are -distance (larger = better), descending.
+    """
+    S, D = keys.shape
+    assert S % chunk == 0, f"S={S} not a multiple of chunk={chunk}"
+    n_chunks = S // chunk
+    assert k <= chunk, (k, chunk)
+    if valid_len < 0:
+        valid_len = S
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, k=k, chunk=chunk, distance=distance,
+                          valid_len=valid_len),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((chunk, D), lambda c: (c, 0)),
+            pl.BlockSpec((1, D), lambda c: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda c: (0, 0)),
+            pl.BlockSpec((1, k), lambda c: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            # VMEM scratch carrying the running top-k across grid steps
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys.astype(jnp.float32), query.astype(jnp.float32)[None, :])
+    return vals[0], idx[0]

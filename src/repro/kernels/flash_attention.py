@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused causal flash attention (forward).
+
+The §Perf roofline shows every train/prefill cell memory-bound on the
+pure-JAX attention's S^2 score-tile HBM spill (EXPERIMENTS.md §Roofline).
+This kernel keeps the running softmax state (m, l, acc) in VMEM scratch
+while streaming K/V tiles, so HBM traffic is O(q + k + v + out) + the K/V
+restreaming — no S^2 tensor ever leaves VMEM.
+
+Grid: (B, KVH, G, nq, nk) — nk innermost/sequential on TPU, so scratch
+carries across k tiles of one q tile.  Causal tiles entirely above the
+diagonal are skipped (@pl.when), recovering the ~2x the masked-naive path
+wastes.
+
+GQA layout: q (B, KVH, G, S, D); k/v (B, KVH, S, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            qt: int, kt: int, scale: float, causal: bool):
+    i = pl.program_id(3)                       # q tile
+    j = pl.program_id(4)                       # k tile
+    nk = pl.num_programs(4)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full((qt, 1), NEG_INF, jnp.float32)
+        l_sc[...] = jnp.zeros((qt, 1), jnp.float32)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = i * qt
+    k_start = j * kt
+    # causal skip: tile strictly above the diagonal contributes nothing
+    live = (not causal) or (k_start <= q_start + qt - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, 0]                     # (qt, D)
+        k = k_ref[0, 0]                        # (kt, D)
+        v = v_ref[0, 0]                        # (kt, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (qt, kt)
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (qt, kt), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (qt, kt), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_sc[...]                     # (qt, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                 # (qt, kt)
+        corr = jnp.exp(m_prev - m_new)         # (qt, 1)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (qt, D)
+        acc_sc[...] = acc_sc[...] * corr + pv
+        m_sc[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _emit():
+        out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "kv_tile", "causal",
+                                             "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           q_tile: int = 512, kv_tile: int = 512,
+                           causal: bool = True,
+                           interpret: bool = False) -> jax.Array:
+    """q (B,S,H,D), k/v (B,S,KVH,D) -> (B,S,H,D), fused causal attention."""
+    B, S, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    qt, kt = min(q_tile, S), min(kv_tile, S)
+    assert S % qt == 0 and S % kt == 0, (S, qt, kt)
+    nq, nk = S // qt, S // kt
+    scale = D ** -0.5
+
+    qr = q.reshape(B, S, KVH, G, D).transpose(0, 2, 3, 1, 4)
+    kr = k.transpose(0, 2, 1, 3)               # (B, KVH, S, D)
+    vr = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, qt=qt, kt=kt, scale=scale,
+                          causal=causal),
+        grid=(B, KVH, G, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, qt, D),
+                         lambda b, h, g, i, j: (b, h, g, i, 0)),
+            pl.BlockSpec((1, 1, kt, D),
+                         lambda b, h, g, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, kt, D),
+                         lambda b, h, g, i, j: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, qt, D),
+                               lambda b, h, g, i, j: (b, h, g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, nq * qt, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qt, 1), jnp.float32),
+            pltpu.VMEM((qt, 1), jnp.float32),
+            pltpu.VMEM((qt, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: bit-packed hamming CAM search.
+
+TPU adaptation of the TCAM match-line wired-XNOR (DESIGN.md §2): 32 ternary
+cells pack into one uint32 word; per-cell XNOR + wired-AND becomes
+XOR + population-count on the VPU.  A 64-column TCAM row collapses to two
+machine words, so a (R=64, C=64) subarray search is a (64, 2) uint32 tile —
+a ~32x density win over the unpacked float path and the reason this kernel
+exists.
+
+Don't-care (ternary) columns are handled by masking them to zero in *both*
+stored and query words at pack time (ops.pack_bits), so XOR yields 0 there.
+
+Grid: row tiles of size ``tile_r``.
+    stored (tile_r, W) uint32 VMEM
+    query  (1, W)      uint32 VMEM (resident across steps)
+    out    (tile_r,)   int32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(stored_ref, query_ref, out_ref):
+    s = stored_ref[...]                       # (tile_r, W) uint32
+    q = query_ref[0]                          # (W,)
+    x = jnp.bitwise_xor(s, q[None, :])
+    out_ref[...] = jnp.sum(jax.lax.population_count(x), axis=-1,
+                           dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
+def hamming_packed_pallas(stored_packed: jax.Array,
+                          query_packed: jax.Array, *, tile_r: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """stored_packed (R, W) uint32, query_packed (W,) -> dist (R,) int32."""
+    R, W = stored_packed.shape
+    tile_r = min(tile_r, R)
+    assert R % tile_r == 0, (R, tile_r)
+    return pl.pallas_call(
+        _kernel,
+        grid=(R // tile_r,),
+        in_specs=[
+            pl.BlockSpec((tile_r, W), lambda r: (r, 0)),
+            pl.BlockSpec((1, W), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_r,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((R,), jnp.int32),
+        interpret=interpret,
+    )(stored_packed, query_packed[None, :])

@@ -1,0 +1,112 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (this container is CPU-only; on
+a real TPU slice the same call sites compile the Mosaic kernels), pads
+inputs to kernel-friendly shapes, and exposes batched variants via vmap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cam_search import cam_search_pallas
+from .cam_topk import cam_topk_pallas
+from .hamming_pack import hamming_packed_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# cam_search: subarray-grid distances
+# --------------------------------------------------------------------------
+def cam_search(stored: jax.Array, query: jax.Array, *, distance: str = "l2",
+               col_valid: Optional[jax.Array] = None,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """stored (nv, nh, R, C); query (..., nh, C) -> dist (..., nv, nh, R)."""
+    nv, nh, R, C = stored.shape
+    if col_valid is None:
+        col_valid = jnp.ones((nh, C), jnp.float32)
+    itp = _interpret() if interpret is None else interpret
+    call = functools.partial(cam_search_pallas, distance=distance,
+                             interpret=itp)
+    if query.ndim == 2:
+        return call(stored, query, col_valid)
+    batch = query.reshape(-1, nh, C)
+    out = jax.vmap(lambda q: call(stored, q, col_valid))(batch)
+    return out.reshape(*query.shape[:-2], nv, nh, R)
+
+
+# --------------------------------------------------------------------------
+# cam_topk: streaming best-match top-k (CAM-retrieval attention hot loop)
+# --------------------------------------------------------------------------
+def cam_topk(keys: jax.Array, query: jax.Array, *, k: int, chunk: int = 512,
+             distance: str = "dot", valid_len: Optional[int] = None,
+             interpret: Optional[bool] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """keys (S, D) or (..., S, D); query (D,) or (..., D).
+
+    Returns (scores, indices) of shape (..., k); scores are -distance,
+    descending.  Rows at index >= valid_len are excluded.
+    """
+    itp = _interpret() if interpret is None else interpret
+    S, D = keys.shape[-2:]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    k = min(k, S)
+
+    limit = S if valid_len is None else valid_len
+
+    def one(kv: jax.Array, q: jax.Array):
+        x = kv
+        if pad:
+            x = jnp.pad(x, ((0, pad), (0, 0)))
+        vals, idx = cam_topk_pallas(x, q, k=k, chunk=chunk,
+                                    distance=distance, valid_len=limit,
+                                    interpret=itp)
+        bad = idx >= limit
+        vals = jnp.where(bad, -jnp.inf, vals)
+        idx = jnp.where(bad, -1, idx)
+        return vals, idx
+
+    if keys.ndim == 2:
+        return one(keys, query)
+    bk = keys.reshape(-1, S, D)
+    bq = query.reshape(-1, D)
+    vals, idx = jax.vmap(one)(bk, bq)
+    lead = keys.shape[:-2]
+    return vals.reshape(*lead, -1), idx.reshape(*lead, -1)
+
+
+# --------------------------------------------------------------------------
+# hamming_packed: bit-packed TCAM search
+# --------------------------------------------------------------------------
+def pack_bits(bits: jax.Array,
+              care: Optional[jax.Array] = None) -> jax.Array:
+    """Pack 0/1 (optionally ternary via ``care`` mask) into uint32 words.
+
+    Don't-care columns are zeroed in the packed word (mask both operands
+    with the same ``care`` mask so XOR contributes nothing there).
+    """
+    x = bits
+    if care is not None:
+        x = x * care
+    return ref.pack_bits_ref(x)
+
+
+def hamming_packed(stored_packed: jax.Array, query_packed: jax.Array, *,
+                   n_valid_bits: int, tile_r: int = 256,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """stored (R, W) uint32, query (W,) uint32 -> hamming distance (R,)."""
+    itp = _interpret() if interpret is None else interpret
+    R, W = stored_packed.shape
+    tr = tile_r
+    while R % tr and tr > 1:
+        tr //= 2
+    return hamming_packed_pallas(stored_packed, query_packed, tile_r=tr,
+                                 interpret=itp)

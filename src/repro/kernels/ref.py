@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cam_search_ref(stored: jax.Array, query: jax.Array, distance: str,
+                   col_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Reference subarray-grid distance computation.
+
+    stored: (nv, nh, R, C); query: (nh, C); col_valid: (nh, C) or None.
+    Returns distances (nv, nh, R).
+    """
+    q = query[None, :, None, :]                       # (1, nh, 1, C)
+    v = 1.0 if col_valid is None else col_valid[None, :, None, :]
+    if distance == "hamming":
+        d = (stored != q).astype(jnp.float32) * v
+    elif distance == "l1":
+        d = jnp.abs(stored - q) * v
+    elif distance == "l2":
+        d = jnp.square(stored - q) * v
+    elif distance == "dot":
+        d = -(stored * q) * v
+    else:
+        raise ValueError(distance)
+    return jnp.sum(d, axis=-1)
+
+
+def cam_topk_ref(keys: jax.Array, query: jax.Array, k: int,
+                 distance: str = "dot"
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Reference streaming best-match top-k.
+
+    keys: (S, D); query: (D,). Returns (scores (k,), indices (k,)) where
+    score = -distance (larger is better), sorted descending.
+    """
+    if distance == "dot":
+        score = keys @ query                      # larger = better
+    elif distance == "l2":
+        score = -jnp.sum(jnp.square(keys - query[None, :]), axis=-1)
+    elif distance == "l1":
+        score = -jnp.sum(jnp.abs(keys - query[None, :]), axis=-1)
+    else:
+        raise ValueError(distance)
+    return jax.lax.top_k(score, k)
+
+
+def pack_bits_ref(bits: jax.Array) -> jax.Array:
+    """Pack a (..., C) 0/1 float/int array into (..., ceil(C/32)) uint32."""
+    C = bits.shape[-1]
+    W = (C + 31) // 32
+    pad = W * 32 - C
+    x = jnp.pad(bits.astype(jnp.uint32), [(0, 0)] * (bits.ndim - 1)
+                + [(0, pad)])
+    x = x.reshape(*bits.shape[:-1], W, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(x * weights, axis=-1, dtype=jnp.uint32)
+
+
+def hamming_packed_ref(stored_packed: jax.Array, query_packed: jax.Array,
+                       n_valid_bits: int) -> jax.Array:
+    """Reference bit-packed hamming distance.
+
+    stored_packed: (R, W) uint32; query_packed: (W,) uint32.
+    Padding bits are zero in both, so XOR of padding contributes 0.
+    """
+    x = jnp.bitwise_xor(stored_packed, query_packed[None, :])
+    pc = jax.lax.population_count(x)
+    return jnp.sum(pc, axis=-1).astype(jnp.int32)

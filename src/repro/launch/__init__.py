@@ -1,0 +1,8 @@
+"""Launch layer: production mesh, dry-run, train/serve drivers.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time
+(512 host devices) and must only be imported as the main module.
+"""
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+`input_specs(arch, shape)` returns everything the dry-run needs to lower a
+step without allocating: abstract arrays + their logical axes, plus which
+step function the shape exercises (train / prefill / decode).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs import SHAPE_SPECS, get_config
+from repro.configs.base import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                    # train | prefill | decode
+    cfg: ModelConfig
+    seq: int
+    batch: int
+    inputs: Dict[str, Any]       # abstract arrays (kwargs of the step)
+    input_axes: Dict[str, Any]   # logical axes matching `inputs`
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.batch
+        return self.batch * self.seq
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int
+                ) -> Tuple[Dict, Dict]:
+    if cfg.input_mode == "tokens":
+        inputs = {"tokens": SDS((batch, seq), jnp.int32),
+                  "labels": SDS((batch, seq), jnp.int32)}
+        axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    else:
+        inputs = {"embeds": SDS((batch, seq, cfg.d_model), jnp.bfloat16),
+                  "labels": SDS((batch, seq), jnp.int32)}
+        axes = {"embeds": ("batch", "seq", None),
+                "labels": ("batch", "seq")}
+    return inputs, axes
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, seq: int
+                       ) -> Tuple[Dict, Dict]:
+    if cfg.input_mode == "tokens":
+        tok = {"token": SDS((batch,), jnp.int32)}
+        tok_axes = {"token": ("batch",)}
+    else:
+        tok = {"embed": SDS((batch, cfg.d_model), jnp.bfloat16)}
+        tok_axes = {"embed": ("batch", None)}
+    cache, cache_axes = models.cache_specs(cfg, batch, seq)
+    inputs = {"inputs": tok, "pos": SDS((batch,), jnp.int32),
+              "cache": cache}
+    axes = {"inputs": tok_axes, "pos": ("batch",), "cache": cache_axes}
+    return inputs, axes
+
+
+def input_specs(arch: str, shape: str) -> CellSpec:
+    cfg = get_config(arch)
+    spec = SHAPE_SPECS[shape]
+    seq, batch, kind = spec["seq"], spec["batch"], spec["kind"]
+
+    if kind == "train":
+        inputs, axes = batch_specs(cfg, batch, seq)
+    elif kind == "prefill":
+        inputs, axes = batch_specs(cfg, batch, seq)
+        inputs.pop("labels"), axes.pop("labels")
+    else:  # decode
+        inputs, axes = decode_input_specs(cfg, batch, seq)
+    return CellSpec(arch=arch, shape=shape, kind=kind, cfg=cfg, seq=seq,
+                    batch=batch, inputs=inputs, input_axes=axes)

@@ -1,0 +1,80 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+        --steps 50 --reduced --batch 8 --seq 128
+
+On this CPU container use --reduced (same code path as production; the
+full configs are exercised by the dry-run).  On a real slice, omit
+--reduced and the mesh comes from the runtime's device set.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint import committed_steps
+from repro.configs import ARCH_IDS, get_config
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_local_mesh
+from repro.optim import AdamW, warmup_cosine
+from repro.runtime import (elastic, init_state, make_train_step,
+                           sharding_ctx, state_axes)
+from repro.runtime.fault import Supervisor
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--moe-mode", default="tp", choices=["tp", "ep"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh()
+    opt = AdamW(lr=warmup_cosine(args.lr, max(2, args.steps // 10),
+                                 args.steps))
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
+                       input_mode=cfg.input_mode, d_model=cfg.d_model)
+
+    with sharding_ctx(mesh):
+        state = init_state(jax.random.PRNGKey(0), cfg, opt)
+        start = 0
+        if args.resume and committed_steps(args.ckpt_dir):
+            start, state = elastic.elastic_restore(
+                args.ckpt_dir, state, state_axes(cfg), mesh)
+            print(f"resumed from step {start}")
+        step_fn = jax.jit(make_train_step(cfg, opt, moe_mode=args.moe_mode,
+                                          microbatch=args.microbatch),
+                          donate_argnums=(0,))
+
+        def wrapped(state, batch):
+            state, m = step_fn(state, batch)
+            return state, m
+
+        sup = Supervisor(step_fn=wrapped, batch_fn=data.batch,
+                         ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every)
+        t0 = time.time()
+        final_step, state = sup.run(state, start, args.steps)
+        dt = time.time() - t0
+
+    print(f"trained {args.steps} steps in {dt:.1f}s "
+          f"({dt / max(1, args.steps):.2f} s/step); final step "
+          f"{final_step}; events: {sup.events[-3:]}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

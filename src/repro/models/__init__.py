@@ -1,0 +1,11 @@
+"""Model zoo: the 10 assigned architectures + CAM-integrated layers."""
+from .model import (abstract_params, cache_specs, forward_decode,
+                    forward_prefill, forward_train, init_cache, init_params,
+                    loss_fn, model_specs, param_axes, param_count)
+
+__all__ = [
+    "abstract_params", "cache_specs", "forward_decode", "forward_prefill",
+    "forward_train",
+    "init_cache", "init_params", "loss_fn", "model_specs", "param_axes",
+    "param_count",
+]

@@ -1,0 +1,335 @@
+"""Attention: GQA (with flash-style chunked training path) and MLA.
+
+Training uses a pure-JAX flash attention (double scan over query/kv chunks
+with online softmax) so the S=4096 training shapes never materialize an SxS
+score matrix.  Decode attends one new token against a KV cache; the
+CAM-retrieval decode path lives in cam_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import shard
+
+from .layers import P, apply_rope, rms_norm, rms_norm_spec
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# Flash attention (pure JAX, chunked, online softmax)
+# ===========================================================================
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_chunk: int = 512,
+                    kv_chunk: int = 1024,
+                    scale: Optional[float] = None) -> jax.Array:
+    """q (B,S,H,Dk), k (B,S,KVH,Dk), v (B,S,KVH,Dv) -> (B,S,H,Dv).
+
+    GQA handled by grouping: H = KVH * G.  Memory is O(q_chunk * kv_chunk)
+    per step instead of O(S^2).
+    """
+    B, S, H, Dk = q.shape
+    _, Skv, KVH, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KVH
+    scale = Dk ** -0.5 if scale is None else scale
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, Skv)
+    nq, nk = S // qc, Skv // kc
+    assert S % qc == 0 and Skv % kc == 0, (S, qc, Skv, kc)
+
+    qch = q.reshape(B, nq, qc, KVH, G, Dk).transpose(1, 0, 2, 3, 4, 5)
+    kch = k.reshape(B, nk, kc, KVH, Dk).transpose(1, 0, 2, 3, 4)
+    vch = v.reshape(B, nk, kc, KVH, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qi):
+        qi_idx, qblk = qi                       # (B, qc, KVH, G, Dk)
+        q_pos = qi_idx * qc + jnp.arange(qc)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kj_idx, kblk, vblk = kj
+            k_pos = kj_idx * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, qc, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kch, vch))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)       # (B, KVH, G, qc, Dv)
+
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(nq), qch))
+    # (nq, B, KVH, G, qc, Dv) -> (B, S, H, Dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, KVH * G, Dv)
+    return out
+
+
+def naive_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    scale: Optional[float] = None) -> jax.Array:
+    """Reference full-S^2 attention (same FLOPs as flash_attention; no
+    inner scans — used by the dry-run cost probes and small tests)."""
+    B, S, H, Dk = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    Dv = v.shape[-1]
+    scale = Dk ** -0.5 if scale is None else scale
+    qg = q.reshape(B, S, KVH, G, Dk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, Dv).astype(q.dtype)
+
+
+def _attention(cfg, q, k, v, scale=None):
+    if cfg.attn_impl == "naive":
+        return naive_attention(q, k, v, scale=scale)
+    if cfg.attn_impl == "skip":
+        # cost-probe surrogate for the fused Pallas kernel: the in-HLO
+        # attention cost is removed and re-injected analytically from the
+        # kernel's true VMEM-resident traffic (dryrun.fused_attention_cost)
+        B, S, H, _ = q.shape
+        return jnp.zeros((B, S, H, v.shape[-1]), q.dtype)
+    if cfg.attn_impl == "flash_fullq":   # single q block (seq-sharded q)
+        return flash_attention(q, k, v, scale=scale, q_chunk=q.shape[1])
+    return flash_attention(q, k, v, scale=scale)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array,
+                     scale: Optional[float] = None) -> jax.Array:
+    """One-token decode: q (B,H,Dk), cache (B,S,KVH,D*) -> (B,H,Dv).
+
+    ``pos`` (B,) is the index of the new token; entries > pos are masked.
+    """
+    B, H, Dk = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    scale = Dk ** -0.5 if scale is None else scale
+    qg = q.reshape(B, KVH, G, Dk)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] <= pos[:, None]          # (B, S)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, -1).astype(q.dtype)
+
+
+# ===========================================================================
+# GQA block
+# ===========================================================================
+def gqa_spec(cfg: ModelConfig) -> Dict:
+    d, H, KVH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    spec = {
+        "wq": P((d, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": P((d, KVH, Dh), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, KVH, Dh), ("embed", "kv_heads", "head_dim")),
+        "wo": P((H, Dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = P((H, Dh), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = P((KVH, Dh), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = P((KVH, Dh), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def gqa_qkv(params, cfg: ModelConfig, x: jax.Array):
+    """x (B,S,d) -> q (B,S,H,Dh), k/v (B,S,KVH,Dh), rope applied."""
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])
+    k = jnp.einsum("bsd,dhe->bshe", x, params["wk"])
+    v = jnp.einsum("bsd,dhe->bshe", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def gqa_train(params, cfg: ModelConfig, x: jax.Array,
+              return_kv: bool = False):
+    B, S, _ = x.shape
+    q, k, v = gqa_qkv(params, cfg, x)
+    pos = jnp.arange(S)[None, :]
+    q = apply_rope(q, jnp.broadcast_to(pos, (B, S)), cfg.rope_theta)
+    k = apply_rope(k, jnp.broadcast_to(pos, (B, S)), cfg.rope_theta)
+    # heads shard over 'model' when divisible; otherwise 'attn_seq' puts
+    # the query-seq dim on 'model' (context-parallel fallback) and K/V
+    # replicate across it (cheap: KV heads are small exactly when heads
+    # fail to divide)
+    q = shard(q, "batch", "attn_seq", "heads", "head_dim")
+    k = shard(k, "batch", None, "kv_heads", "head_dim")
+    v = shard(v, "batch", None, "kv_heads", "head_dim")
+    out = _attention(cfg, q, k, v)
+    out = shard(out, "batch", "attn_seq", "heads", "head_dim")
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if return_kv:
+        cdt = jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
+        return y, {"k": k.astype(cdt), "v": v.astype(cdt)}
+    return y
+
+
+def gqa_decode(params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+               cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x (B,d) one token; cache {'k': (B,S,KVH,Dh), 'v': ...}."""
+    B, _ = x.shape
+    q = jnp.einsum("bd,dhe->bhe", x, params["wq"])
+    k = jnp.einsum("bd,dhe->bhe", x, params["wk"])
+    v = jnp.einsum("bd,dhe->bhe", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    kc = _cache_update(cache["k"], k, pos)
+    vc = _cache_update(cache["v"], v, pos)
+    if cfg.cam_attention:
+        from .cam_attention import cam_decode
+        out = cam_decode(q, kc, vc, pos, cfg)
+    else:
+        out = decode_attention(q, kc, vc, pos)
+    y = jnp.einsum("bhe,hed->bd", out, params["wo"])
+    return y, {"k": kc, "v": vc}
+
+
+def _cache_update(cache: jax.Array, new: jax.Array,
+                  pos: jax.Array) -> jax.Array:
+    """cache (B,S,KVH,Dh), new (B,KVH,Dh), per-example position (B,).
+
+    vmapped dynamic_update_slice: O(KVH*Dh) bytes per token (donated
+    caches update in place), not O(S) like a one-hot blend."""
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(
+            c, n[None].astype(c.dtype), (p, 0, 0))
+    return jax.vmap(one)(cache, new, pos)
+
+
+# ===========================================================================
+# MLA (multi-head latent attention, minicpm3 / deepseek-style)
+# ===========================================================================
+def mla_spec(cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": P((d, qr), ("embed", "q_lora")),
+        "q_norm": rms_norm_spec(qr),
+        "w_uq": P((qr, H, dn + dr), ("q_lora", "heads", "head_dim")),
+        "w_dkv": P((d, kvr + dr), ("embed", "kv_lora")),
+        "kv_norm": rms_norm_spec(kvr),
+        "w_uk": P((kvr, H, dn), ("kv_lora", "heads", "head_dim")),
+        "w_uv": P((kvr, H, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": P((H, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_q(params, cfg, x, pos):
+    """x (B,S,d) -> q_nope (B,S,H,dn), q_rope (B,S,H,dr)."""
+    cq = jnp.einsum("...d,dr->...r", x, params["w_dq"])
+    cq = rms_norm(params["q_norm"], cq, cfg.norm_eps)
+    q = jnp.einsum("...r,rhe->...he", cq, params["w_uq"])
+    qn = q[..., :cfg.qk_nope_dim]
+    qr = apply_rope(q[..., cfg.qk_nope_dim:], pos, cfg.rope_theta)
+    return qn, qr
+
+
+def _mla_kv_latent(params, cfg, x, pos):
+    """x (B,S,d) -> c_kv (B,S,kvr) normalized, k_rope (B,S,dr) roped."""
+    ckv = jnp.einsum("...d,dr->...r", x, params["w_dkv"])
+    c, kr = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = rms_norm(params["kv_norm"], c, cfg.norm_eps)
+    kr = apply_rope(kr[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+    return c, kr
+
+
+def mla_train(params, cfg: ModelConfig, x: jax.Array,
+              return_kv: bool = False):
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qn, qr = _mla_q(params, cfg, x, pos)
+    c, kr = _mla_kv_latent(params, cfg, x, pos)
+    # expand keys/values from the latent (training path: explicit heads)
+    kn = jnp.einsum("bsr,rhe->bshe", c, params["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c, params["w_uv"])
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(kr[:, :, None, :],
+                              (*kn.shape[:-1], cfg.qk_rope_dim))], axis=-1)
+    q = shard(q, "batch", "attn_seq", "heads", "head_dim")
+    k = shard(k, "batch", None, "heads", "head_dim")
+    out = _attention(cfg, q, k, v,
+                     scale=(cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5)
+    y = jnp.einsum("bshe,hed->bsd", out, params["wo"])
+    if return_kv:
+        cdt = jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
+        return y, {"c": c.astype(cdt), "kr": kr.astype(cdt)}
+    return y
+
+
+def mla_decode(params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+               cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Absorbed-matmul MLA decode over the compressed latent cache.
+
+    cache: {'c': (B,S,kvr), 'kr': (B,S,dr)} — this 2-tensor latent cache is
+    MLA's raison d'être: (kvr+dr) per token instead of 2*H*Dh.
+    """
+    B, _ = x.shape
+    x1 = x[:, None]                                      # (B,1,d)
+    p1 = pos[:, None]
+    qn, qr = _mla_q(params, cfg, x1, p1)                 # (B,1,H,*)
+    cq, krq = _mla_kv_latent(params, cfg, x1, p1)        # new latent entry
+    cc = _cache_update_2d(cache["c"], cq[:, 0], pos)
+    krc = _cache_update_2d(cache["kr"], krq[:, 0], pos)
+
+    # absorb W_uk into the query: q_eff (B,H,kvr)
+    q_eff = jnp.einsum("bhe,rhe->bhr", qn[:, 0], params["w_uk"])
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_eff, cc,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhe,bse->bhs", qr[:, 0], krc,
+                      preferred_element_type=jnp.float32)) * scale
+    if cfg.cam_attention:
+        from .cam_attention import cam_select_scores
+        s = cam_select_scores(s, pos, cfg)
+    S = cc.shape[1]
+    valid = jnp.arange(S)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w.astype(cc.dtype), cc,
+                     preferred_element_type=jnp.float32)   # latent context
+    out = jnp.einsum("bhr,rhe->bhe", ctx.astype(x.dtype), params["w_uv"])
+    y = jnp.einsum("bhe,hed->bd", out, params["wo"])
+    return y, {"c": cc, "kr": krc}
+
+
+def _cache_update_2d(cache: jax.Array, new: jax.Array,
+                     pos: jax.Array) -> jax.Array:
+    """cache (B,S,D), new (B,D) — vmapped dynamic_update_slice."""
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(
+            c, n[None].astype(c.dtype), (p, 0))
+    return jax.vmap(one)(cache, new, pos)

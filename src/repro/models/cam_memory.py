@@ -1,0 +1,66 @@
+"""MANN-style CAM episodic memory (the paper's validation application [8]).
+
+A key-value memory whose lookup is a CAM best-match search with the full
+functional-simulator pipeline (quantization, D2D/C2C variation, partition +
+merge, sensing limit).  Used by the few-shot example and the Fig. 4/5
+case-study benchmarks; also exposable as an auxiliary LM layer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import CAMASim, CAMConfig
+from repro.core.functional import CAMState
+
+
+@dataclass
+class CAMMemory:
+    """Store (key, label) pairs; classify queries by best-match vote."""
+    config: CAMConfig
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        self.sim = CAMASim(self.config, use_kernel=self.use_kernel)
+        self.state: Optional[CAMState] = None
+        self.labels: Optional[jax.Array] = None
+
+    # ------------------------------------------------------------------
+    def write(self, keys: jax.Array, labels: jax.Array,
+              rng: Optional[jax.Array] = None) -> None:
+        """keys (K, N) float; labels (K,) int."""
+        self.state = self.sim.write(keys, rng)
+        self.labels = labels
+
+    def query(self, queries: jax.Array,
+              rng: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+        """queries (Q, N) -> (predicted labels (Q,), match idx (Q, k)).
+
+        k-NN vote over the CAM's match_param nearest entries (ties ->
+        nearest match wins, mirroring a comparator-tree implementation).
+        """
+        assert self.state is not None, "write() before query()"
+        idx, _ = self.sim.query(self.state, queries, rng)
+        safe = jnp.maximum(idx, 0)
+        got = jnp.take(self.labels, safe, axis=0)         # (Q, k)
+        valid = idx >= 0
+        n_cls = int(jnp.max(self.labels)) + 1
+        votes = jax.nn.one_hot(got, n_cls) * valid[..., None]
+        # nearest-match tiebreak: add epsilon weight decaying with rank
+        k = idx.shape[-1]
+        w = 1.0 + 1e-3 * (k - jnp.arange(k, dtype=jnp.float32))
+        votes = (votes * w[None, :, None]).sum(axis=1)
+        return jnp.argmax(votes, axis=-1), idx
+
+    def perf(self, n_queries: int = 1) -> dict:
+        return self.sim.eval_perf(n_queries=n_queries)
+
+
+def accuracy(memory: CAMMemory, queries: jax.Array, labels: jax.Array,
+             rng: Optional[jax.Array] = None) -> float:
+    pred, _ = memory.query(queries, rng)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))

@@ -1,0 +1,164 @@
+"""Parameter-spec machinery + basic layers (norms, embeddings, rope).
+
+Every parameter is declared exactly once as a ``P`` spec carrying its shape,
+*logical axes* (resolved to mesh axes by runtime/sharding.py) and init
+style.  ``init_params`` materializes values, ``axes_tree`` extracts the
+logical-axes pytree — the two never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class P:
+    """Declarative parameter spec."""
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_specs(f, tree):
+    return jax.tree_util.tree_map(f, tree, is_leaf=is_spec)
+
+
+def stack_specs(tree, n: int):
+    """Prepend a scanned 'layers' axis to every spec in the tree."""
+    return tree_map_specs(
+        lambda p: dataclasses.replace(p, shape=(n, *p.shape),
+                                      axes=("layers", *p.axes)), tree)
+
+
+def init_params(key: jax.Array, specs) -> Dict:
+    """Materialize a spec tree into parameter arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(k, p: P):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, p.dtype)
+        if p.init == "ones":
+            return jnp.ones(p.shape, p.dtype)
+        if p.init == "embed":
+            return (0.02 * p.scale
+                    * jax.random.normal(k, p.shape)).astype(p.dtype)
+        if p.init == "small":
+            return (1e-2 * p.scale
+                    * jax.random.normal(k, p.shape)).astype(p.dtype)
+        # 'normal': truncated-normal, fan-in scaled; scanned layer axis and
+        # any leading 'layers' axis excluded from fan-in.
+        fan_axes = [s for s, a in zip(p.shape, p.axes) if a != "layers"]
+        fan_in = fan_axes[0] if len(fan_axes) >= 2 else max(1, fan_axes[0])
+        std = p.scale / (fan_in ** 0.5)
+        return (std * jax.random.truncated_normal(
+            k, -2.0, 2.0, p.shape)).astype(p.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(k, p) for k, p in zip(keys, leaves)])
+
+
+def axes_tree(specs):
+    """Extract the logical-axes pytree (same structure as params)."""
+    return tree_map_specs(lambda p: p.axes, specs)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return tree_map_specs(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), specs)
+
+
+# ---------------------------------------------------------------------------
+# Layers (pure functions over param dicts)
+# ---------------------------------------------------------------------------
+def rms_norm_spec(d: int) -> Dict:
+    return {"scale": P((d,), ("embed",), init="ones", dtype=jnp.float32)}
+
+
+def rms_norm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+def embedding_spec(vocab: int, d: int) -> Dict:
+    return {"table": P((vocab, d), ("vocab", "embed"), init="embed")}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_spec(d: int, vocab: int) -> Dict:
+    return {"kernel": P((d, vocab), ("embed", "vocab"), init="normal")}
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    # logits in f32 for a stable softmax-xent
+    return jnp.einsum("...d,dv->...v", x, params["kernel"]
+                      ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, Dh) or (..., H, Dh) w/ pos (..., S) or scalar/vec."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    # broadcast over heads axis (second-to-last of x)
+    angles = angles[..., None, :]                        # (..., S, 1, dh/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def mlp_spec(d: int, d_ff: int, kind: str = "swiglu") -> Dict:
+    if kind == "gelu":              # 2-matrix gpt-bigcode style
+        return {
+            "wi": P((d, d_ff), ("embed", "mlp")),
+            "wo": P((d_ff, d), ("mlp", "embed")),
+        }
+    return {
+        "wi_gate": P((d, d_ff), ("embed", "mlp")),
+        "wi_up": P((d, d_ff), ("embed", "mlp")),
+        "wo": P((d_ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    if "wi" in params:              # gelu (2-matrix)
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["wi"]))
+        return jnp.einsum("...f,fd->...d", h, params["wo"])
+    g = jnp.einsum("...d,df->...f", x, params["wi_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["wi_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["wo"])

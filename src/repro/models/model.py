@@ -1,0 +1,226 @@
+"""Top-level model: specs, init, train forward (loss), decode forward.
+
+Public API used by the runtime / launcher:
+
+    specs   = model_specs(cfg)             # P-spec tree (shapes + axes)
+    params  = init_params(key, cfg)
+    loss, m = loss_fn(params, cfg, batch)
+    cache   = init_cache(cfg, batch, seq)  # or cache_specs(...) for dry-run
+    logits, cache = forward_decode(params, cfg, inputs, pos, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import shard
+
+from . import layers as L
+from . import transformer as T
+
+
+# ===========================================================================
+# Specs / init
+# ===========================================================================
+def model_specs(cfg: ModelConfig) -> Dict:
+    d, V = cfg.d_model, cfg.padded_vocab
+    specs: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        specs["embed"] = L.embedding_spec(V, d)
+    else:
+        # modality stub: inputs arrive as precomputed frame/patch embeddings
+        specs["in_proj"] = {"kernel": L.P((d, d), ("embed", "mlp"))}
+        specs["embed"] = L.embedding_spec(V, d)  # still needed for labels tie
+    specs["layers"] = L.stack_specs(T.block_spec(cfg), cfg.n_layers)
+    sb = T.shared_block_spec(cfg)
+    if sb is not None:
+        specs["shared"] = sb
+    specs["ln_f"] = L.rms_norm_spec(d)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = L.unembed_spec(d, V)
+    return specs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict:
+    return L.init_params(key, model_specs(cfg))
+
+
+def param_axes(cfg: ModelConfig):
+    return L.axes_tree(model_specs(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    return L.abstract_params(model_specs(cfg))
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+# ===========================================================================
+# Embedding in / logits out
+# ===========================================================================
+def _embed_in(params, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        x = L.embed(params["embed"], batch["tokens"])
+    else:
+        x = jnp.einsum("...d,de->...e", batch["embeds"],
+                       params["in_proj"]["kernel"])
+    return x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+
+
+def _logits_out(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", x, params["embed"]["table"]
+                          ).astype(jnp.float32)
+    return L.unembed(params["unembed"], x)
+
+
+# ===========================================================================
+# Training forward + loss
+# ===========================================================================
+def forward_train(params, cfg: ModelConfig, batch: Dict,
+                  moe_mode: str = "tp") -> jax.Array:
+    x = _embed_in(params, cfg, batch)
+    x = shard(x, "batch", "seq", "embed")
+    x = T.stack_train(params, cfg, x, moe_mode)
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return _logits_out(params, cfg, x)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict, moe_mode: str = "tp"
+            ) -> Tuple[jax.Array, Dict]:
+    logits = forward_train(params, cfg, batch, moe_mode)
+    logits = shard(logits, "batch", "seq", "vocab")
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+
+def forward_prefill(params, cfg: ModelConfig, batch: Dict,
+                    moe_mode: str = "tp") -> Tuple[jax.Array, Dict]:
+    """Prefill a prompt: returns (last-position logits (B,V), decode cache).
+
+    The cache's seq capacity equals the prompt length; serving code that
+    continues decoding should allocate a longer cache and copy in (see
+    runtime/serve_loop.py)."""
+    x = _embed_in(params, cfg, batch)
+    x = shard(x, "batch", "seq", "embed")
+    x, cache = T.stack_prefill(params, cfg, x, moe_mode)
+    x = L.rms_norm(params["ln_f"], x[:, -1], cfg.norm_eps)
+    return _logits_out(params, cfg, x), cache
+
+
+# ===========================================================================
+# Decode: cache construction + one-token step
+# ===========================================================================
+def _cache_dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
+
+
+def _gqa_cache_entry(cfg: ModelConfig, batch: int, seq: int):
+    KVH, Dh, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shape = (Lr, batch, seq, KVH, Dh)
+    axes = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    cdt = _cache_dt(cfg)
+    return {
+        "k": (shape, axes, cdt),
+        "v": (shape, axes, cdt),
+    }
+
+
+def cache_layout(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """{name: (shape, logical_axes, dtype)} tree describing the cache."""
+    Lr = cfg.n_layers
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        if cfg.attention == "mla":
+            return {
+                "c": ((Lr, batch, seq, cfg.kv_lora_rank),
+                      ("layers", "batch", "kv_seq", "kv_lora"),
+                      _cache_dt(cfg)),
+                "kr": ((Lr, batch, seq, cfg.qk_rope_dim),
+                       ("layers", "batch", "kv_seq", None), _cache_dt(cfg)),
+            }
+        return _gqa_cache_entry(cfg, batch, seq)
+    if cfg.family == "ssm":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "conv": ((Lr, batch, cfg.ssm_conv - 1, conv_dim),
+                     ("layers", "batch", None, "ssm_inner"), _cache_dt(cfg)),
+            "ssm": ((Lr, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                     cfg.ssm_state),
+                    ("layers", "batch", "ssm_heads", None, None),
+                    jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        n_apps = cfg.n_layers // cfg.hybrid_attn_every
+        KVH, Dh = cfg.n_kv_heads, cfg.head_dim
+        return {
+            "mamba": {
+                "conv": ((Lr, batch, cfg.ssm_conv - 1, conv_dim),
+                         ("layers", "batch", None, "ssm_inner"),
+                         _cache_dt(cfg)),
+                "ssm": ((Lr, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                         cfg.ssm_state),
+                        ("layers", "batch", "ssm_heads", None, None),
+                        jnp.float32),
+            },
+            "attn": {
+                "k": ((n_apps, batch, seq, KVH, Dh),
+                      ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                      _cache_dt(cfg)),
+                "v": ((n_apps, batch, seq, KVH, Dh),
+                      ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+                      _cache_dt(cfg)),
+            },
+        }
+    raise ValueError(cfg.family)
+
+
+def _is_entry(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 3
+            and isinstance(x[0], tuple))
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda e: jnp.zeros(e[0], e[2]), cache_layout(cfg, batch, seq),
+        is_leaf=_is_entry)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    """(ShapeDtypeStruct tree, logical-axes tree) for dry-run lowering."""
+    layout = cache_layout(cfg, batch, seq)
+    shapes = jax.tree_util.tree_map(
+        lambda e: jax.ShapeDtypeStruct(e[0], e[2]), layout,
+        is_leaf=_is_entry)
+    axes = jax.tree_util.tree_map(lambda e: e[1], layout, is_leaf=_is_entry)
+    return shapes, axes
+
+
+def forward_decode(params, cfg: ModelConfig, inputs: Dict, pos: jax.Array,
+                   cache: Dict, moe_mode: str = "tp"
+                   ) -> Tuple[jax.Array, Dict]:
+    """One decode step.  inputs: {'token': (B,)} or {'embed': (B,d)}."""
+    if cfg.input_mode == "tokens":
+        x = L.embed(params["embed"], inputs["token"])
+    else:
+        x = jnp.einsum("bd,de->be", inputs["embed"],
+                       params["in_proj"]["kernel"])
+    x = x.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    x = shard(x, "batch", "embed")
+    x, new_cache = T.stack_decode(params, cfg, x, pos, cache, moe_mode)
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = _logits_out(params, cfg, x)
+    return shard(logits, "batch", "vocab"), new_cache

@@ -1,0 +1,219 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm.
+
+Training uses the chunked SSD form (arXiv:2405.21060 §6): quadratic
+attention-like compute inside fixed-size chunks + a linear recurrence over
+chunk states (lax.scan), so compute is O(S·Q) instead of O(S^2) and the
+recurrent state (H, P, N) is what decode carries — no KV cache at all,
+which is why the paper's CAM-retrieval technique is inapplicable here
+(DESIGN.md §Arch-applicability).
+
+Decode is the exact recurrence: h <- exp(dt*A) h + dt * B x^T, y = C·h + Dx.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import shard
+
+from .layers import P, rms_norm_spec
+
+
+def mamba2_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * G * N
+    return {
+        "in_proj": P((d, 2 * di + 2 * G * N + H), ("embed", "ssm_inner")),
+        "conv_w": P((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": P((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": P((H,), ("ssm_heads",), init="small", scale=10.0,
+                   dtype=jnp.float32),
+        "D": P((H,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": P((H,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "norm": rms_norm_spec(di),
+        "out_proj": P((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    Bm = zxbcdt[..., 2 * di:2 * di + G * N]
+    Cm = zxbcdt[..., 2 * di + G * N:2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, x, Bm, Cm, dt
+
+
+def _gated_norm(params, y: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    """Mamba2 gated RMSNorm: rmsnorm(y * silu(z))."""
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps)
+            * params["norm"]["scale"]).astype(dt)
+
+
+def _causal_conv_train(x: jax.Array, w: jax.Array, b: jax.Array
+                       ) -> jax.Array:
+    """Depthwise causal conv: x (B,S,Cd), w (K,Cd)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(K))
+    return out + b
+
+
+def mamba2_train(params, cfg: ModelConfig, x_in: jax.Array,
+                 return_state: bool = False):
+    """x_in (B,S,d) -> (B,S,d) via chunked SSD.
+
+    ``return_state``: also return the decode cache ({'conv', 'ssm'}) left
+    after processing the sequence (prefill path)."""
+    Bz, S, _ = x_in.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_headdim
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x_in, params["in_proj"])
+    z, xc, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv_train(
+        conv_in, params["conv_w"], params["conv_b"]).astype(jnp.float32)
+    ).astype(x_in.dtype)
+    xc = conv_out[..., :di]
+    Bm = conv_out[..., di:di + G * N]
+    Cm = conv_out[..., di + G * N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                        # (H,), negative
+    dA = dt * A                                          # (B,S,H)
+
+    xh = xc.reshape(Bz, nc, Q, H, Pd)
+    Bh = Bm.reshape(Bz, nc, Q, G, N)
+    Ch = Cm.reshape(Bz, nc, Q, G, N)
+    hpg = H // G                                          # heads per group
+    dAc = dA.reshape(Bz, nc, Q, H)
+    dtc = dt.reshape(Bz, nc, Q, H)
+    cs = jnp.cumsum(dAc, axis=2)                          # within-chunk cumsum
+    xdt = xh * dtc[..., None]                             # dt-weighted input
+    xg = xdt.reshape(Bz, nc, Q, G, hpg, Pd)
+
+    # ---- intra-chunk (quadratic within Q) ------------------------------
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    csg = cs.reshape(Bz, nc, Q, G, hpg)
+    decay = (csg[:, :, :, None] - csg[:, :, None, :, :]
+             ).transpose(0, 1, 4, 2, 3, 5)                # (b,c,g,q,k,h)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, None, :, :, None],
+                  jnp.exp(jnp.clip(decay, -60.0, 0.0)), 0.0)
+    W = scores[..., None] * L                             # (b,c,g,q,k,h)
+    y_diag = jnp.einsum("bcgqkh,bckghp->bcqghp", W.astype(xg.dtype),
+                        xg.transpose(0, 1, 2, 3, 4, 5),
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk states + inter-chunk recurrence -------------------------
+    cs_last = cs[:, :, -1:]                               # (b,c,1,H)
+    decay_to_end = jnp.exp(jnp.clip(cs_last - cs, -60.0, 0.0))  # (b,c,Q,H)
+    xe = (xdt * decay_to_end[..., None]).reshape(Bz, nc, Q, G, hpg, Pd)
+    states = jnp.einsum("bcqgn,bcqghp->bcghpn", Bh.astype(jnp.float32),
+                        xe.astype(jnp.float32))           # (b,c,G,hpg,P,N)
+    chunk_decay = jnp.exp(jnp.clip(cs_last[:, :, 0], -60.0, 0.0)
+                          ).reshape(Bz, nc, G, hpg)       # (b,c,G,hpg)
+
+    def step(h, inp):
+        st, dec = inp                                     # (b,G,hpg,P,N)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                   # emit state BEFORE
+
+    h0 = jnp.zeros((Bz, G, hpg, Pd, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4, 5),
+                   chunk_decay.transpose(1, 0, 2, 3)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4, 5)         # (b,c,G,hpg,P,N)
+
+    in_decay = jnp.exp(jnp.clip(cs, -60.0, 0.0)
+                       ).reshape(Bz, nc, Q, G, hpg)
+    y_off = jnp.einsum("bcqgn,bcghpn,bcqgh->bcqghp",
+                       Ch.astype(jnp.float32), h_prevs, in_decay)
+
+    y = (y_diag + y_off).reshape(Bz, nc, Q, H, Pd)
+    y = y + params["D"][None, None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bz, S, di).astype(x_in.dtype)
+    y = shard(y, "batch", "seq", "ssm_inner")
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    if return_state:
+        cdt = jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
+        K = cfg.ssm_conv
+        tail = conv_in[:, S - (K - 1):, :].astype(cdt)    # (B, K-1, conv_dim)
+        state = {"conv": tail, "ssm": h_final.reshape(Bz, H, Pd, N)}
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (exact recurrence; carries conv + ssm state — no KV cache)
+# ---------------------------------------------------------------------------
+def mamba2_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * G * N
+    cdt = jnp.bfloat16 if cfg.cache_dtype == "bfloat16" else jnp.float32
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), cdt),
+        "ssm": jnp.zeros((batch, H, cfg.ssm_headdim, N), jnp.float32),
+    }
+
+
+def mamba2_decode(params, cfg: ModelConfig, x_in: jax.Array,
+                  cache: Dict) -> Tuple[jax.Array, Dict]:
+    """x_in (B,d) one token -> (B,d), updated cache."""
+    Bz, _ = x_in.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_headdim
+
+    zxbcdt = jnp.einsum("bd,de->be", x_in, params["in_proj"])
+    z, xc, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)      # (B, conv_dim)
+    window = jnp.concatenate(
+        [cache["conv"], conv_in[:, None].astype(cache["conv"].dtype)],
+        axis=1)                                            # (B, K, conv_dim)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)
+                           ).astype(x_in.dtype)
+    xc = conv_out[..., :di]
+    Bm = conv_out[..., di:di + G * N]
+    Cm = conv_out[..., di + G * N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                                  # (B,H)
+
+    xh = xc.reshape(Bz, H, Pd).astype(jnp.float32)
+    Bh = Bm.reshape(Bz, G, N).astype(jnp.float32)
+    Ch = Cm.reshape(Bz, G, N).astype(jnp.float32)
+    hpg = H // G
+    Bx = jnp.einsum("bgn,bghp->bghpn", Bh,
+                    (xh * dt[..., None]).reshape(Bz, G, hpg, Pd))
+    h = (cache["ssm"].reshape(Bz, G, hpg, Pd, N)
+         * dA.reshape(Bz, G, hpg)[..., None, None] + Bx)
+    y = jnp.einsum("bgn,bghpn->bghp", Ch, h).reshape(Bz, H, Pd)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(Bz, di).astype(x_in.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])
+    new_cache = {
+        "conv": window[:, 1:],
+        "ssm": h.reshape(Bz, H, Pd, N),
+    }
+    return out, new_cache

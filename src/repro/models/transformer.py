@@ -1,0 +1,371 @@
+"""Decoder block assembly: per-family block specs + scanned stacks.
+
+Layers are lax.scan'ned (params stacked on a leading 'layers' axis) with
+per-layer remat, so HLO size / compile time stay O(1 layer) and live
+activations stay bounded.  The zamba2 hybrid uses a two-level scan:
+groups of `hybrid_attn_every` mamba layers followed by one application of
+the weight-shared attention+MLP block (its KV caches are per-application).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import shard
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import mlp, mlp_spec, rms_norm, rms_norm_spec, stack_specs
+
+
+# ===========================================================================
+# Per-layer specs
+# ===========================================================================
+def block_spec(cfg: ModelConfig) -> Dict:
+    if cfg.family in ("dense", "audio", "vlm"):
+        spec = {
+            "ln1": rms_norm_spec(cfg.d_model),
+            "ln2": rms_norm_spec(cfg.d_model),
+            "mlp": mlp_spec(cfg.d_model, cfg.d_ff, cfg.mlp_type),
+        }
+        spec["attn"] = (attn.mla_spec(cfg) if cfg.attention == "mla"
+                        else attn.gqa_spec(cfg))
+        return spec
+    if cfg.family == "moe":
+        return {
+            "ln1": rms_norm_spec(cfg.d_model),
+            "ln2": rms_norm_spec(cfg.d_model),
+            "attn": attn.gqa_spec(cfg),
+            "moe": moe_mod.moe_spec(cfg),
+        }
+    if cfg.family == "ssm":
+        return {
+            "ln1": rms_norm_spec(cfg.d_model),
+            "mamba": ssm_mod.mamba2_spec(cfg),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "ln1": rms_norm_spec(cfg.d_model),
+            "mamba": ssm_mod.mamba2_spec(cfg),
+        }
+    raise ValueError(cfg.family)
+
+
+def shared_block_spec(cfg: ModelConfig) -> Optional[Dict]:
+    """Zamba2's weight-shared attention+MLP block (counted once)."""
+    if cfg.family != "hybrid":
+        return None
+    return {
+        "ln1": rms_norm_spec(cfg.d_model),
+        "ln2": rms_norm_spec(cfg.d_model),
+        "attn": attn.gqa_spec(cfg),
+        "mlp": mlp_spec(cfg.d_model, cfg.d_ff, cfg.mlp_type),
+    }
+
+
+# ===========================================================================
+# Train-time blocks
+# ===========================================================================
+def _attn_train(params, cfg, x):
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a = attn.mla_train(params["attn"], cfg, h)
+    else:
+        a = attn.gqa_train(params["attn"], cfg, h)
+    return x + shard(a, "batch", "seq", "embed")
+
+
+def _ffn_train(params, cfg, x, moe_mode: str):
+    h = rms_norm(params["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        f = moe_mod.moe_block(params["moe"], cfg, h, mode=moe_mode)
+    else:
+        f = mlp(params["mlp"], h)
+    return x + shard(f, "batch", "seq", "embed")
+
+
+def block_train(params, cfg: ModelConfig, x: jax.Array,
+                moe_mode: str = "tp") -> jax.Array:
+    if cfg.family in ("ssm", "hybrid"):
+        h = rms_norm(params["ln1"], x, cfg.norm_eps)
+        return x + ssm_mod.mamba2_train(params["mamba"], cfg, h)
+    x = _attn_train(params, cfg, x)
+    return _ffn_train(params, cfg, x, moe_mode)
+
+
+def shared_block_train(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    x = x + attn.gqa_train(params["attn"], cfg, h)
+    h = rms_norm(params["ln2"], x, cfg.norm_eps)
+    return x + mlp(params["mlp"], h)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def stack_train(params, cfg: ModelConfig, x: jax.Array,
+                moe_mode: str = "tp") -> jax.Array:
+    """Run the full decoder stack (training)."""
+    body = _maybe_remat(
+        lambda p, y: block_train(p, cfg, y, moe_mode), cfg)
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        shared = params["shared"]
+        sbody = _maybe_remat(
+            lambda y: shared_block_train(shared, cfg, y), cfg)
+
+        if not cfg.scan_layers:     # unrolled (cost probes)
+            for i in range(cfg.n_layers):
+                p_i = jax.tree_util.tree_map(lambda a: a[i],
+                                             params["layers"])
+                x = body(p_i, x)
+                if (i + 1) % every == 0:
+                    x = sbody(x)
+            return x
+
+        grouped = jax.tree_util.tree_map(
+            lambda a: a[:n_groups * every].reshape(
+                n_groups, every, *a.shape[1:]), params["layers"])
+        tail = jax.tree_util.tree_map(
+            lambda a: a[n_groups * every:], params["layers"])
+
+        def group_step(y, gp):
+            def inner(y2, p):
+                return body(p, y2), None
+            y, _ = jax.lax.scan(inner, y, gp)
+            return sbody(y), None
+
+        x, _ = jax.lax.scan(group_step, x, grouped)
+        if rem:
+            def inner(y2, p):
+                return body(p, y2), None
+            x, _ = jax.lax.scan(inner, x, tail)
+        return x
+
+    if cfg.scan_layers:
+        def step(y, p):
+            return body(p, y), None
+        x, _ = jax.lax.scan(step, x, params["layers"])
+        return x
+    for i in range(cfg.n_layers):
+        p_i = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        x = body(p_i, x)
+    return x
+
+
+# ===========================================================================
+# Prefill: train-path compute that also emits the decode cache
+# ===========================================================================
+def block_prefill(params, cfg: ModelConfig, x: jax.Array,
+                  moe_mode: str = "tp") -> Tuple[jax.Array, Dict]:
+    if cfg.family in ("ssm", "hybrid"):
+        h = rms_norm(params["ln1"], x, cfg.norm_eps)
+        y, st = ssm_mod.mamba2_train(params["mamba"], cfg, h,
+                                     return_state=True)
+        return x + y, st
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, kv = attn.mla_train(params["attn"], cfg, h, return_kv=True)
+    else:
+        a, kv = attn.gqa_train(params["attn"], cfg, h, return_kv=True)
+    x = x + shard(a, "batch", "seq", "embed")
+    return _ffn_train(params, cfg, x, moe_mode), kv
+
+
+def shared_block_prefill(params, cfg: ModelConfig, x: jax.Array
+                         ) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    a, kv = attn.gqa_train(params["attn"], cfg, h, return_kv=True)
+    x = x + a
+    h = rms_norm(params["ln2"], x, cfg.norm_eps)
+    return x + mlp(params["mlp"], h), kv
+
+
+def stack_prefill(params, cfg: ModelConfig, x: jax.Array,
+                  moe_mode: str = "tp") -> Tuple[jax.Array, Dict]:
+    """Run the stack over a whole prompt, emitting the decode cache."""
+    body = _maybe_remat(
+        lambda p, y: block_prefill(p, cfg, y, moe_mode), cfg)
+
+    if not cfg.scan_layers:         # unrolled (cost probes)
+        if cfg.family == "hybrid":
+            every = cfg.hybrid_attn_every
+            shared = params["shared"]
+            mamba_cs, attn_cs = [], []
+            for i in range(cfg.n_layers):
+                p_i = jax.tree_util.tree_map(lambda a: a[i],
+                                             params["layers"])
+                x, c = body(p_i, x)
+                mamba_cs.append(c)
+                if (i + 1) % every == 0:
+                    x, ac = shared_block_prefill(shared, cfg, x)
+                    attn_cs.append(ac)
+            stackc = lambda cs: jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *cs)
+            return x, {"mamba": stackc(mamba_cs), "attn": stackc(attn_cs)}
+        caches = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, c = body(p_i, x)
+            caches.append(c)
+        return x, jax.tree_util.tree_map(lambda *a: jnp.stack(a), *caches)
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        shared = params["shared"]
+        sbody = _maybe_remat(
+            lambda y: shared_block_prefill(shared, cfg, y), cfg)
+        grouped = jax.tree_util.tree_map(
+            lambda a: a[:n_groups * every].reshape(
+                n_groups, every, *a.shape[1:]), params["layers"])
+        tail = jax.tree_util.tree_map(
+            lambda a: a[n_groups * every:], params["layers"])
+
+        def group_step(y, gp):
+            def inner(y2, p):
+                return body(p, y2)
+            y, mamba_c = jax.lax.scan(inner, y, gp)
+            y, attn_c = sbody(y)
+            return y, (mamba_c, attn_c)
+
+        x, (g_mamba, attn_c) = jax.lax.scan(group_step, x, grouped)
+        mamba_c = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups * every, *a.shape[2:]), g_mamba)
+        if rem:
+            def inner(y2, p):
+                return body(p, y2)
+            x, t_mamba = jax.lax.scan(inner, x, tail)
+            mamba_c = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), mamba_c, t_mamba)
+        return x, {"mamba": mamba_c, "attn": attn_c}
+
+    def step(y, p):
+        return body(p, y)
+
+    x, cache = jax.lax.scan(step, x, params["layers"])
+    return x, cache
+
+
+# ===========================================================================
+# Decode-time blocks
+# ===========================================================================
+def block_decode(params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                 cache: Dict, moe_mode: str = "tp"
+                 ) -> Tuple[jax.Array, Dict]:
+    """x (B,d) one token."""
+    if cfg.family in ("ssm", "hybrid"):
+        h = rms_norm(params["ln1"], x, cfg.norm_eps)
+        y, new_cache = ssm_mod.mamba2_decode(params["mamba"], cfg, h, cache)
+        return x + y, new_cache
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, new_cache = attn.mla_decode(params["attn"], cfg, h, pos, cache)
+    else:
+        a, new_cache = attn.gqa_decode(params["attn"], cfg, h, pos, cache)
+    x = x + a
+    h = rms_norm(params["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        f = moe_mod.moe_block(params["moe"], cfg, h, mode=moe_mode)
+    else:
+        f = mlp(params["mlp"], h)
+    return x + f, new_cache
+
+
+def shared_block_decode(params, cfg: ModelConfig, x: jax.Array,
+                        pos: jax.Array, cache: Dict
+                        ) -> Tuple[jax.Array, Dict]:
+    h = rms_norm(params["ln1"], x, cfg.norm_eps)
+    a, new_cache = attn.gqa_decode(params["attn"], cfg, h, pos, cache)
+    x = x + a
+    h = rms_norm(params["ln2"], x, cfg.norm_eps)
+    return x + mlp(params["mlp"], h), new_cache
+
+
+def stack_decode(params, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                 cache: Dict, moe_mode: str = "tp"
+                 ) -> Tuple[jax.Array, Dict]:
+    """Scanned decode over layers; caches are scan xs/ys."""
+    if not cfg.scan_layers:         # unrolled (cost probes)
+        take = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+        stackc = lambda cs: jax.tree_util.tree_map(
+            lambda *a: jnp.stack(a), *cs)
+        if cfg.family == "hybrid":
+            every = cfg.hybrid_attn_every
+            shared = params["shared"]
+            mamba_cs, attn_cs = [], []
+            for i in range(cfg.n_layers):
+                x, c = block_decode(take(params["layers"], i), cfg, x, pos,
+                                    take(cache["mamba"], i), moe_mode)
+                mamba_cs.append(c)
+                if (i + 1) % every == 0:
+                    j = (i + 1) // every - 1
+                    x, ac = shared_block_decode(shared, cfg, x, pos,
+                                                take(cache["attn"], j))
+                    attn_cs.append(ac)
+            return x, {"mamba": stackc(mamba_cs), "attn": stackc(attn_cs)}
+        caches = []
+        for i in range(cfg.n_layers):
+            x, c = block_decode(take(params["layers"], i), cfg, x, pos,
+                                take(cache, i), moe_mode)
+            caches.append(c)
+        return x, stackc(caches)
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        shared = params["shared"]
+        grouped = jax.tree_util.tree_map(
+            lambda a: a[:n_groups * every].reshape(
+                n_groups, every, *a.shape[1:]), params["layers"])
+        tail = jax.tree_util.tree_map(
+            lambda a: a[n_groups * every:], params["layers"])
+        g_mamba = jax.tree_util.tree_map(
+            lambda a: a[:n_groups * every].reshape(
+                n_groups, every, *a.shape[1:]), cache["mamba"])
+        t_mamba = jax.tree_util.tree_map(
+            lambda a: a[n_groups * every:], cache["mamba"])
+
+        def group_step(y, xs):
+            gp, mc, ac = xs
+
+            def inner(y2, xs2):
+                p, c = xs2
+                y2, c2 = block_decode(p, cfg, y2, pos, c, moe_mode)
+                return y2, c2
+            y, mc2 = jax.lax.scan(inner, y, (gp, mc))
+            y, ac2 = shared_block_decode(shared, cfg, y, pos, ac)
+            return y, (mc2, ac2)
+
+        x, (g_mamba2, attn2) = jax.lax.scan(
+            group_step, x, (grouped, g_mamba, cache["attn"]))
+        new_mamba = jax.tree_util.tree_map(
+            lambda a: a.reshape(n_groups * every, *a.shape[2:]), g_mamba2)
+        if rem:
+            def inner(y2, xs2):
+                p, c = xs2
+                y2, c2 = block_decode(p, cfg, y2, pos, c, moe_mode)
+                return y2, c2
+            x, t2 = jax.lax.scan(inner, x, (tail, t_mamba))
+            new_mamba = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], 0), new_mamba, t2)
+        return x, {"mamba": new_mamba, "attn": attn2}
+
+    def step(y, xs):
+        p, c = xs
+        y, c2 = block_decode(p, cfg, y, pos, c, moe_mode)
+        return y, c2
+
+    x, new_cache = jax.lax.scan(step, x, (params["layers"], cache))
+    return x, new_cache

@@ -1,0 +1,10 @@
+from .adamw import AdamW, AdamWState, global_norm
+from .grad_compress import (compressed_psum, dequantize_int8, ef_compress,
+                            init_error_state, quantize_int8)
+from .schedule import constant, warmup_cosine
+
+__all__ = [
+    "AdamW", "AdamWState", "global_norm", "warmup_cosine", "constant",
+    "quantize_int8", "dequantize_int8", "ef_compress", "init_error_state",
+    "compressed_psum",
+]

@@ -1,0 +1,77 @@
+"""AdamW with decoupled weight decay, global-norm clipping, f32 master
+moments (params may be bf16 — moments and the update math stay f32)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array          # ()
+    mu: Dict                  # f32, same tree as params
+    nu: Dict                  # f32
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    # ------------------------------------------------------------------
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            count=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(z, params),
+            nu=jax.tree_util.tree_map(z, params))
+
+    # ------------------------------------------------------------------
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Dict, AdamWState, Dict]:
+        """Returns (new_params, new_state, metrics)."""
+        gf = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(gf)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm
+                                / jnp.maximum(gnorm, 1e-9))
+            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
+        count = state.count + 1
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+        lr = self.lr(count)
+
+        def upd(p, g, m, v):
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m2 / b1c
+            vhat = v2 / b2c
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step
+            return p2.astype(p.dtype), m2, v2
+
+        out = jax.tree_util.tree_map(upd, params, gf, state.mu, state.nu)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+            and all(isinstance(e, jax.Array) for e in x))
+        new_p = jax.tree_util.tree_unflatten(
+            treedef, [l[0] for l in leaves])
+        new_m = jax.tree_util.tree_unflatten(
+            treedef, [l[1] for l in leaves])
+        new_v = jax.tree_util.tree_unflatten(
+            treedef, [l[2] for l in leaves])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_p, AdamWState(count, new_m, new_v), metrics
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                        for x in jax.tree_util.tree_leaves(tree)))

@@ -1,0 +1,77 @@
+"""Gradient compression for data-parallel reduction (int8 + error feedback).
+
+At 1000+ node scale the cross-pod gradient all-reduce is DCN-bound; int8
+compression cuts those bytes 4x vs f32 (2x vs bf16).  Error feedback keeps
+the quantization noise unbiased over steps (Seide et al. / EF-SGD style):
+
+    e      <- residual carried per leaf
+    q      = quantize(g + e)
+    e'     = (g + e) - dequantize(q)
+    reduce = all_reduce(q) (int32 accumulate) -> dequantize / n
+
+`compressed_psum` is used inside shard_map over the data axes; tests verify
+the EF recursion drives the mean error to ~0 and the dry-run shows the
+collective operand dtype shrink.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(g: jax.Array, err: jax.Array
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback int8 compression of one gradient leaf.
+
+    Returns (q int8, scale, new_err)."""
+    corrected = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(corrected)
+    new_err = corrected - dequantize_int8(q, scale)
+    return q, scale, new_err
+
+
+def init_error_state(grads) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, err_state, axis_name: str):
+    """int8 all-reduce of a gradient tree inside shard_map.
+
+    Quantizes each leaf with error feedback, psums the int8 payload in int32
+    (exact for <= 2^23 shards), and rescales by the max participating scale
+    (scales are psum-maxed so dequantization is consistent across shards).
+    Returns (mean_grads_f32, new_err_state).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, scale, e2 = ef_compress(g, e)
+        # consistent scale across shards: use the max, requantize
+        smax = jax.lax.pmax(scale, axis_name)
+        qr = jnp.clip(jnp.round(dequantize_int8(q, scale) / smax),
+                      -127, 127).astype(jnp.int8)
+        e2 = e2 + dequantize_int8(q, scale) - dequantize_int8(qr, smax)
+        total = jax.lax.psum(qr.astype(jnp.int32), axis_name)
+        return total.astype(jnp.float32) * smax / n, e2
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    mean = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return mean, err

@@ -1,0 +1,6 @@
+from . import hw
+from .analysis import (CollectiveStats, Roofline, model_flops,
+                       parse_collectives)
+
+__all__ = ["hw", "CollectiveStats", "Roofline", "model_flops",
+           "parse_collectives"]

@@ -1,0 +1,196 @@
+"""Roofline derivation from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = wire_bytes_per_device / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the post-SPMD
+per-device program).  Collective bytes are NOT in cost_analysis: we parse
+the HLO text and sum, per op kind, the *wire* bytes implied by the result
+shapes and replica group sizes (ring algorithms assumed):
+
+    all-reduce         2 * B * (n-1)/n      (reduce-scatter + all-gather)
+    all-gather         B * (n-1)/n          (B = gathered result bytes)
+    reduce-scatter     B_out * (n-1)        (B_out = scattered shard)
+    all-to-all         B * (n-1)/n
+    collective-permute B
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from . import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [groups, group_size]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_RE.search(line)
+    if m:
+        members = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(members))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    # per-op-kind: (count, result_bytes, wire_bytes) — per device, per step
+    ops: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(v["wire_bytes"] for v in self.ops.values())
+
+    @property
+    def result_bytes(self) -> float:
+        return sum(v["result_bytes"] for v in self.ops.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for op in _COLLECTIVES:
+            # match '<op>(' or '<op>-start(' as the op of this instruction
+            marker = f" {op}("
+            marker2 = f" {op}-start("
+            if marker not in stripped and marker2 not in stripped:
+                continue
+            if "=" not in stripped:
+                continue
+            result_part = stripped.split("=", 1)[1]
+            for mk in (marker, marker2):
+                if mk in result_part:
+                    result_part = result_part.split(mk, 1)[0]
+                    break
+            B = _shape_bytes(result_part)
+            if B == 0:
+                continue
+            n = _group_size(stripped, n_devices)
+            frac = (n - 1) / max(1, n)
+            if op == "all-reduce":
+                wire = 2.0 * B * frac
+            elif op == "all-gather":
+                wire = B * frac
+            elif op == "reduce-scatter":
+                wire = B * (n - 1)
+            elif op == "all-to-all":
+                wire = B * frac
+            else:  # collective-permute
+                wire = float(B)
+            e = stats.ops.setdefault(
+                op, {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+            e["count"] += 1
+            e["result_bytes"] += B
+            e["wire_bytes"] += wire
+            break
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_global: float
+    collectives: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    memory_per_device: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / hw.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total HLO FLOPs (catches remat/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / max(1.0, hlo_global)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs throughput at the bound, as a fraction of peak
+        (an MFU upper bound implied by the dominant roofline term)."""
+        t = self.t_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_global
+                / (t * self.chips * hw.PEAK_FLOPS_BF16))
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+            "memory_per_device": self.memory_per_device,
+        }
+
+
+def model_flops(cfg, kind: str, tokens: int) -> float:
+    """6·N·D (train) / 2·N·D (inference) with N = active params."""
+    n = cfg.active_params()
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

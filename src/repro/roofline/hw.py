@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (the TARGET; this container only lowers)."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, FLOP/s
+HBM_BW = 819e9                # per chip, B/s
+ICI_BW = 50e9                 # per link, B/s (~45-50 GB/s on v5e)
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip

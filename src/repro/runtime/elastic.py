@@ -1,0 +1,40 @@
+"""Elastic re-scaling: checkpoints are mesh-agnostic, so a job can restart
+on a different device count / mesh shape.
+
+The flow: the writer saves host-gathered arrays (checkpoint/ckpt.py); on
+restart the new job builds its own mesh, re-resolves every leaf's logical
+axes against the *new* mesh (divisibility-checked, so shrinking from 512 to
+256 chips just changes which axes shard), and device_puts each leaf with
+the new NamedSharding.  Data-pipeline determinism (pure function of step)
+makes the resumed stream identical regardless of the new data-parallel
+degree.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import restore_sharded
+from repro.runtime.sharding import ShardingRules, tree_shardings
+
+
+def reshard(tree, axes_tree, mesh, rules: Optional[ShardingRules] = None,
+            fsdp: bool = True):
+    """Place (or re-place) a pytree onto ``mesh`` per its logical axes."""
+    rules = rules or ShardingRules()
+    shardings = tree_shardings(axes_tree, tree, mesh, rules, fsdp=fsdp)
+    flat_t, treedef = jax.tree_util.tree_flatten(tree)
+    flat_s = treedef.flatten_up_to(shardings)
+    placed = [jax.device_put(x, s) for x, s in zip(flat_t, flat_s)]
+    return jax.tree_util.tree_unflatten(treedef, placed)
+
+
+def elastic_restore(ckpt_dir: str, example_state, axes_tree, mesh,
+                    rules: Optional[ShardingRules] = None,
+                    fsdp: bool = True) -> Tuple[int, Any]:
+    """Restore the newest checkpoint onto a (possibly different) mesh."""
+    rules = rules or ShardingRules()
+    shardings = tree_shardings(axes_tree, example_state, mesh, rules,
+                               fsdp=fsdp)
+    return restore_sharded(ckpt_dir, example_state, shardings)

@@ -1,0 +1,108 @@
+"""Serve-step factory + a small continuous-batching serving loop.
+
+``serve_step`` is the unit the decode dry-run shapes lower: one new token
+for every sequence in the batch against a seq_len KV cache.  The
+``Server`` driver adds slot management (requests join/leave the batch
+between steps) for the serving example.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig, *, moe_mode: str = "tp",
+                    greedy: bool = True):
+    """serve_step(params, cache, inputs, pos) -> (next_token/logits, cache)."""
+
+    def serve_step(params, cache, inputs: Dict, pos: jax.Array):
+        logits, cache = models.forward_decode(params, cfg, inputs, pos,
+                                              cache, moe_mode=moe_mode)
+        if greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+        return logits, cache
+
+    return serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class Server:
+    """Minimal continuous-batching server over a fixed slot batch."""
+    cfg: ModelConfig
+    params: Any
+    batch_slots: int
+    max_seq: int
+
+    def __post_init__(self):
+        self.cache = models.init_cache(self.cfg, self.batch_slots,
+                                       self.max_seq)
+        self.step_fn = jax.jit(make_serve_step(self.cfg))
+        self.slot_req: List[Optional[Request]] = [None] * self.batch_slots
+        self.slot_pos = np.zeros(self.batch_slots, np.int32)
+        self.slot_next = np.zeros(self.batch_slots, np.int32)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.batch_slots):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                self.slot_pos[i] = 0
+                self.slot_next[i] = req.prompt[0]
+
+    def step(self) -> int:
+        """One decode step across all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = jnp.asarray(self.slot_next)
+        pos = jnp.asarray(self.slot_pos)
+        next_tok, self.cache = self.step_fn(
+            self.params, self.cache, {"token": tokens}, pos)
+        next_np = np.asarray(next_tok)
+        for i in active:
+            req = self.slot_req[i]
+            p = int(self.slot_pos[i])
+            if p + 1 < len(req.prompt):       # still consuming the prompt
+                self.slot_next[i] = req.prompt[p + 1]
+            else:
+                tok = int(next_np[i])
+                req.out.append(tok)
+                self.slot_next[i] = tok
+            self.slot_pos[i] = p + 1
+            if (len(req.out) >= req.max_new
+                    or self.slot_pos[i] >= self.max_seq - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[i] = None
+        return len(active)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,204 @@
+"""Logical-axis sharding resolver.
+
+Every parameter/activation declares *logical* axes ('embed', 'heads',
+'batch', ...).  Rules map logical axes to preference-ordered mesh axes; an
+axis is only used when it divides the dimension and is not already taken by
+another dim of the same tensor — so e.g. qwen2's 12 heads silently fall back
+to replicated on a model=16 mesh while its d_ff=8960 still shards (see
+DESIGN.md §5).
+
+Params additionally get FSDP sharding over the data axes on their largest
+eligible dim, so optimizer state for the 34B archs fits HBM.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# logical axis -> tuple of mesh axes to try (in order, combined greedily)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "moe_mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "q_lora": ("model",),
+    "kv_lora": (),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "experts": (),            # TP-style baseline: experts replicated,
+                              # moe_mlp sharded. EP hillclimb flips this.
+    "kv_seq": ("model", "data"),  # when kv_heads could not shard; claims
+                                  # the data axes too if batch left them
+                                  # idle (batch=1 long-context decode)
+    "attn_seq": (),           # REFUTED experiment (EXPERIMENTS.md §Perf):
+                              # mapping this to ('model',) seq-shards q
+                              # when heads don't divide, but XLA SPMD
+                              # reshards at every constraint boundary
+                              # (t_coll 1.4s -> 25.5s on qwen2 train_4k).
+                              # A shard_map ring-attention would be needed;
+                              # head padding won instead (opt-headpad).
+    "seq": (),                # training seq replicated in baseline
+    "embed": (),              # d_model of activations replicated
+    "layers": (),             # scanned axis never sharded
+    "head_dim": (),
+    "ssm_state": (),
+    "conv": (),
+    "ssm_groups": (),
+}
+
+# priority: dims earlier in this list claim mesh axes first (batch before
+# kv_seq so the cache stays batch-major whenever batch can shard; heads
+# before attn_seq so seq-parallel attention only kicks in as a fallback)
+_PRIORITY = ("experts", "heads", "q_lora", "vocab", "mlp", "moe_mlp",
+             "ssm_inner", "ssm_heads", "kv_heads", "batch", "kv_seq",
+             "attn_seq", "seq", "embed")
+# dims eligible to carry FSDP (data-axis) sharding for parameters
+_FSDP_ELIGIBLE = ("embed", "vocab", "mlp", "moe_mlp", "ssm_inner", "heads",
+                  "q_lora", "kv_lora", "experts")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Dict[str, Tuple[str, ...]] = field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    fsdp_axes: Tuple[str, ...] = ("data",)   # mesh axes used for param FSDP
+
+    def replace_rule(self, **kw) -> "ShardingRules":
+        r = dict(self.rules)
+        for k, v in kw.items():
+            r[k] = tuple(v)
+        return ShardingRules(rules=r, fsdp_axes=self.fsdp_axes)
+
+    # ------------------------------------------------------------------
+    def spec_for(self, shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh: Mesh, fsdp: bool = False) -> PartitionSpec:
+        """Resolve logical axes to a PartitionSpec for this mesh."""
+        assert len(shape) == len(axes), (shape, axes)
+        mesh_sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        used: set = set()
+        assignment: Dict[int, Tuple[str, ...]] = {}
+
+        order = sorted(
+            range(len(axes)),
+            key=lambda i: _PRIORITY.index(axes[i])
+            if axes[i] in _PRIORITY else len(_PRIORITY))
+        for i in order:
+            name = axes[i]
+            if name is None:
+                continue
+            cands = self.rules.get(name, ())
+            picked = []
+            size = shape[i]
+            for m in cands:
+                if m in used or m not in mesh_sizes:
+                    continue
+                if size % (int(np.prod([mesh_sizes[p] for p in picked]
+                                       or [1])) * mesh_sizes[m]) == 0:
+                    picked.append(m)
+            if picked:
+                assignment[i] = tuple(picked)
+                used.update(picked)
+
+        if fsdp:
+            self._add_fsdp(shape, axes, mesh_sizes, used, assignment)
+
+        entries = []
+        for i in range(len(shape)):
+            a = assignment.get(i)
+            if not a:
+                entries.append(None)
+            elif len(a) == 1:
+                entries.append(a[0])
+            else:
+                entries.append(tuple(a))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return PartitionSpec(*entries)
+
+    def _add_fsdp(self, shape, axes, mesh_sizes, used, assignment):
+        """Shard the largest eligible parameter dim over the data axes."""
+        free = [m for m in self.fsdp_axes
+                if m in mesh_sizes and m not in used]
+        if not free:
+            return
+        best, best_size = None, 0
+        for i, name in enumerate(axes):
+            if name not in _FSDP_ELIGIBLE:
+                continue
+            cur = int(np.prod([mesh_sizes[p]
+                               for p in assignment.get(i, ())] or [1]))
+            need = cur * int(np.prod([mesh_sizes[m] for m in free]))
+            if shape[i] % need == 0 and shape[i] // cur > best_size:
+                best, best_size = i, shape[i] // cur
+        if best is not None:
+            assignment[best] = assignment.get(best, ()) + tuple(free)
+            used.update(free)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context (threaded into model code as `shard(x, ...)`)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    rules: ShardingRules
+
+
+_ctx: contextvars.ContextVar[Optional[ShardCtx]] = contextvars.ContextVar(
+    "repro_shard_ctx", default=None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    token = _ctx.set(ShardCtx(mesh, rules or ShardingRules()))
+    try:
+        yield
+    finally:
+        _ctx.reset(token)
+
+
+def model_axis_size() -> int:
+    """Size of the 'model' mesh axis in the active sharding context (1 if
+    no context or no model axis)."""
+    ctx = _ctx.get()
+    if ctx is None or "model" not in ctx.mesh.axis_names:
+        return 1
+    return dict(zip(ctx.mesh.axis_names, ctx.mesh.axis_sizes))["model"]
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a logical-axis sharding constraint (no-op without context)."""
+    ctx = _ctx.get()
+    if ctx is None:
+        return x
+    spec = ctx.rules.spec_for(x.shape, axes, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                   rules: Optional[ShardingRules] = None,
+                   fsdp: bool = True):
+    """NamedSharding tree for a parameter tree (with FSDP for params)."""
+    rules = rules or ShardingRules()
+
+    def one(axes, shaped):
+        spec = rules.spec_for(shaped.shape, axes, mesh, fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,97 @@
+"""Train-step factory: remat'd scanned model + AdamW + optional
+microbatching (gradient accumulation) and int8-EF DP gradient compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.optim import AdamW, AdamWState
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: AdamWState
+
+
+def init_state(key: jax.Array, cfg: ModelConfig, opt: AdamW) -> TrainState:
+    params = models.init_params(key, cfg)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt=opt.init(params))
+
+
+def abstract_state(cfg: ModelConfig) -> TrainState:
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    p = models.abstract_params(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        params=p,
+        opt=AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32),
+                       mu=jax.tree_util.tree_map(f32, p),
+                       nu=jax.tree_util.tree_map(f32, p)))
+
+
+def state_axes(cfg: ModelConfig) -> TrainState:
+    """Logical-axes tree matching TrainState (for sharding resolution)."""
+    axes = models.param_axes(cfg)
+    return TrainState(step=(), params=axes,
+                      opt=AdamWState(count=(), mu=axes, nu=axes))
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, *, moe_mode: str = "tp",
+                    microbatch: Optional[int] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatch``: number of gradient-accumulation chunks; the global
+    batch dim must divide evenly.  Accumulation runs as a lax.scan so live
+    activation memory is one microbatch's worth.
+    """
+
+    def loss_for(params, batch):
+        return models.loss_fn(params, cfg, batch, moe_mode=moe_mode)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def full_grads(params, batch):
+        if not microbatch or microbatch <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, grads
+
+        def split(x):
+            B = x.shape[0]
+            assert B % microbatch == 0, (B, microbatch)
+            return x.reshape(microbatch, B // microbatch, *x.shape[1:])
+
+        chunks = jax.tree_util.tree_map(split, batch)
+
+        def acc_step(carry, chunk):
+            loss_acc, gacc = carry
+            (loss, aux), grads = grad_fn(params, chunk)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+            return (loss_acc + loss, gacc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(
+            acc_step, (jnp.zeros((), jnp.float32), g0), chunks)
+        inv = 1.0 / microbatch
+        grads = jax.tree_util.tree_map(lambda g: g * inv, gsum)
+        return loss_sum * inv, grads
+
+    def train_step(state: TrainState, batch: Dict
+                   ) -> Tuple[TrainState, Dict]:
+        loss, grads = full_grads(state.params, batch)
+        new_params, new_opt, om = opt.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, **om}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt=new_opt), metrics
+
+    return train_step

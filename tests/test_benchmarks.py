@@ -1,0 +1,31 @@
+"""Benchmark harness sanity: Table IV calibration via the bench path and
+Fig 4/5 trend checks on minimal sweeps."""
+import pytest
+
+
+def test_table4_bench_fast():
+    from benchmarks.table4_validation import run
+    rows, _ = run(fast=True)
+    assert len(rows) == 3
+    for name, lat, plat, dl, en, pen, de, _ in rows:
+        assert abs(dl) < 8.0, (name, dl)
+        assert abs(de) < 8.0, (name, de)
+
+
+@pytest.mark.slow
+def test_fig4_trends_minimal():
+    from benchmarks.fig4_sweep import check_trends, run
+    res = run(dims=(64, 128), bits=(2, 3), cols=(64,), episodes=3,
+              steps=120)
+    tr = check_trends(res)
+    assert tr["2b_worse_than_3b"]
+    assert tr["edp_grows_with_dim"]
+
+
+@pytest.mark.slow
+def test_fig5_trends_minimal():
+    from benchmarks.fig5_nonidealities import check_trends, run
+    out = run(stds=(0.0, 2.0), sls=(0.0, 5.0), episodes=3, steps=120,
+              cols=(64,))
+    tr = check_trends(out)
+    assert all(tr.values()), tr

@@ -1,0 +1,341 @@
+"""CAMASim functional simulator: unit + property tests.
+
+The key invariants (paper Fig. 3b):
+  * exact match + AND/gather merge over a partitioned store == direct
+    full-vector exact match (lossless);
+  * best match + adder/comparator merge == global argmin (lossless);
+  * best match + voting merge == argmin when no horizontal partitioning;
+  * threshold match + adder merge == all entries within the threshold;
+  * padding (partition remainders) never changes results.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
+                        CircuitConfig, DeviceConfig)
+from repro.core import distance as dist_mod
+from repro.core import mapping
+
+
+def make_cfg(distance="l2", match="best", k=1, bits=3, rows=8, cols=8,
+             h_merge="adder", v_merge="comparator", sensing=None,
+             sl=0.0, variation="none", std=0.0):
+    return CAMConfig(
+        app=AppConfig(distance=distance, match_type=match, match_param=k,
+                      data_bits=bits),
+        arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+        circuit=CircuitConfig(rows=rows, cols=cols, cell_type="mcam",
+                              sensing=sensing or match, sensing_limit=sl),
+        device=DeviceConfig(device="fefet", variation=variation,
+                            variation_std=std))
+
+
+# ---------------------------------------------------------------------------
+# exact match
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("K,N,rows,cols", [
+    (10, 12, 4, 4), (32, 8, 8, 8), (7, 20, 8, 6), (16, 16, 16, 16)])
+def test_exact_match_lossless(K, N, rows, cols):
+    cfg = make_cfg(distance="hamming", match="exact", bits=1,
+                   rows=rows, cols=cols, h_merge="and", v_merge="gather")
+    cfg = cfg.replace(circuit=dict(cell_type="tcam"))
+    sim = CAMASim(cfg)
+    key = jax.random.PRNGKey(0)
+    stored = (jax.random.uniform(key, (K, N)) > 0.5).astype(jnp.float32)
+    state = sim.write(stored)
+    # query every stored row: row i must match at least itself
+    idx, mask = sim.query(state, stored)
+    for i in range(K):
+        matches = np.where(np.asarray(mask[i]) > 0)[0]
+        assert i in matches
+        # all matched rows are true duplicates
+        for j in matches:
+            if j < K:
+                assert (np.asarray(stored[i]) == np.asarray(stored[j])).all()
+
+
+def test_exact_match_no_false_positive():
+    cfg = make_cfg(distance="hamming", match="exact", bits=1, rows=4,
+                   cols=4, h_merge="and", v_merge="gather")
+    cfg = cfg.replace(circuit=dict(cell_type="tcam"))
+    sim = CAMASim(cfg)
+    stored = jnp.eye(6, 10)
+    state = sim.write(stored)
+    q = jnp.zeros((1, 10))
+    idx, mask = sim.query(state, q)
+    assert np.asarray(mask[0]).sum() == 0
+    assert (np.asarray(idx[0]) == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# best match
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 40), st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_best_match_adder_is_global_argmin(K, N, seed):
+    """adder h-merge + comparator v-merge == exact nearest neighbour."""
+    cfg = make_cfg(distance="l2", match="best", k=1, bits=0,
+                   rows=8, cols=8)
+    cfg = cfg.replace(circuit=dict(cell_type="acam"))
+    sim = CAMASim(cfg)
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (K, N))
+    q = jax.random.uniform(k2, (3, N))
+    state = sim.write(stored)
+    idx, _ = sim.query(state, q)
+    d = np.square(np.asarray(stored)[None] - np.asarray(q)[:, None]
+                  ).sum(-1)
+    want = d.argmin(1)
+    got = np.asarray(idx[:, 0])
+    # ties: accept any argmin-equivalent answer
+    for g, w, drow in zip(got, want, d):
+        assert drow[g] == pytest.approx(drow[w], rel=1e-5, abs=1e-6)
+
+
+def test_best_match_voting_no_hpartition_is_exact():
+    """With nh == 1 voting degenerates to per-subarray best == argmin."""
+    cfg = make_cfg(distance="l2", match="best", k=1, bits=0, rows=4,
+                   cols=16, h_merge="voting")
+    cfg = cfg.replace(circuit=dict(cell_type="acam"))
+    sim = CAMASim(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (12, 16))
+    q = stored[jnp.array([3, 7])] + 0.001
+    state = sim.write(stored)
+    idx, _ = sim.query(state, q)
+    assert list(np.asarray(idx[:, 0])) == [3, 7]
+
+
+def test_best_match_topk_ordering():
+    cfg = make_cfg(distance="l2", match="best", k=3, bits=0, rows=8,
+                   cols=8)
+    cfg = cfg.replace(circuit=dict(cell_type="acam"))
+    sim = CAMASim(cfg)
+    stored = jnp.arange(10.0)[:, None] * jnp.ones((1, 8))
+    q = jnp.full((1, 8), 4.2)
+    idx, _ = sim.query(sim.write(stored), q)
+    assert list(np.asarray(idx[0])) == [4, 5, 3]
+
+
+# ---------------------------------------------------------------------------
+# threshold match
+# ---------------------------------------------------------------------------
+def test_threshold_match_adder():
+    cfg = make_cfg(distance="hamming", match="threshold", k=2, bits=1,
+                   rows=4, cols=4, h_merge="adder", v_merge="gather")
+    cfg = cfg.replace(circuit=dict(cell_type="tcam", sensing="threshold"))
+    sim = CAMASim(cfg)
+    base = jnp.zeros((1, 12))
+    rows = []
+    for flips in [0, 1, 2, 3, 5]:
+        r = np.zeros(12)
+        r[:flips] = 1.0
+        rows.append(r)
+    stored = jnp.asarray(np.stack(rows))
+    idx, mask = sim.query(sim.write(stored), base)
+    got = set(np.where(np.asarray(mask[0]) > 0)[0].tolist())
+    assert got == {0, 1, 2}  # hamming distance <= 2
+
+
+def test_threshold_hpartition_without_adder_raises():
+    cfg = make_cfg(distance="hamming", match="threshold", k=1, bits=1,
+                   rows=4, cols=4, h_merge="and", v_merge="gather")
+    cfg = cfg.replace(circuit=dict(cell_type="tcam", sensing="threshold"))
+    sim = CAMASim(cfg)
+    stored = jnp.zeros((4, 8))   # nh = 2 > 1
+    with pytest.raises(ValueError, match="no AND/voting merge"):
+        sim.query(sim.write(stored), jnp.zeros((1, 8)))
+
+
+# ---------------------------------------------------------------------------
+# padding / partition invariance (property)
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 30), st.integers(2, 20), st.integers(2, 16),
+       st.integers(2, 16), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_partition_invariance(K, N, rows, cols, seed):
+    """Best-match result is independent of the subarray tiling."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (K, N))
+    q = jax.random.uniform(k2, (2, N))
+
+    def run(r, c):
+        cfg = make_cfg(distance="l1", match="best", k=1, bits=0,
+                       rows=r, cols=c)
+        cfg = cfg.replace(circuit=dict(cell_type="acam"))
+        sim = CAMASim(cfg)
+        idx, _ = sim.query(sim.write(stored), q)
+        return np.asarray(idx[:, 0])
+
+    a = run(rows, cols)
+    b = run(K, N)        # single subarray, no partitioning
+    d = np.abs(np.asarray(stored)[None] - np.asarray(q)[:, None]).sum(-1)
+    for i in range(2):
+        assert d[i, a[i]] == pytest.approx(d[i, b[i]], rel=1e-5, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# distances + mapping units
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 6), st.integers(1, 12), st.integers(0, 10 ** 6))
+@settings(max_examples=25, deadline=None)
+def test_distance_axioms(R, C, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (R, C))
+    q = jax.random.uniform(k2, (C,))
+    for name in ("hamming", "l1", "l2"):
+        fn = dist_mod.get_distance(name)
+        d = np.asarray(fn(stored, q))
+        assert (d >= 0).all()
+        d_self = np.asarray(fn(q[None, :], q))
+        assert d_self[0] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_mapping_roundtrip():
+    spec = mapping.grid_spec(K=10, N=12, R=4, C=5)
+    assert (spec.nv, spec.nh) == (3, 3)
+    data = jnp.arange(120.0).reshape(10, 12)
+    grid = mapping.partition_stored(data, spec)
+    assert grid.shape == (3, 3, 4, 5)
+    # reassemble and compare
+    back = grid.transpose(0, 2, 1, 3).reshape(spec.padded_K, spec.padded_N)
+    np.testing.assert_array_equal(np.asarray(back[:10, :12]),
+                                  np.asarray(data))
+    cv = mapping.col_valid_mask(spec)
+    rv = mapping.row_valid_mask(spec)
+    assert cv.sum() == 12 and rv.sum() == 10
+
+
+# ---------------------------------------------------------------------------
+# variation + sensing limit behaviour
+# ---------------------------------------------------------------------------
+def test_d2d_variation_is_write_time_only():
+    cfg = make_cfg(variation="d2d", std=0.3)
+    sim = CAMASim(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (20, 16))
+    s1 = sim.write(stored, key=jax.random.PRNGKey(1))
+    s2 = sim.write(stored, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(s1.grid), np.asarray(s2.grid))
+    s3 = sim.write(stored, key=jax.random.PRNGKey(2))
+    assert np.abs(np.asarray(s1.grid) - np.asarray(s3.grid)).max() > 0
+
+
+def test_c2c_variation_changes_between_queries():
+    cfg = make_cfg(variation="c2c", std=0.5, k=1)
+    sim = CAMASim(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (30, 16))
+    state = sim.write(stored)
+    q = jnp.tile(jax.random.uniform(jax.random.PRNGKey(1), (1, 16)), (8, 1))
+    idx, _ = sim.query(state, q, key=jax.random.PRNGKey(2))
+    # identical queries under per-cycle noise need not agree everywhere
+    # (statistically, with std=0.5 LSB some flip); at minimum: valid output
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < 32)).all()
+
+
+def test_exper_variation_table():
+    table = tuple([0.0] * 7 + [5.0])   # only top level is noisy
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=1,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet", variation="d2d",
+                            variation_spec="exper", exper_table=table))
+    sim = CAMASim(cfg)
+    stored = jnp.zeros((4, 8)).at[2].set(1.0)   # row 2 quantizes to level 7
+    state = sim.write(stored, key=jax.random.PRNGKey(3))
+    g = np.asarray(state.grid).reshape(-1, 8)
+    assert np.abs(g[2] - 7.0).max() > 0.5       # noisy level
+    assert np.abs(g[0] - 0.0).max() < 1e-6      # quiet level
+
+
+def test_sensing_limit_widens_match_set():
+    cfg0 = make_cfg(distance="l2", match="best", k=4, bits=0, sl=0.0)
+    cfg1 = make_cfg(distance="l2", match="best", k=4, bits=0, sl=10.0)
+    cfg0 = cfg0.replace(circuit=dict(cell_type="acam"))
+    cfg1 = cfg1.replace(circuit=dict(cell_type="acam"))
+    stored = jnp.asarray([[0.0] * 8, [0.1] * 8, [0.2] * 8, [5.0] * 8])
+    q = jnp.zeros((1, 8))
+    # with a huge SL, the sense amp can't distinguish close rows: for
+    # voting-free config the match mask from sense() includes more rows.
+    from repro.core.functional import FunctionalSimulator
+    import jax as _jax
+    f0, f1 = FunctionalSimulator(cfg0), FunctionalSimulator(cfg1)
+    st0, st1 = f0.write(stored), f1.write(stored)
+    _, m0 = f0.query(st0, q)
+    _, m1 = f1.query(st1, q)
+    assert np.asarray(m1).sum() >= np.asarray(m0).sum()
+
+
+def test_config_json_roundtrip():
+    cfg = make_cfg(variation="both", std=0.1)
+    s = cfg.to_json()
+    cfg2 = CAMConfig.from_json(s)
+    assert cfg == cfg2
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        AppConfig(distance="cosine")
+    with pytest.raises(ValueError):
+        make_cfg(match="exact", h_merge="voting").validate()
+    with pytest.raises(ValueError):
+        make_cfg(match="best", v_merge="gather").validate()
+
+
+# ---------------------------------------------------------------------------
+# ACAM range matching (X-TIME-style)
+# ---------------------------------------------------------------------------
+def test_acam_range_exact_match():
+    cfg = CAMConfig(
+        app=AppConfig(distance="range", match_type="exact", match_param=4,
+                      data_bits=0),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=4, cols=4, cell_type="acam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"))
+    lo = jnp.asarray([[0, 0, 0, 0, 0, 0],
+                      [0.5, 0, 0, 0, 0, 0],
+                      [0, 0, 0.8, 0, 0, 0]], jnp.float32)
+    hi = jnp.asarray([[1, 1, 1, 1, 1, 1],
+                      [1, 0.4, 1, 1, 1, 1],
+                      [1, 1, 1, 1, 1, 0.2]], jnp.float32)
+    sim = CAMASim(cfg)
+    state = sim.write(jnp.stack([lo, hi], axis=-1))
+    q = jnp.asarray([[0.6, 0.3, 0.9, 0.5, 0.5, 0.1],
+                     [0.4, 0.5, 0.5, 0.5, 0.5, 0.5]])
+    _, mask = sim.query(state, q)
+    assert set(np.where(np.asarray(mask[0]) > 0)[0]) == {0, 1, 2}
+    assert set(np.where(np.asarray(mask[1]) > 0)[0]) == {0}
+
+
+@given(st.integers(4, 20), st.integers(3, 10), st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_acam_range_match_property(K, N, seed):
+    """A query strictly inside a row's ranges always matches it; a query
+    strictly outside one cell's range never matches that row."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    lo = jax.random.uniform(k1, (K, N), minval=0.0, maxval=0.4)
+    hi = lo + 0.2 + jax.random.uniform(k2, (K, N)) * 0.4
+    cfg = CAMConfig(
+        app=AppConfig(distance="range", match_type="exact",
+                      match_param=1, data_bits=0),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=4, cols=4, cell_type="acam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"))
+    sim = CAMASim(cfg)
+    state = sim.write(jnp.stack([lo, hi], axis=-1))
+    mid = (lo[2] + hi[2]) / 2.0
+    _, mask = sim.query(state, mid[None])
+    assert np.asarray(mask[0])[2] > 0
+    outside = mid.at[0].set(hi[2, 0] + 1.0)
+    _, mask2 = sim.query(state, outside[None])
+    assert np.asarray(mask2[0])[2] == 0

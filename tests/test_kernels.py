@@ -1,0 +1,172 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# cam_search
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nv,nh,R,C", [
+    (1, 1, 8, 16), (3, 2, 32, 64), (2, 4, 16, 128), (4, 1, 64, 64),
+    (1, 3, 128, 32)])
+@pytest.mark.parametrize("distance", ["hamming", "l1", "l2", "dot"])
+def test_cam_search_shapes(nv, nh, R, C, distance):
+    key = jax.random.PRNGKey(nv * 100 + nh)
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (nv, nh, R, C))
+    q = jax.random.uniform(k2, (nh, C))
+    got = ops.cam_search(stored, q, distance=distance)
+    want = ref.cam_search_ref(stored, q, distance)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cam_search_dtypes(dtype):
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (2, 2, 16, 32)
+                                ).astype(dtype)
+    q = jax.random.uniform(jax.random.PRNGKey(1), (2, 32)).astype(dtype)
+    got = ops.cam_search(stored, q, distance="l2")
+    want = ref.cam_search_ref(stored.astype(jnp.float32),
+                              q.astype(jnp.float32), "l2")
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_cam_search_col_valid():
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (2, 2, 8, 16))
+    q = jax.random.uniform(jax.random.PRNGKey(1), (2, 16))
+    cv = jnp.ones((2, 16)).at[1, 10:].set(0.0)
+    got = ops.cam_search(stored, q, distance="l1", col_valid=cv)
+    want = ref.cam_search_ref(stored, q, "l1", cv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 5),
+       st.integers(0, 10 ** 6))
+@settings(max_examples=15, deadline=None)
+def test_cam_search_batched_property(nv, nh, Q, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (nv, nh, 8, 16))
+    qb = jax.random.uniform(k2, (Q, nh, 16))
+    got = ops.cam_search(stored, qb, distance="l2")
+    for i in range(Q):
+        np.testing.assert_allclose(
+            np.asarray(got[i]),
+            np.asarray(ref.cam_search_ref(stored, qb[i], "l2")),
+            rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cam_topk
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,D,k,chunk", [
+    (256, 32, 4, 64), (1024, 64, 16, 256), (512, 16, 1, 128),
+    (1000, 48, 8, 256), (128, 128, 128, 128)])
+@pytest.mark.parametrize("distance", ["dot", "l2"])
+def test_cam_topk_shapes(S, D, k, chunk, distance):
+    key = jax.random.PRNGKey(S + D)
+    k1, k2 = jax.random.split(key)
+    keys = jax.random.normal(k1, (S, D))
+    q = jax.random.normal(k2, (D,))
+    v, i = ops.cam_topk(keys, q, k=k, chunk=chunk, distance=distance)
+    rv, ri = ref.cam_topk_ref(keys, q, k, distance)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv),
+                               rtol=1e-4, atol=1e-4)
+    # indices must agree where scores are distinct
+    assert set(np.asarray(i).tolist()) == set(np.asarray(ri).tolist())
+
+
+def test_cam_topk_valid_len():
+    keys = jnp.concatenate([jnp.zeros((10, 8)),
+                            jnp.ones((6, 8)) * 100])  # big scores at end
+    q = jnp.ones((8,))
+    v, i = ops.cam_topk(keys, q, k=4, chunk=8, distance="dot", valid_len=10)
+    assert (np.asarray(i) < 10).all()
+
+
+def test_cam_topk_batched():
+    keys = jax.random.normal(jax.random.PRNGKey(0), (3, 256, 32))
+    q = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    v, i = ops.cam_topk(keys, q, k=8, chunk=64)
+    for b in range(3):
+        rv, ri = ref.cam_topk_ref(keys[b], q[b], 8, "dot")
+        np.testing.assert_allclose(np.asarray(v[b]), np.asarray(rv),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hamming_pack
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 200), st.integers(1, 130), st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_hamming_packed_property(R, C, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    bits = (jax.random.uniform(k1, (R, C)) > 0.5).astype(jnp.float32)
+    qbits = (jax.random.uniform(k2, (C,)) > 0.5).astype(jnp.float32)
+    sp, qp = ops.pack_bits(bits), ops.pack_bits(qbits)
+    got = ops.hamming_packed(sp, qp, n_valid_bits=C)
+    want = np.asarray((bits != qbits[None, :]).sum(-1))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_hamming_packed_ternary_dont_care():
+    bits = jnp.asarray([[1., 0., 1., 0.], [1., 1., 1., 1.]])
+    qbits = jnp.asarray([1., 1., 0., 0.])
+    care = jnp.asarray([1., 0., 1., 1.])    # column 1 is don't-care
+    sp = ops.pack_bits(bits, care=jnp.broadcast_to(care, bits.shape))
+    qp = ops.pack_bits(qbits, care=care)
+    got = np.asarray(ops.hamming_packed(sp, qp, n_valid_bits=4))
+    # row0: mismatch at col2 only (col1 ignored) -> 1
+    # row1: mismatch at col2? stored=1 q=0 -> 1; col3: 1 vs 0 -> 1 => 2
+    np.testing.assert_array_equal(got, [1, 2])
+
+
+def test_pack_bits_matches_ref():
+    bits = (jax.random.uniform(jax.random.PRNGKey(0), (5, 70)) > 0.5
+            ).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(ops.pack_bits(bits)),
+                                  np.asarray(ref.pack_bits_ref(bits)))
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,KVH,D,qt,kt", [
+    (2, 128, 4, 2, 32, 32, 64), (1, 256, 8, 8, 16, 64, 64),
+    (2, 64, 6, 2, 64, 64, 32), (1, 128, 2, 1, 128, 128, 128)])
+def test_flash_attention_pallas(B, S, H, KVH, D, qt, kt):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import naive_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, KVH, D))
+    v = jax.random.normal(k3, (B, S, KVH, D))
+    got = flash_attention_pallas(q, k, v, q_tile=qt, kv_tile=kt,
+                                 interpret=True)
+    want = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_pallas_noncausal():
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.models.attention import naive_attention
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (1, 64, 4, 32))
+    k = jax.random.normal(k2, (1, 64, 4, 32))
+    v = jax.random.normal(k3, (1, 64, 4, 32))
+    got = flash_attention_pallas(q, k, v, q_tile=32, kv_tile=32,
+                                 causal=False, interpret=True)
+    want = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)

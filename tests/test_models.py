@@ -1,0 +1,157 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step + one
+decode step on CPU, asserting output shapes and no NaNs.  Also the
+decode==train consistency check and flash==naive attention equivalence.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import ARCH_IDS, get_config
+import repro.models.layers as L
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+    return {"embeds": jax.random.normal(KEY, (B, S, cfg.d_model),
+                                        jnp.bfloat16),
+            "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = models.init_params(KEY, cfg)
+    B, S = 2, 32
+    loss, metrics = jax.jit(
+        lambda p, b: models.loss_fn(p, cfg, b))(params, _batch(cfg, B, S))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    # one optimizer step too: full train_step path
+    from repro.optim import AdamW, constant
+    from repro.runtime import init_state, make_train_step
+    opt = AdamW(lr=constant(1e-3))
+    state = init_state(KEY, cfg, opt)
+    state2, m = jax.jit(make_train_step(cfg, opt))(state,
+                                                   _batch(cfg, B, S))
+    assert int(state2.step) == 1
+    assert bool(jnp.isfinite(m["loss"]))
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state.params, state2.params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = models.init_params(KEY, cfg)
+    B, S = 2, 16
+    cache = models.init_cache(cfg, B, S)
+    if cfg.input_mode == "tokens":
+        inputs = {"token": jnp.zeros((B,), jnp.int32)}
+    else:
+        inputs = {"embed": jnp.zeros((B, cfg.d_model), jnp.bfloat16)}
+    logits, cache2 = jax.jit(
+        lambda p, i, po, c: models.forward_decode(p, cfg, i, po, c)
+    )(params, inputs, jnp.zeros((B,), jnp.int32), cache)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    # cache structure preserved
+    jax.tree_util.tree_map(lambda a, b: None, cache, cache2)
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "minicpm3-4b",
+                                  "mamba2-2.7b", "zamba2-7b"])
+def test_decode_matches_train_f32(arch):
+    cfg = get_config(arch).reduced().replace(
+        cam_attention=False, remat=False, dtype="float32",
+        cache_dtype="float32")
+    spec = models.model_specs(cfg)
+    spec = L.tree_map_specs(
+        lambda p: dataclasses.replace(p, dtype=jnp.float32), spec)
+    params = L.init_params(KEY, spec)
+    B, S = 2, 8
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    lt = models.forward_train(params, cfg, {"tokens": toks,
+                                            "labels": toks})
+    cache = models.init_cache(cfg, B, S)
+    dec = jax.jit(lambda p, i, po, c: models.forward_decode(p, cfg, i,
+                                                            po, c))
+    for t in range(S):
+        lg, cache = dec(params, {"token": toks[:, t]},
+                        jnp.full((B,), t, jnp.int32), cache)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(lt[:, t]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "mamba2-2.7b",
+                                  "zamba2-7b"])
+def test_prefill_matches_decode(arch):
+    cfg = get_config(arch).reduced().replace(
+        cam_attention=False, remat=False, dtype="float32",
+        cache_dtype="float32")
+    spec = models.model_specs(cfg)
+    spec = L.tree_map_specs(
+        lambda p: dataclasses.replace(p, dtype=jnp.float32), spec)
+    params = L.init_params(KEY, spec)
+    B, S = 2, 8
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits_pf, cache_pf = models.forward_prefill(params, cfg,
+                                                 {"tokens": toks})
+    cache = models.init_cache(cfg, B, S)
+    for t in range(S):
+        lg, cache = models.forward_decode(params, cfg,
+                                          {"token": toks[:, t]},
+                                          jnp.full((B,), t, jnp.int32),
+                                          cache)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_pf),
+                               rtol=1e-4, atol=1e-5)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-3, atol=1e-4), cache, cache_pf)
+
+
+def test_flash_equals_naive_attention():
+    from repro.models.attention import flash_attention, naive_attention
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 128, 8, 32))
+    k = jax.random.normal(k2, (2, 128, 2, 32))
+    v = jax.random.normal(k3, (2, 128, 2, 16))   # Dv != Dk
+    a = flash_attention(q, k, v, q_chunk=32, kv_chunk=64)
+    b = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_param_counts_close_to_published():
+    # full configs should land near the published sizes
+    expected = {
+        "qwen2-1.5b": 1.5e9, "granite-8b": 8e9, "granite-20b": 20e9,
+        "minicpm3-4b": 4e9, "deepseek-moe-16b": 16e9,
+        # the ASSIGNED moonshot config (48L x 64 experts x d_ff 1408) sums
+        # to ~30B total; the HF model of that name is shallower — we
+        # implement the assignment as written (active params ~4B)
+        "moonshot-v1-16b-a3b": 29.7e9, "chameleon-34b": 34e9,
+        "mamba2-2.7b": 2.7e9, "zamba2-7b": 7e9,
+    }
+    for arch, want in expected.items():
+        cfg = get_config(arch)
+        got = cfg.n_params()
+        assert 0.6 * want < got < 1.45 * want, (arch, got, want)
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.active_params() < 0.35 * cfg.n_params()

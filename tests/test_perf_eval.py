@@ -1,0 +1,91 @@
+"""Performance evaluator: Table IV calibration + structural properties."""
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CAMASim, estimate_arch, predict_search, predict_write
+from repro.core.validation import TARGETS
+
+
+@pytest.mark.parametrize("target", TARGETS, ids=lambda t: t.name)
+def test_table4_within_8pct(target):
+    sim = CAMASim(target.config)
+    sim.write(jnp.zeros((target.K, target.N)))
+    perf = sim.eval_perf(ops_per_query=target.ops_per_query,
+                         clock_hz=target.clock_hz)
+    assert perf["latency_ns"] == pytest.approx(target.sim_latency_ns,
+                                               rel=0.08)
+    assert perf["energy_pj"] == pytest.approx(target.sim_energy_pj,
+                                              rel=0.08)
+
+
+def test_arch_estimation_counts():
+    from repro.core.validation import DRL, HDC, MANN
+    for t, n_sub in ((DRL, 64), (MANN, 8), (HDC, 16)):
+        arch = estimate_arch(t.config, t.K, t.N)
+        assert arch.n_subarrays == n_sub, (t.name, arch.n_subarrays)
+
+
+@given(st.integers(8, 256), st.integers(8, 256), st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_latency_monotone_in_subarray_size(rows, cols, i):
+    """Bigger subarrays -> longer search (parasitics; paper §IV-B1)."""
+    t = TARGETS[i % len(TARGETS)]
+    cfg1 = t.config.replace(circuit=dict(rows=rows, cols=cols))
+    cfg2 = t.config.replace(circuit=dict(rows=rows, cols=cols * 2))
+    a1 = estimate_arch(cfg1, rows, cols)
+    a2 = estimate_arch(cfg2, rows, cols * 2)
+    p1 = predict_search(cfg1, a1)
+    p2 = predict_search(cfg2, a2)
+    assert p2.latency_ns > p1.latency_ns
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_energy_scales_with_store_size(mult):
+    """More stored entries -> proportionally more subarrays -> energy."""
+    from repro.core.validation import MANN
+    cfg = MANN.config
+    K, N = 32, 512
+    a1 = estimate_arch(cfg, K, N)
+    a2 = estimate_arch(cfg, K * mult, N)
+    p1 = predict_search(cfg, a1)
+    p2 = predict_search(cfg, a2)
+    assert p2.energy_pj >= p1.energy_pj
+    assert a2.n_subarrays == a1.n_subarrays * mult
+
+
+def test_write_perf_positive_and_serial_in_rows():
+    from repro.core.validation import MANN
+    cfg = MANN.config
+    a = estimate_arch(cfg, 32, 512)
+    w = predict_write(cfg, a)
+    assert w.latency_ns > 0 and w.energy_pj > 0
+    cfg2 = cfg.replace(circuit=dict(rows=64))
+    a2 = estimate_arch(cfg2, 64, 512)
+    w2 = predict_write(cfg2, a2)
+    assert w2.latency_ns > w.latency_ns
+
+
+def test_area_includes_peripherals():
+    from repro.core.validation import HDC
+    arch = estimate_arch(HDC.config, HDC.K, HDC.N)
+    p = predict_search(HDC.config, arch)
+    sub_area = p.breakdown["subarray"]["area_um2"]
+    assert p.area_um2 > sub_area  # peripherals + interconnect add area
+
+
+def test_unknown_device_raises():
+    from repro.core.perf.devices import get_cell_model
+    with pytest.raises(KeyError):
+        get_cell_model("unobtainium", "tcam", 1)
+
+
+def test_register_custom_cell_model():
+    from repro.core.perf.devices import (CellModel, get_cell_model,
+                                         register_cell_model)
+    m = CellModel(t_base=1, t_wl=0, t_ml=0, t_sa=0, e_cell=1, e_pre=0,
+                  e_sa=0, t_wr_row=1, e_wr_cell=1, a_cell=1, a_sa=0,
+                  a_drv=0)
+    register_cell_model("cmos", "mcam", 4, m)
+    assert get_cell_model("cmos", "mcam", 4) is m

@@ -1,0 +1,271 @@
+"""Runtime: checkpoint/restart, fault supervision, elastic re-shard,
+gradient compression, sharding resolver, data pipeline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import committed_steps, restore, save
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.optim import (AdamW, constant, dequantize_int8, ef_compress,
+                         init_error_state, quantize_int8)
+from repro.runtime import (ShardingRules, init_state, make_train_step,
+                           state_axes)
+from repro.runtime.fault import StepFailure, Supervisor
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4), jnp.bfloat16),
+                                         "d": jnp.int32(7)}}
+    save(str(tmp_path), 5, tree)
+    step, back = restore(str(tmp_path), tree)
+    assert step == 5
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x, np.float32), np.asarray(y, np.float32)),
+        tree, back)
+
+
+def test_checkpoint_keep_n_and_commit_marker(tmp_path):
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        save(str(tmp_path), s, tree, keep=2)
+    assert committed_steps(str(tmp_path)) == [3, 4]
+    # torn checkpoint (no marker) is ignored
+    os.makedirs(tmp_path / "step_00000009")
+    assert committed_steps(str(tmp_path)) == [3, 4]
+    step, _ = restore(str(tmp_path), tree)
+    assert step == 4
+
+
+def test_checkpoint_structure_mismatch_rejected(tmp_path):
+    save(str(tmp_path), 1, {"a": jnp.zeros(2)})
+    with pytest.raises(ValueError, match="structure mismatch"):
+        restore(str(tmp_path), {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# fault supervision (injected failures + stragglers)
+# ---------------------------------------------------------------------------
+def test_supervisor_restart_resumes_from_checkpoint(tmp_path):
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        return {"v": state["v"] + batch}, {"loss": state["v"]}
+
+    def batch_fn(step):
+        return jnp.float32(1.0)
+
+    fail_at = {12}
+
+    def fault_hook(step):
+        if step in fail_at and calls["n"] < 50:
+            fail_at.discard(step)
+            raise StepFailure("injected node failure")
+        calls["n"] += 1
+
+    sup = Supervisor(step_fn=step_fn, batch_fn=batch_fn,
+                     ckpt_dir=str(tmp_path), ckpt_every=5,
+                     fault_hook=fault_hook)
+    final_step, state = sup.run({"v": jnp.float32(0.0)}, 0, 20)
+    assert final_step == 20
+    assert sup.restarts == 1
+    assert any(e.startswith("restore@") for e in sup.events)
+    # deterministic data => same final value as a clean run
+    assert float(state["v"]) == 20.0
+
+
+def test_supervisor_straggler_detection(tmp_path):
+    import time as _t
+    times = iter([0.01] * 10 + [0.3] + [0.01] * 5)
+
+    def step_fn(state, batch):
+        _t.sleep(next(times, 0.01))
+        return state, {}
+
+    sup = Supervisor(step_fn=step_fn, batch_fn=lambda s: None,
+                     ckpt_dir=str(tmp_path), ckpt_every=100,
+                     straggler_factor=3.0)
+    sup.run({}, 0, 16)
+    assert any("straggler@" in e for e in sup.events)
+
+
+# ---------------------------------------------------------------------------
+# elastic re-shard (checkpoint written on one mesh, restored on another)
+# ---------------------------------------------------------------------------
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    from repro.runtime import elastic
+    cfg = get_config("qwen2-1.5b").reduced()
+    opt = AdamW(lr=constant(1e-3))
+    state = init_state(KEY, cfg, opt)
+    save(str(tmp_path), 3, state)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    step, restored = elastic.elastic_restore(
+        str(tmp_path), state, state_axes(cfg), mesh)
+    assert step == 3
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)),
+        state.params, restored.params)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_int8_quantization_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 3.0
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+def test_error_feedback_converges():
+    """EF compression: the running mean of dequantized grads approaches
+    the true mean (bias -> 0 over steps)."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    err = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        q, s, err = ef_compress(g, err)
+        total = total + dequantize_int8(q, s)
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g),
+                               atol=2e-3)
+
+
+def test_compressed_psum_shard_map():
+    devs = jax.devices()
+    mesh = jax.make_mesh((len(devs),), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+    from repro.optim import compressed_psum
+
+    grads = {"w": jax.random.normal(KEY, (8, 16))}
+    errs = init_error_state(grads)
+
+    def body(g, e):
+        return compressed_psum(g, e, "data")
+
+    out, new_err = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))(
+        grads, errs)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(grads["w"]), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# sharding resolver
+# ---------------------------------------------------------------------------
+def _mesh_16x16_abstract():
+    # AbstractMesh-like resolution check without devices: use a tiny mesh
+    # and a fake big one via spec_for's pure math (mesh only provides
+    # axis names and sizes, so we use jax.sharding.AbstractMesh).
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_resolver_divisibility_fallback():
+    rules = ShardingRules()
+    mesh = _mesh_16x16_abstract()
+    # 12 heads on model=16: must NOT shard
+    spec = rules.spec_for((1536, 12, 128),
+                          ("embed", "heads", "head_dim"), mesh)
+    assert spec == jax.sharding.PartitionSpec()
+    # d_ff 8960 shards fine
+    spec = rules.spec_for((1536, 8960), ("embed", "mlp"), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+
+
+def test_resolver_no_double_axis_use():
+    rules = ShardingRules()
+    mesh = _mesh_16x16_abstract()
+    # both dims want 'model': only one (higher priority) gets it
+    spec = rules.spec_for((4096, 4096), ("mlp", "vocab"), mesh)
+    got = [s for s in spec if s is not None]
+    assert got.count("model") <= 1
+
+
+def test_resolver_kv_seq_takes_data_when_batch_cannot():
+    rules = ShardingRules()
+    mesh = _mesh_16x16_abstract()
+    # batch=1 long-context: kv_seq gets model AND data
+    spec = rules.spec_for((36, 1, 524288, 8, 128),
+                          ("layers", "batch", "kv_seq", "kv_heads",
+                           "head_dim"), mesh)
+    flat = []
+    for s in spec:
+        if isinstance(s, tuple):
+            flat += list(s)
+        elif s:
+            flat.append(s)
+    assert "model" in flat and "data" in flat
+
+
+def test_resolver_fsdp_on_params():
+    rules = ShardingRules()
+    mesh = _mesh_16x16_abstract()
+    spec = rules.spec_for((4096, 14336), ("embed", "mlp"), mesh,
+                          fsdp=True)
+    flat = []
+    for s in spec:
+        if isinstance(s, tuple):
+            flat += list(s)
+        elif s:
+            flat.append(s)
+    assert "data" in flat and "model" in flat
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_determinism_and_range():
+    d = SyntheticLM(vocab_size=1000, seq_len=16, global_batch=4, seed=3)
+    b1, b2 = d.batch(7), d.batch(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    assert (np.asarray(b1["tokens"]) < 1000).all()
+    b3 = d.batch(8)
+    assert np.abs(np.asarray(b3["tokens"]) -
+                  np.asarray(b1["tokens"])).max() > 0
+    # restart-from-state reproduces the stream
+    d2 = SyntheticLM.from_state(d.state(7))
+    np.testing.assert_array_equal(np.asarray(d2.batch(7)["tokens"]),
+                                  np.asarray(b1["tokens"]))
+
+
+def test_train_microbatch_equivalence():
+    """Grad accumulation over k microbatches == one big batch (same data)."""
+    cfg = get_config("qwen2-1.5b").reduced().replace(dtype="float32")
+    import dataclasses
+    import repro.models.layers as L
+    from repro import models
+    opt = AdamW(lr=constant(1e-2), clip_norm=None)
+    spec = models.model_specs(cfg)
+    spec = L.tree_map_specs(
+        lambda p: dataclasses.replace(p, dtype=jnp.float32), spec)
+    params = L.init_params(KEY, spec)
+    from repro.runtime.train_loop import TrainState
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt=opt.init(params))
+    data = SyntheticLM(cfg.vocab_size, 16, 8, seed=0)
+    batch = data.batch(0)
+    s1, m1 = jax.jit(make_train_step(cfg, opt))(state, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, opt, microbatch=4))(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=5e-5),
+        s1.params, s2.params)
