@@ -6,11 +6,38 @@ Prints ``name,us_per_call,derived`` CSV per benchmark.  ``--full`` runs the
 larger sweeps (the default is sized for CI).  The dry-run roofline table is
 produced separately by repro.launch.dryrun (512 fake devices) and read back
 here if present.
+
+Every CSV row is also dumped to ``BENCH_kernels.json`` next to the repo
+root, so successive PRs leave a machine-readable perf trajectory.
 """
 from __future__ import annotations
 
+import contextlib
+import io
+import json
+import pathlib
 import sys
 import time
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent /     "BENCH_kernels.json"
+
+
+def _run_and_collect(fn, rows: list) -> None:
+    """Run a benchmark main, echo its stdout, and parse the CSV rows."""
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        fn()
+    text = buf.getvalue()
+    print(text, end="")
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3:
+            name, us, derived = parts
+            try:
+                rows.append({"name": name, "us_per_call": float(us),
+                             "derived": derived})
+            except ValueError:
+                pass  # not a CSV row (stray print)
 
 
 def main() -> None:
@@ -18,38 +45,46 @@ def main() -> None:
     from . import (fig4_sweep, fig5_nonidealities, kernel_bench,
                    table4_validation)
 
+    rows: list = []
+
+    def emit(name, us, derived):
+        print(f"{name},{us},{derived}")
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": str(derived)})
+
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
-    table4_validation.main()
-    fig4_sweep.main()
-    fig5_nonidealities.main()
-    kernel_bench.main()
+    _run_and_collect(table4_validation.main, rows)
+    _run_and_collect(fig4_sweep.main, rows)
+    _run_and_collect(fig5_nonidealities.main, rows)
+    _run_and_collect(kernel_bench.main, rows)
 
     # roofline summary (if the dry-run has produced results)
     try:
         from . import roofline_table
-        rows = roofline_table.load("baseline", "single")
-        if rows:
+        cells = roofline_table.load("baseline", "single")
+        if cells:
             bounds = {}
-            for e in rows:
+            for e in cells:
                 b = e["roofline"]["bottleneck"]
                 bounds[b] = bounds.get(b, 0) + 1
-            print(f"dryrun_cells_single,0,"
-                  f"n={len(rows)}_bottlenecks={bounds}")
-        rows_m = roofline_table.load("baseline", "multi")
-        if rows_m:
-            print(f"dryrun_cells_multi,0,n={len(rows_m)}")
+            emit("dryrun_cells_single", 0,
+                 f"n={len(cells)}_bottlenecks={bounds}")
+        cells_m = roofline_table.load("baseline", "multi")
+        if cells_m:
+            emit("dryrun_cells_multi", 0, f"n={len(cells_m)}")
     except Exception as e:  # pragma: no cover
-        print(f"dryrun_cells,0,unavailable({e})")
+        emit("dryrun_cells", 0, f"unavailable({e})")
 
     if full:
         res = fig4_sweep.run()
-        tr = fig4_sweep.check_trends(res)
-        print(f"fig4_full,0,{tr}")
+        emit("fig4_full", 0, fig4_sweep.check_trends(res))
         out = fig5_nonidealities.run()
-        print(f"fig5_full,0,{fig5_nonidealities.check_trends(out)}")
-    print(f"total_wall_s,{(time.perf_counter()-t0)*1e6:.0f},"
-          f"{time.perf_counter()-t0:.1f}s")
+        emit("fig5_full", 0, fig5_nonidealities.check_trends(out))
+    emit("total_wall_s", round((time.perf_counter() - t0) * 1e6),
+         f"{time.perf_counter() - t0:.1f}s")
+    BENCH_JSON.write_text(json.dumps(rows, indent=1))
+    print(f"bench_json,0,rows={len(rows)}_path={BENCH_JSON.name}")
 
 
 if __name__ == "__main__":

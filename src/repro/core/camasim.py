@@ -19,10 +19,12 @@ from .perf import (ArchSpecifics, PerfResult, estimate_arch, predict_search,
 
 
 class CAMASim:
-    def __init__(self, config: CAMConfig, use_kernel: bool = False):
+    def __init__(self, config: CAMConfig, use_kernel: bool = False,
+                 c2c_query_tile: int = 1):
         config.validate()
         self.config = config
-        self.functional = FunctionalSimulator(config, use_kernel=use_kernel)
+        self.functional = FunctionalSimulator(config, use_kernel=use_kernel,
+                                              c2c_query_tile=c2c_query_tile)
         self._arch: Optional[ArchSpecifics] = None
         self._KN: Optional[Tuple[int, int]] = None
 

@@ -6,8 +6,22 @@ Query:  query data --quantize(shared scale)--> segments; per query cycle the
         CAM data sees fresh C2C noise; each subarray searches in parallel;
         merge produces application-level match indices.
 
-Everything is jit-able; queries are processed as a batch (vmapped over the
-query axis) which is exactly the CAM usage model: store once, search many.
+Everything is jit-able.  Queries follow the CAM usage model — store once,
+search many — as ONE fused batched search: the whole (Q, nh, C) segment
+block is evaluated against the resident grid in a single
+``subarray_query_batched`` call (on the kernel path that is one Pallas pass
+that streams each stored tile from HBM once for the entire batch, with the
+sense amplifier fused in), then one batched merge.  The per-query vmap of
+the old pipeline — which re-streamed the full (nv, nh, R, C) grid once per
+query and re-traced the sense/merge stages Q times — is gone.
+
+C2C variation is the one place a per-cycle axis survives: each search cycle
+must see fresh array noise, so the batch is processed as a vmap over
+Q-tiles of ``c2c_query_tile`` cycles, drawing one noise instance per
+tile (a tile models the queries issued within one search cycle).  The
+default tile of 1 reproduces the historical per-query noise draw
+bit-exactly; larger tiles trade noise granularity for amortizing the noisy
+grid construction and search across the tile.
 """
 from __future__ import annotations
 
@@ -44,10 +58,14 @@ jax.tree_util.register_pytree_node(
 class FunctionalSimulator:
     """Automated in-memory search simulation (accuracy path of CAMASim)."""
 
-    def __init__(self, config: CAMConfig, use_kernel: bool = False):
+    def __init__(self, config: CAMConfig, use_kernel: bool = False,
+                 c2c_query_tile: int = 1):
         config.validate()
         self.config = config
         self.use_kernel = use_kernel
+        if c2c_query_tile < 1:
+            raise ValueError("c2c_query_tile must be >= 1")
+        self.c2c_query_tile = c2c_query_tile
 
     # ------------------------------------------------------------- write
     def write(self, stored: jax.Array, key: Optional[jax.Array] = None
@@ -104,21 +122,39 @@ class FunctionalSimulator:
             queries, cfg.circuit.cell_type, bits, state.lo, state.hi)
         qseg = mapping.partition_query(qcodes, state.spec)   # (Q, nh, C)
 
-        c2c = cfg.device.variation in ("c2c", "both")
-        if c2c:
-            keys = variation.split_for_queries(key, queries.shape[0])
+        if cfg.device.variation not in ("c2c", "both"):
+            # store once, search many: one fused batched pass
+            return self._search_batch(state.grid, qseg, state)
 
-            def one(q, k):
-                g = variation.apply_c2c(state.grid, cfg.device, bits, k)
-                return self._search_one(g, q, state)
-            return jax.vmap(one)(qseg, keys)
-        # no per-query noise: broadcast the query batch through the grid
-        return jax.vmap(lambda q: self._search_one(state.grid, q, state)
-                        )(qseg)
+        # C2C: fresh array noise per search cycle; one Q-tile per cycle.
+        # All cycle noises are drawn in one batched primitive and the cycles
+        # run as a vmap (parallel, like the old per-query pipeline) — the
+        # memory high-water mark (n_tiles noisy grids) matches the old path
+        # at the default tile of 1 and shrinks as the tile grows.
+        Q = qseg.shape[0]
+        tile = min(self.c2c_query_tile, Q)
+        pad = (-Q) % tile
+        qt = jnp.pad(qseg, ((0, pad), (0, 0), (0, 0)))
+        n_tiles = qt.shape[0] // tile
+        qt = qt.reshape(n_tiles, tile, *qseg.shape[1:])
+        keys = variation.split_for_queries(key, n_tiles)
+        noisy = variation.apply_c2c_batched(state.grid, cfg.device, bits,
+                                            keys)
 
-    def _search_one(self, grid, qseg, state: CAMState):
+        idx, mask = jax.vmap(
+            lambda g, q: self._search_batch(g, q, state))(noisy, qt)
+        idx = idx.reshape(n_tiles * tile, *idx.shape[2:])[:Q]
+        mask = mask.reshape(n_tiles * tile, *mask.shape[2:])[:Q]
+        return idx, mask
+
+    def _search_batch(self, grid, qseg, state: CAMState):
+        """One fused batched search + merge over a (Q, nh, C) block."""
         cfg = self.config
-        dist, match = subarray.subarray_query(
+        # the AND merge consumes match lines only; the fused kernel then
+        # skips the (Q, nv, nh, R) distance write-back entirely
+        need_dist = not (cfg.app.match_type in ("exact", "threshold")
+                         and cfg.arch.h_merge == "and")
+        dist, match = subarray.subarray_query_batched(
             grid, qseg,
             distance=cfg.app.distance,
             sensing=cfg.circuit.sensing,
@@ -127,7 +163,8 @@ class FunctionalSimulator:
             if cfg.app.match_type == "threshold" else 0.0,
             col_valid=state.col_valid,
             row_valid=state.row_valid,
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel,
+            want_dist=need_dist)
         k = cfg.app.match_param if cfg.app.match_type == "best" else max(
             1, min(state.spec.padded_K, 16))
         return merge.merge(

@@ -83,8 +83,12 @@ def merge(dist: jax.Array, match: jax.Array, *, match_type: str,
         match (or first-k matches for exact/threshold), padded with -1.
       * ``mask``    (..., padded_K): 1.0 for every matched entry
         (exact/threshold) or for the top-k set (best).
+
+    ``dist`` may be None on the exact/threshold AND-merge path, which
+    consumes match lines only (the fused kernel then never materializes the
+    distance tensor in HBM).
     """
-    nh = dist.shape[-2]
+    nh = match.shape[-2]
     k = max(1, match_param)
 
     if match_type in ("exact", "threshold"):
@@ -127,7 +131,10 @@ def merge(dist: jax.Array, match: jax.Array, *, match_type: str,
             # (votes are small ints — exactly representable in f32).
             total = h_merge_adder(dist)
             finite = jnp.isfinite(total)
-            dmax = jnp.max(jnp.where(finite, total, 0.0)) + 1.0
+            # per-query max (last two axes): with a batched (Q, nv, R) total
+            # a global max would couple the queries' tie-break scales
+            dmax = jnp.max(jnp.where(finite, total, 0.0),
+                           axis=(-2, -1), keepdims=True) + 1.0
             norm = jnp.clip(jnp.where(finite, total, dmax) / dmax,
                             0.0, 0.999)
             score = votes - norm

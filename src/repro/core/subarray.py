@@ -98,3 +98,36 @@ def subarray_query(stored: jax.Array, query: jax.Array, *, distance: str,
         dist = jnp.where(rv > 0, dist, jnp.inf)
     match = sense(dist, sensing, sensing_limit, threshold, row_valid)
     return dist, match
+
+
+def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
+                           distance: str, sensing: str, sensing_limit: float,
+                           threshold: float = 0.0,
+                           col_valid: jax.Array | None = None,
+                           row_valid: jax.Array | None = None,
+                           use_kernel: bool = False,
+                           want_dist: bool = True
+                           ) -> Tuple[jax.Array | None, jax.Array]:
+    """Batched subarray search over a (Q, nh, C) query block.
+
+    The store-once / search-many entry point: one call evaluates the whole
+    query batch against the resident grid.  On the kernel path this runs the
+    query-batched Pallas kernel with the sense epilogue fused (distances and
+    match lines produced in a single pass over the stored grid); the jnp
+    path broadcasts the batch through the same ops as ``subarray_query``.
+    ACAM range grids (5-dim stored) have no kernel and always broadcast.
+
+    ``want_dist=False`` (kernel path) skips the distance write-back entirely
+    and returns ``(None, match)`` — for merges that consume match lines only.
+    """
+    if use_kernel and stored.ndim == 4:
+        from repro.kernels import ops as kops
+        out = kops.cam_search_fused(
+            stored, queries, distance=distance, sensing=sensing,
+            sensing_limit=sensing_limit, threshold=threshold,
+            col_valid=col_valid, row_valid=row_valid, want_dist=want_dist)
+        return out if want_dist else (None, out)
+    return subarray_query(stored, queries, distance=distance,
+                          sensing=sensing, sensing_limit=sensing_limit,
+                          threshold=threshold, col_valid=col_valid,
+                          row_valid=row_valid, use_kernel=False)

@@ -53,3 +53,16 @@ def apply_c2c(codes: jax.Array, cfg: DeviceConfig, bits: int,
 def split_for_queries(key: jax.Array, n_queries: int) -> jax.Array:
     """One independent C2C key per query cycle."""
     return jax.random.split(key, n_queries)
+
+
+def apply_c2c_batched(codes: jax.Array, cfg: DeviceConfig, bits: int,
+                      keys: jax.Array) -> jax.Array:
+    """C2C noise for a batch of search cycles in one fused draw.
+
+    keys (T, 2) -> (T, *codes.shape) noisy grids, one per cycle; the noise
+    for all T cycles is generated in a single batched primitive instead of
+    T per-query closures.  Bit-identical to ``apply_c2c`` called per key.
+    """
+    if cfg.variation not in ("c2c", "both"):
+        return jnp.broadcast_to(codes, (keys.shape[0], *codes.shape))
+    return jax.vmap(lambda k: apply_c2c(codes, cfg, bits, k))(keys)

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for CAMASim's compute hot-spots.
 
-  cam_search    — tiled subarray distance search (the CAM array analogue)
+  cam_search    — tiled subarray distance search (the CAM array analogue):
+                  single-query, query-batched (stored grid streamed from HBM
+                  once per batch), and batched+fused-sense variants
   cam_topk      — streaming best-match top-k (winner-take-all SA analogue;
                   hot loop of CAM-retrieval attention)
-  hamming_pack  — bit-packed XOR+popcount TCAM search
+  hamming_pack  — bit-packed XOR+popcount TCAM search (single + batched)
 
 Each kernel ships with a jit'd wrapper (ops.py) and a pure-jnp oracle
 (ref.py); tests sweep shapes/dtypes and assert_allclose against the oracle.

@@ -1,21 +1,56 @@
-"""Pallas TPU kernel: tiled CAM subarray search.
+"""Pallas TPU kernels: tiled CAM subarray search (single-query and batched).
 
 TPU adaptation of the CAM array (DESIGN.md §2): each grid step loads one
 (R, C) subarray tile from HBM into VMEM — the analogue of the data resident
-in a physical CAM array — broadcasts the query segment across the rows on
-the VPU, and reduces along the match-line (column) axis.  The grid iterates
-the (nv, nh) subarray mesh, exactly the partition produced by the mapping
+in a physical CAM array — evaluates the match-line reduction against the
+query segment(s), and reduces along the column axis.  The grid iterates the
+(nv, nh) subarray mesh, exactly the partition produced by the mapping
 submodule.
 
-Block layout (per grid step (i, j)):
+Two kernels:
+
+``cam_search_pallas`` — the original single-query kernel.  Per grid step
+(i, j) it broadcasts one (C,) query segment across the rows on the VPU:
+
     stored    (1, 1, R, C)  VMEM   <- HBM tile (i, j)
-    query     (1, C)        VMEM   <- segment j (revisited across i: stays hot)
+    query     (1, C)        VMEM   <- segment j (revisited across i)
     col_valid (1, C)        VMEM
     out       (1, 1, R)     VMEM   -> dist tile (i, j)
 
-For MXU alignment choose C as a multiple of 128 and R a multiple of 8 where
-possible; unaligned sizes still lower but waste lanes (the circuit-level
-analogue: a partially used subarray).
+``cam_search_batched_pallas`` — the query-batched kernel (store once,
+search many; paper Fig. 1b).  The grid becomes (nv, nh, Q/Qt) with the
+Q-tile axis innermost, so a stored tile's BlockSpec index (i, j) is constant
+across consecutive steps: Pallas keeps the (R, C) tile resident in VMEM and
+each stored tile is streamed from HBM **once per full query batch** instead
+of once per query (the vmap-of-single-query path re-streams the whole grid
+Q times).  Per grid step (i, j, k):
+
+    stored    (1, 1, R, C)  VMEM   <- HBM tile (i, j); resident across k
+    queries   (Qt, 1, C)    VMEM   <- Q-tile k, segment j
+    col_valid (1, C)        VMEM
+    out       (Qt, 1, 1, R) VMEM   -> dist tile (k, i, j)
+
+VMEM working set per step: 4·(R·C + Qt·C + C + Qt·R) bytes (f32).  For the
+default Qt = 32 and a 64×64 subarray that is ~32 KiB — far below the ~16 MiB
+VMEM budget, so Qt can be raised until either the (Qt, C) query tile or the
+(Qt, R) output tile approaches the (R, C) stored tile in size; past that the
+kernel stops being stored-stream-bound and larger tiles buy nothing.
+
+Distance formulation: for ``l2``/``dot`` the batched kernel is shaped for
+the MXU — the cross term is a (Qt, C) × (C, R) matmul and the masked column
+weights are folded into the row/query norms (‖s‖² − 2·S·Qᵀ + ‖q‖², all
+norms computed over valid columns only).  ``l1``/``hamming`` have no matmul
+form and keep the VPU broadcast-compare-reduce path, materializing a
+(Qt, R, C) block in registers.
+
+``cam_search_fused_pallas`` — batched search + fused sense-and-reduce
+epilogue.  The sense-amplifier model of ``core.subarray.sense`` (exact /
+best / threshold) and the intra-subarray winner-take-all reduction
+(min over the R match lines) run inside the kernel while the distance block
+is still in VMEM.  With ``want_dist=False`` only the digital match lines are
+written back, so the (Q, nv, nh, R) float distance tensor never hits HBM —
+this is the common exact/threshold AND-merge path, where the merge consumes
+match lines only.
 """
 from __future__ import annotations
 
@@ -24,6 +59,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+_INF = float("inf")
 
 
 def _dist_block(stored, q, valid, distance: str):
@@ -70,3 +107,165 @@ def cam_search_pallas(stored: jax.Array, query: jax.Array,
         interpret=interpret,
     )(stored.astype(jnp.float32), query.astype(jnp.float32),
       col_valid.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Query-batched kernel
+# ---------------------------------------------------------------------------
+def _dist_block_batched(stored, q, valid, distance: str) -> jax.Array:
+    """stored (R, C), q (Qt, C), valid (C,) -> dist (Qt, R)."""
+    if distance in ("l2", "dot"):
+        # MXU formulation: fold the column mask into one operand so the
+        # cross term is a plain (Qt, C) x (C, R) matmul.
+        qv = q * valid[None, :]
+        cross = jax.lax.dot_general(
+            qv, stored, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (Qt, R)
+        if distance == "dot":
+            return -cross
+        sn = jnp.sum(stored * stored * valid[None, :], axis=-1)   # (R,)
+        qn = jnp.sum(q * qv, axis=-1)                             # (Qt,)
+        return sn[None, :] - 2.0 * cross + qn[:, None]
+    # VPU broadcast path: (Qt, R, C) block in registers.
+    s = stored[None, :, :]
+    qq = q[:, None, :]
+    if distance == "hamming":
+        d = (s != qq).astype(jnp.float32)
+    elif distance == "l1":
+        d = jnp.abs(s - qq)
+    else:
+        raise ValueError(distance)
+    return jnp.sum(d * valid[None, None, :], axis=-1)
+
+
+def _batched_kernel(stored_ref, query_ref, valid_ref, out_ref, *,
+                    distance: str):
+    stored = stored_ref[0, 0]            # (R, C)
+    q = query_ref[:, 0, :]               # (Qt, C)
+    valid = valid_ref[0]                 # (C,)
+    out_ref[:, 0, 0, :] = _dist_block_batched(stored, q, valid, distance)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("distance", "q_tile", "interpret"))
+def cam_search_batched_pallas(stored: jax.Array, queries: jax.Array,
+                              col_valid: jax.Array, *,
+                              distance: str = "l2", q_tile: int = 32,
+                              interpret: bool = False) -> jax.Array:
+    """stored (nv, nh, R, C), queries (Q, nh, C), col_valid (nh, C)
+    -> dist (Q, nv, nh, R).
+
+    The stored grid is streamed from HBM once for the whole query batch
+    (Q-tile axis innermost; see module docstring for the block layout).
+    """
+    nv, nh, R, C = stored.shape
+    Q = queries.shape[0]
+    assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
+    qt = max(1, min(q_tile, Q))
+    pad = (-Q) % qt
+    if pad:
+        queries = jnp.pad(queries, ((0, pad), (0, 0), (0, 0)))
+    nq = (Q + pad) // qt
+    out = pl.pallas_call(
+        functools.partial(_batched_kernel, distance=distance),
+        grid=(nv, nh, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32),
+        interpret=interpret,
+    )(stored.astype(jnp.float32), queries.astype(jnp.float32),
+      col_valid.astype(jnp.float32))
+    return out[:Q]
+
+
+# ---------------------------------------------------------------------------
+# Batched search with fused sense-and-reduce epilogue
+# ---------------------------------------------------------------------------
+def _sense_block(d: jax.Array, rv: jax.Array, sensing: str,
+                 sensing_limit: float, threshold: float) -> jax.Array:
+    """d (Qt, R) distances (inf on invalid rows), rv (R,) -> match (Qt, R)."""
+    if sensing == "exact":
+        m = d <= sensing_limit
+    elif sensing == "best":
+        # intra-subarray winner-take-all: min over the R match lines while
+        # the distance block is still in VMEM
+        m = d <= (jnp.min(d, axis=-1, keepdims=True) + sensing_limit)
+    elif sensing == "threshold":
+        m = d <= (threshold + sensing_limit)
+    else:
+        raise ValueError(sensing)
+    return m.astype(jnp.float32) * rv[None, :]
+
+
+def _fused_kernel(stored_ref, query_ref, valid_ref, rowv_ref, *out_refs,
+                  distance: str, sensing: str, sensing_limit: float,
+                  threshold: float, want_dist: bool):
+    stored = stored_ref[0, 0]            # (R, C)
+    q = query_ref[:, 0, :]               # (Qt, C)
+    valid = valid_ref[0]                 # (C,)
+    rv = rowv_ref[0]                     # (R,)
+    d = _dist_block_batched(stored, q, valid, distance)
+    d = jnp.where(rv[None, :] > 0, d, _INF)   # padding rows never win
+    m = _sense_block(d, rv, sensing, sensing_limit, threshold)
+    if want_dist:
+        out_refs[0][:, 0, 0, :] = d
+        out_refs[1][:, 0, 0, :] = m
+    else:
+        out_refs[0][:, 0, 0, :] = m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("distance", "sensing", "sensing_limit",
+                                    "threshold", "q_tile", "want_dist",
+                                    "interpret"))
+def cam_search_fused_pallas(stored: jax.Array, queries: jax.Array,
+                            col_valid: jax.Array, row_valid: jax.Array, *,
+                            distance: str = "l2", sensing: str = "best",
+                            sensing_limit: float = 0.0,
+                            threshold: float = 0.0, q_tile: int = 32,
+                            want_dist: bool = True,
+                            interpret: bool = False):
+    """Batched search + in-kernel sense amplifier.
+
+    stored (nv, nh, R, C), queries (Q, nh, C), col_valid (nh, C),
+    row_valid (nv, R).
+
+    Returns ``(dist, match)`` each (Q, nv, nh, R) — or ``match`` alone when
+    ``want_dist=False``, in which case the float distance tensor is never
+    written to HBM (exact/threshold AND-merge path).  Distances on padding
+    rows are +inf, matching ``core.subarray.subarray_query``.
+    """
+    nv, nh, R, C = stored.shape
+    Q = queries.shape[0]
+    assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
+    assert row_valid.shape == (nv, R), (row_valid.shape, (nv, R))
+    qt = max(1, min(q_tile, Q))
+    pad = (-Q) % qt
+    if pad:
+        queries = jnp.pad(queries, ((0, pad), (0, 0), (0, 0)))
+    nq = (Q + pad) // qt
+    shape = jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32)
+    spec = pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0))
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, distance=distance, sensing=sensing,
+                          sensing_limit=float(sensing_limit),
+                          threshold=float(threshold), want_dist=want_dist),
+        grid=(nv, nh, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0)),
+            pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((1, R), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=(spec, spec) if want_dist else spec,
+        out_shape=(shape, shape) if want_dist else shape,
+        interpret=interpret,
+    )(stored.astype(jnp.float32), queries.astype(jnp.float32),
+      col_valid.astype(jnp.float32), row_valid.astype(jnp.float32))
+    if want_dist:
+        return out[0][:Q], out[1][:Q]
+    return out[:Q]

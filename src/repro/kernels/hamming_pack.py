@@ -14,6 +14,11 @@ Grid: row tiles of size ``tile_r``.
     stored (tile_r, W) uint32 VMEM
     query  (1, W)      uint32 VMEM (resident across steps)
     out    (tile_r,)   int32
+
+``hamming_packed_batched_pallas`` batches queries the same way the float
+cam_search kernel does: grid (R/tile_r, Q/q_tile) with the Q-tile axis
+innermost, so each stored (tile_r, W) tile is streamed from HBM once per
+query batch; the (q_tile, tile_r, W) XOR + popcount runs on the VPU.
 """
 from __future__ import annotations
 
@@ -51,3 +56,42 @@ def hamming_packed_pallas(stored_packed: jax.Array,
         out_shape=jax.ShapeDtypeStruct((R,), jnp.int32),
         interpret=interpret,
     )(stored_packed, query_packed[None, :])
+
+
+def _batched_kernel(stored_ref, query_ref, out_ref):
+    s = stored_ref[...]                       # (tile_r, W) uint32
+    q = query_ref[...]                        # (q_tile, W) uint32
+    x = jnp.bitwise_xor(s[None, :, :], q[:, None, :])
+    out_ref[...] = jnp.sum(jax.lax.population_count(x), axis=-1,
+                           dtype=jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_r", "q_tile", "interpret"))
+def hamming_packed_batched_pallas(stored_packed: jax.Array,
+                                  queries_packed: jax.Array, *,
+                                  tile_r: int = 256, q_tile: int = 8,
+                                  interpret: bool = False) -> jax.Array:
+    """stored (R, W) uint32, queries (Q, W) uint32 -> dist (Q, R) int32."""
+    R, W = stored_packed.shape
+    Q = queries_packed.shape[0]
+    assert queries_packed.shape == (Q, W), (queries_packed.shape, (Q, W))
+    tile_r = min(tile_r, R)
+    assert R % tile_r == 0, (R, tile_r)
+    qt = max(1, min(q_tile, Q))
+    pad = (-Q) % qt
+    if pad:
+        queries_packed = jnp.pad(queries_packed, ((0, pad), (0, 0)))
+    nq = (Q + pad) // qt
+    out = pl.pallas_call(
+        _batched_kernel,
+        grid=(R // tile_r, nq),
+        in_specs=[
+            pl.BlockSpec((tile_r, W), lambda r, k: (r, 0)),
+            pl.BlockSpec((qt, W), lambda r, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((qt, tile_r), lambda r, k: (k, r)),
+        out_shape=jax.ShapeDtypeStruct((Q + pad, R), jnp.int32),
+        interpret=interpret,
+    )(stored_packed, queries_packed)
+    return out[:Q]

@@ -1,8 +1,10 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 Each op auto-selects interpret mode off-TPU (this container is CPU-only; on
-a real TPU slice the same call sites compile the Mosaic kernels), pads
-inputs to kernel-friendly shapes, and exposes batched variants via vmap.
+a real TPU slice the same call sites compile the Mosaic kernels) and pads
+inputs to kernel-friendly shapes.  Query batches dispatch to the
+query-batched kernels (one HBM pass over the stored grid per batch);
+``cam_search_vmap`` keeps the old per-query vmap path as a baseline.
 """
 from __future__ import annotations
 
@@ -13,9 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .cam_search import cam_search_pallas
+from .cam_search import (cam_search_batched_pallas, cam_search_fused_pallas,
+                         cam_search_pallas)
 from .cam_topk import cam_topk_pallas
-from .hamming_pack import hamming_packed_pallas
+from .hamming_pack import hamming_packed_batched_pallas, hamming_packed_pallas
 
 
 def _interpret() -> bool:
@@ -27,8 +30,35 @@ def _interpret() -> bool:
 # --------------------------------------------------------------------------
 def cam_search(stored: jax.Array, query: jax.Array, *, distance: str = "l2",
                col_valid: Optional[jax.Array] = None,
+               q_tile: int = 32,
                interpret: Optional[bool] = None) -> jax.Array:
-    """stored (nv, nh, R, C); query (..., nh, C) -> dist (..., nv, nh, R)."""
+    """stored (nv, nh, R, C); query (..., nh, C) -> dist (..., nv, nh, R).
+
+    Batched queries go through the query-batched kernel, which streams the
+    stored grid from HBM once for the whole batch; a single (nh, C) query
+    uses the resident single-query kernel.
+    """
+    nv, nh, R, C = stored.shape
+    if col_valid is None:
+        col_valid = jnp.ones((nh, C), jnp.float32)
+    itp = _interpret() if interpret is None else interpret
+    if query.ndim == 2:
+        return cam_search_pallas(stored, query, col_valid,
+                                 distance=distance, interpret=itp)
+    batch = query.reshape(-1, nh, C)
+    out = cam_search_batched_pallas(stored, batch, col_valid,
+                                    distance=distance, q_tile=q_tile,
+                                    interpret=itp)
+    return out.reshape(*query.shape[:-2], nv, nh, R)
+
+
+def cam_search_vmap(stored: jax.Array, query: jax.Array, *,
+                    distance: str = "l2",
+                    col_valid: Optional[jax.Array] = None,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Per-query vmap over the single-query kernel (the pre-batching hot
+    path).  Kept as the benchmark baseline and numerical cross-check: it
+    re-streams the stored grid once per query."""
     nv, nh, R, C = stored.shape
     if col_valid is None:
         col_valid = jnp.ones((nh, C), jnp.float32)
@@ -40,6 +70,31 @@ def cam_search(stored: jax.Array, query: jax.Array, *, distance: str = "l2",
     batch = query.reshape(-1, nh, C)
     out = jax.vmap(lambda q: call(stored, q, col_valid))(batch)
     return out.reshape(*query.shape[:-2], nv, nh, R)
+
+
+def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
+                     distance: str, sensing: str, sensing_limit: float = 0.0,
+                     threshold: float = 0.0,
+                     col_valid: Optional[jax.Array] = None,
+                     row_valid: Optional[jax.Array] = None,
+                     q_tile: int = 32, want_dist: bool = True,
+                     interpret: Optional[bool] = None):
+    """Batched search with the sense-and-reduce epilogue fused in-kernel.
+
+    queries (Q, nh, C) -> (dist, match) each (Q, nv, nh, R), or match alone
+    when ``want_dist=False`` (the distance tensor then never leaves VMEM).
+    """
+    nv, nh, R, C = stored.shape
+    if col_valid is None:
+        col_valid = jnp.ones((nh, C), jnp.float32)
+    if row_valid is None:
+        row_valid = jnp.ones((nv, R), jnp.float32)
+    itp = _interpret() if interpret is None else interpret
+    return cam_search_fused_pallas(
+        stored, queries, col_valid, row_valid, distance=distance,
+        sensing=sensing, sensing_limit=float(sensing_limit),
+        threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
+        interpret=itp)
 
 
 # --------------------------------------------------------------------------
@@ -80,7 +135,9 @@ def cam_topk(keys: jax.Array, query: jax.Array, *, k: int, chunk: int = 512,
     bq = query.reshape(-1, D)
     vals, idx = jax.vmap(one)(bk, bq)
     lead = keys.shape[:-2]
-    return vals.reshape(*lead, -1), idx.reshape(*lead, -1)
+    # explicit (*lead, k): reshape(-1) would mis-fold the batch axes back
+    # into the top-k axis for keys.ndim > 2
+    return vals.reshape(*lead, k), idx.reshape(*lead, k)
 
 
 # --------------------------------------------------------------------------
@@ -100,13 +157,18 @@ def pack_bits(bits: jax.Array,
 
 
 def hamming_packed(stored_packed: jax.Array, query_packed: jax.Array, *,
-                   n_valid_bits: int, tile_r: int = 256,
+                   n_valid_bits: int, tile_r: int = 256, q_tile: int = 8,
                    interpret: Optional[bool] = None) -> jax.Array:
-    """stored (R, W) uint32, query (W,) uint32 -> hamming distance (R,)."""
+    """stored (R, W) uint32, query (W,) or (Q, W) uint32 -> dist (R,) or
+    (Q, R).  Batched queries share each resident stored tile."""
     itp = _interpret() if interpret is None else interpret
     R, W = stored_packed.shape
     tr = tile_r
     while R % tr and tr > 1:
         tr //= 2
+    if query_packed.ndim == 2:
+        return hamming_packed_batched_pallas(
+            stored_packed, query_packed, tile_r=tr, q_tile=q_tile,
+            interpret=itp)
     return hamming_packed_pallas(stored_packed, query_packed, tile_r=tr,
                                  interpret=itp)

@@ -29,6 +29,15 @@ def cam_search_ref(stored: jax.Array, query: jax.Array, distance: str,
     return jnp.sum(d, axis=-1)
 
 
+def cam_search_batched_ref(stored: jax.Array, queries: jax.Array,
+                           distance: str,
+                           col_valid: Optional[jax.Array] = None
+                           ) -> jax.Array:
+    """Batched oracle: queries (Q, nh, C) -> distances (Q, nv, nh, R)."""
+    return jax.vmap(lambda q: cam_search_ref(stored, q, distance, col_valid)
+                    )(queries)
+
+
 def cam_topk_ref(keys: jax.Array, query: jax.Array, k: int,
                  distance: str = "dot"
                  ) -> Tuple[jax.Array, jax.Array]:

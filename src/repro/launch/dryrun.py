@@ -1,5 +1,6 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")  # fake host devices need CPU
 
 """Multi-pod dry-run: lower + compile every (arch x shape) on the
 production meshes, prove memory fits, and extract roofline inputs.
@@ -118,6 +119,8 @@ def lower_kind(cfg: ModelConfig, kind: str, batch: int, seq: int, mesh,
 # ---------------------------------------------------------------------------
 def _extract_costs(compiled, chips: int) -> Dict[str, float]:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # jax <= 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text(), chips)
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,71 @@
+"""Offline fallback for ``hypothesis``.
+
+The property tests only use a tiny slice of the hypothesis API:
+``@given(st.integers(lo, hi), ...)`` with ``@settings(max_examples=...,
+deadline=...)``.  This container has no network access, so when the real
+package is missing we substitute a deterministic mini-driver that runs each
+property over a small, fixed sample of the strategy space (always including
+both bounds).  It is NOT a shrinking fuzzer — just enough to keep the
+properties executable and meaningful offline.
+
+Usage in tests:  ``from _hypothesis_compat import given, settings,
+strategies as st``  (drop-in for the real import; the real package is
+preferred when importable).
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # type: ignore
+
+except ImportError:
+    import functools
+    import random
+
+    # Examples per @given when the fallback driver runs.  Kept small: every
+    # example of the jax property tests pays a trace/compile.
+    _FALLBACK_EXAMPLES = 5
+
+    class _IntStrategy:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = lo, hi
+
+        def samples(self, rng: random.Random, n: int):
+            out = [self.lo, self.hi]
+            while len(out) < n:
+                out.append(rng.randint(self.lo, self.hi))
+            return out[:n]
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    def settings(max_examples: int = 100, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _IntStrategy):
+        def deco(fn):
+            n = min(getattr(fn, "_compat_max_examples", _FALLBACK_EXAMPLES),
+                    _FALLBACK_EXAMPLES)
+            # deterministic per-test sample set, seeded by the test name
+            rng = random.Random(fn.__name__)
+            columns = [s.samples(rng, n) for s in strats]
+            # rotate each column so examples aren't all-lo / all-hi tuples
+            cases = []
+            for i in range(n):
+                cases.append(tuple(col[(i + j) % n]
+                                   for j, col in enumerate(columns)))
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                for case in cases:
+                    fn(*args, *case, **kwargs)
+
+            # pytest must not see the original signature, or it would try to
+            # inject the strategy-bound parameters as fixtures
+            del runner.__wrapped__
+            return runner
+        return deco

@@ -1,0 +1,320 @@
+"""Query-batched fused CAM search: kernel parity + pipeline bit-identity.
+
+Three layers of guarantees:
+  * the batched Pallas kernel matches the pure-jnp oracle AND the old
+    per-query vmap kernel path, across distances, unaligned shapes, masks;
+  * the fused sense-and-reduce epilogue matches ``subarray.sense`` composed
+    with the unfused distance pass (interpret mode);
+  * ``FunctionalSimulator.query`` is bit-identical to the pre-batching
+    per-query vmap pipeline for every match_type/sensing combination.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                        DeviceConfig)
+from repro.core import mapping, merge, quantize, subarray, variation
+from repro.core.functional import FunctionalSimulator
+from repro.kernels import ops, ref
+
+DISTANCES = ("hamming", "l1", "l2", "dot")
+
+
+# ---------------------------------------------------------------------------
+# batched kernel vs oracle vs per-query vmap
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nv,nh,R,C,Q", [
+    (1, 1, 8, 16, 1),      # single query through the batched entry
+    (3, 2, 32, 64, 16),    # aligned tiles
+    (2, 3, 17, 21, 5),     # unaligned R, C and Q < q_tile
+    (4, 1, 64, 64, 19),    # Q not a multiple of q_tile
+    (1, 4, 16, 128, 33),
+])
+@pytest.mark.parametrize("distance", DISTANCES)
+def test_batched_kernel_parity(nv, nh, R, C, Q, distance):
+    key = jax.random.PRNGKey(nv * 1000 + nh * 100 + Q)
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (nv, nh, R, C))
+    qb = jax.random.uniform(k2, (Q, nh, C))
+    got = ops.cam_search(stored, qb, distance=distance)
+    want = ref.cam_search_batched_ref(stored, qb, distance)
+    old = ops.cam_search_vmap(stored, qb, distance=distance)
+    assert got.shape == (Q, nv, nh, R)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(old), atol=1e-4)
+
+
+@pytest.mark.parametrize("distance", DISTANCES)
+def test_batched_kernel_col_valid(distance):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    stored = jax.random.uniform(k1, (2, 2, 8, 16))
+    qb = jax.random.uniform(k2, (6, 2, 16))
+    cv = jnp.ones((2, 16)).at[1, 10:].set(0.0)
+    got = ops.cam_search(stored, qb, distance=distance, col_valid=cv)
+    want = ref.cam_search_batched_ref(stored, qb, distance, cv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_batched_kernel_q_tile_invariance():
+    """Result must not depend on the Q-tiling."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    stored = jax.random.uniform(k1, (2, 2, 16, 32))
+    qb = jax.random.uniform(k2, (13, 2, 32))
+    outs = [ops.cam_search(stored, qb, distance="l2", q_tile=qt)
+            for qt in (1, 4, 8, 13, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused sense-and-reduce epilogue vs subarray.sense
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sensing", ["exact", "best", "threshold"])
+@pytest.mark.parametrize("distance", DISTANCES)
+def test_fused_sense_matches_unfused(sensing, distance):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    stored = jax.random.uniform(k1, (3, 2, 16, 24))
+    qb = jax.random.uniform(k2, (5, 2, 24))
+    cv = jnp.ones((2, 24)).at[1, 20:].set(0.0)
+    rv = jnp.ones((3, 16)).at[2, 10:].set(0.0)
+    kw = dict(distance=distance, sensing=sensing, sensing_limit=0.1,
+              threshold=2.0, col_valid=cv, row_valid=rv)
+    d, m = ops.cam_search_fused(stored, qb, **kw)
+    dj, mj = subarray.subarray_query(stored, qb, **kw)
+    dj_, d_ = np.asarray(dj), np.asarray(d)
+    finite = np.isfinite(dj_)
+    # padding rows carry +inf in both pipelines
+    assert (finite == np.isfinite(d_)).all()
+    np.testing.assert_allclose(d_[finite], dj_[finite], atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mj))
+
+
+def test_fused_sense_match_only():
+    """want_dist=False returns the match lines alone (no dist write-back)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+    stored = jax.random.uniform(k1, (2, 2, 8, 16))
+    qb = jax.random.uniform(k2, (4, 2, 16))
+    kw = dict(distance="hamming", sensing="exact", sensing_limit=0.5)
+    m = ops.cam_search_fused(stored, qb, want_dist=False, **kw)
+    _, mj = ops.cam_search_fused(stored, qb, want_dist=True, **kw)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(mj))
+
+
+def test_subarray_query_batched_kernel_vs_jnp():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(17))
+    stored = jax.random.uniform(k1, (2, 2, 12, 20))
+    qb = jax.random.uniform(k2, (7, 2, 20))
+    kw = dict(distance="l1", sensing="best", sensing_limit=0.05,
+              col_valid=jnp.ones((2, 20)), row_valid=jnp.ones((2, 12)))
+    dk, mk = subarray.subarray_query_batched(stored, qb, use_kernel=True,
+                                             **kw)
+    dj, mj = subarray.subarray_query_batched(stored, qb, use_kernel=False,
+                                             **kw)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dj), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mj))
+
+
+# ---------------------------------------------------------------------------
+# batched bit-packed hamming
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("R,C,Q", [(64, 70, 1), (64, 70, 5), (96, 33, 12),
+                                   (256, 2048, 3)])
+def test_hamming_packed_batched(R, C, Q):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(R + Q))
+    bits = (jax.random.uniform(k1, (R, C)) > 0.5).astype(jnp.float32)
+    qbits = (jax.random.uniform(k2, (Q, C)) > 0.5).astype(jnp.float32)
+    sp, qp = ops.pack_bits(bits), ops.pack_bits(qbits)
+    got = ops.hamming_packed(sp, qp, n_valid_bits=C)
+    assert got.shape == (Q, R)
+    for i in range(Q):
+        want = np.asarray((bits != qbits[i][None, :]).sum(-1))
+        np.testing.assert_array_equal(np.asarray(got[i]), want)
+        np.testing.assert_array_equal(
+            np.asarray(ops.hamming_packed(sp, qp[i], n_valid_bits=C)), want)
+
+
+# ---------------------------------------------------------------------------
+# FunctionalSimulator: bit-identity vs the per-query vmap pipeline
+# ---------------------------------------------------------------------------
+def _old_query(sim: FunctionalSimulator, state, queries, key=None):
+    """The pre-batching pipeline: per-query vmap of search + merge."""
+    cfg = sim.config
+    bits = cfg.app.data_bits
+    qcodes, _, _ = quantize.quantize_for_cell(
+        queries, cfg.circuit.cell_type, bits, state.lo, state.hi)
+    qseg = mapping.partition_query(qcodes, state.spec)
+
+    def search_one(grid, q):
+        dist, match = subarray.subarray_query(
+            grid, q,
+            distance=cfg.app.distance,
+            sensing=cfg.circuit.sensing,
+            sensing_limit=cfg.circuit.sensing_limit,
+            threshold=float(cfg.app.match_param)
+            if cfg.app.match_type == "threshold" else 0.0,
+            col_valid=state.col_valid,
+            row_valid=state.row_valid,
+            use_kernel=False)
+        k = cfg.app.match_param if cfg.app.match_type == "best" else max(
+            1, min(state.spec.padded_K, 16))
+        return merge.merge(
+            dist, match,
+            match_type=cfg.app.match_type,
+            h_merge=cfg.arch.h_merge,
+            v_merge=cfg.arch.v_merge,
+            match_param=k,
+            sensing_limit=cfg.circuit.sensing_limit,
+            threshold=float(cfg.app.match_param)
+            if cfg.app.match_type == "threshold" else 0.0)
+
+    if cfg.device.variation in ("c2c", "both"):
+        keys = variation.split_for_queries(key, queries.shape[0])
+        return jax.vmap(lambda q, k: search_one(
+            variation.apply_c2c(state.grid, cfg.device, bits, k), q)
+            )(qseg, keys)
+    return jax.vmap(lambda q: search_one(state.grid, q))(qseg)
+
+
+COMBOS = [
+    # (distance, match_type, h_merge, v_merge, cell, bits, sensing, sl)
+    ("hamming", "exact", "and", "gather", "tcam", 1, "exact", 0.0),
+    ("l2", "exact", "adder", "gather", "mcam", 3, "exact", 0.5),
+    ("l2", "best", "adder", "comparator", "mcam", 3, "best", 0.0),
+    ("l2", "best", "voting", "comparator", "mcam", 3, "best", 0.5),
+    ("l1", "best", "and", "comparator", "acam", 0, "best", 0.0),  # nh == 1
+    ("hamming", "threshold", "adder", "gather", "tcam", 1, "threshold", 0.0),
+    ("dot", "best", "adder", "comparator", "acam", 0, "best", 0.0),
+]
+
+
+@pytest.mark.parametrize(
+    "distance,match,h_merge,v_merge,cell,bits,sensing,sl", COMBOS)
+def test_query_bit_identical_to_vmap_pipeline(distance, match, h_merge,
+                                              v_merge, cell, bits,
+                                              sensing, sl):
+    K, N = 21, 12
+    cols = N if h_merge == "and" and match == "best" else 6
+    cfg = CAMConfig(
+        app=AppConfig(distance=distance, match_type=match, match_param=2,
+                      data_bits=bits),
+        arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+        circuit=CircuitConfig(rows=8, cols=cols, cell_type=cell,
+                              sensing=sensing, sensing_limit=sl),
+        device=DeviceConfig(device="fefet"))
+    sim = FunctionalSimulator(cfg)
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    stored = jax.random.uniform(k1, (K, N))
+    queries = jax.random.uniform(k2, (9, N))
+    state = sim.write(stored)
+    idx, mask = sim.query(state, queries)
+    oidx, omask = _old_query(sim, state, queries)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(oidx))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(omask))
+
+
+def test_query_bit_identical_with_c2c_noise():
+    """Default c2c_query_tile=1 reproduces the per-query noise draw."""
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=1,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet", variation="c2c",
+                            variation_std=0.4))
+    sim = FunctionalSimulator(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (30, 16))
+    queries = jax.random.uniform(jax.random.PRNGKey(1), (8, 16))
+    state = sim.write(stored)
+    qkey = jax.random.PRNGKey(5)
+    idx, mask = sim.query(state, queries, key=qkey)
+    oidx, omask = _old_query(sim, state, queries, key=qkey)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(oidx))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(omask))
+
+
+def test_query_c2c_tiled_noise_runs():
+    """c2c_query_tile > 1: one noise draw per Q-tile (cycle group)."""
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=1,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet", variation="c2c",
+                            variation_std=0.2))
+    sim = FunctionalSimulator(cfg, c2c_query_tile=4)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (20, 16))
+    queries = jax.random.uniform(jax.random.PRNGKey(1), (10, 16))  # pad to 12
+    state = sim.write(stored)
+    idx, mask = sim.query(state, queries, key=jax.random.PRNGKey(2))
+    assert idx.shape == (10, 1) and mask.shape[0] == 10
+    assert ((np.asarray(idx) >= 0) & (np.asarray(idx) < 24)).all()
+
+
+def test_query_batch_matches_single_query_calls():
+    """Batch processing must be query-independent."""
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=3,
+                      data_bits=0),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="acam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"))
+    sim = FunctionalSimulator(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (25, 14))
+    queries = jax.random.uniform(jax.random.PRNGKey(1), (6, 14))
+    state = sim.write(stored)
+    idx, mask = sim.query(state, queries)
+    for i in range(queries.shape[0]):
+        ii, mi = sim.query(state, queries[i])
+        np.testing.assert_array_equal(np.asarray(idx[i]), np.asarray(ii))
+        np.testing.assert_array_equal(np.asarray(mask[i]), np.asarray(mi))
+
+
+def test_query_kernel_path_matches_jnp_path():
+    """use_kernel=True (fused batched Pallas) agrees with the jnp path."""
+    for match, h_merge, v_merge, sensing in [
+            ("exact", "and", "gather", "exact"),
+            ("best", "adder", "comparator", "best"),
+            ("threshold", "adder", "gather", "threshold")]:
+        cfg = CAMConfig(
+            app=AppConfig(distance="l2", match_type=match, match_param=2,
+                          data_bits=3),
+            arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+            circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                                  sensing=sensing, sensing_limit=0.5),
+            device=DeviceConfig(device="fefet"))
+        a = FunctionalSimulator(cfg, use_kernel=False)
+        b = FunctionalSimulator(cfg, use_kernel=True)
+        stored = jax.random.uniform(jax.random.PRNGKey(3), (20, 12))
+        queries = jax.random.uniform(jax.random.PRNGKey(4), (5, 12))
+        sa, sb = a.write(stored), b.write(stored)
+        ia, ma = a.query(sa, queries)
+        ib, mb = b.query(sb, queries)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+
+
+# ---------------------------------------------------------------------------
+# cam_topk reshape regression
+# ---------------------------------------------------------------------------
+def test_cam_topk_batched_3d_shapes_and_values():
+    """(B, S, D) input must produce (B, k) — not a silently flattened axis —
+    even when k is clamped below the requested value."""
+    B, S, D, k = 3, 64, 16, 8
+    keys = jax.random.normal(jax.random.PRNGKey(0), (B, S, D))
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+    v, i = ops.cam_topk(keys, q, k=k, chunk=32)
+    assert v.shape == (B, k) and i.shape == (B, k)
+    for b in range(B):
+        rv, ri = ref.cam_topk_ref(keys[b], q[b], k)
+        np.testing.assert_allclose(np.asarray(v[b]), np.asarray(rv),
+                                   rtol=1e-4, atol=1e-4)
+    # k larger than S: clamped to S, shape must follow the clamp
+    v2, i2 = ops.cam_topk(keys, q, k=S + 10, chunk=S)
+    assert v2.shape == (B, S) and i2.shape == (B, S)

@@ -18,14 +18,15 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"   # host-device trick needs the CPU backend
 import json
 import jax
 from repro.launch.dryrun import lower_kind, probe_costs
+from repro.launch.mesh import compat_make_mesh
 from repro.configs import get_config
 from repro.runtime import ShardingRules
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 rules = ShardingRules()
 out = {}
 cfg = get_config("qwen2-1.5b").replace(n_layers=2, d_model=256,
@@ -36,6 +37,8 @@ for kind, batch, seq in (("train", 8, 256), ("prefill", 4, 256),
     lowered = lower_kind(cfg, kind, batch, seq, mesh, rules)
     compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax <= 0.4.x: per-device dicts
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     costs, colls = probe_costs(cfg, kind, batch, seq, mesh, rules, "tp")
     out[kind] = {

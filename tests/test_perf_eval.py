@@ -1,7 +1,7 @@
 """Performance evaluator: Table IV calibration + structural properties."""
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import CAMASim, estimate_arch, predict_search, predict_write
 from repro.core.validation import TARGETS
