@@ -1,11 +1,13 @@
 """Benchmark entrypoint: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--devices N]
 
 Prints ``name,us_per_call,derived`` CSV per benchmark.  ``--full`` runs the
-larger sweeps (the default is sized for CI).  The dry-run roofline table is
-produced separately by repro.launch.dryrun (512 fake devices) and read back
-here if present.
+larger sweeps (the default is sized for CI).  ``--devices N`` caps the
+sharded weak-scaling sweep's device counts (subprocesses with N forced
+host devices; default 4, 0 skips the sweep).  The dry-run roofline table
+is produced separately by repro.launch.dryrun (512 fake devices) and read
+back here if present.
 
 Every CSV row is also dumped to ``BENCH_kernels.json`` next to the repo
 root, so successive PRs leave a machine-readable perf trajectory.
@@ -42,8 +44,11 @@ def _run_and_collect(fn, rows: list) -> None:
 
 def main() -> None:
     full = "--full" in sys.argv
+    devices = 4
+    if "--devices" in sys.argv:
+        devices = int(sys.argv[sys.argv.index("--devices") + 1])
     from . import (fig4_sweep, fig5_nonidealities, kernel_bench,
-                   table4_validation)
+                   sharded_bench, table4_validation)
 
     rows: list = []
 
@@ -58,6 +63,8 @@ def main() -> None:
     _run_and_collect(fig4_sweep.main, rows)
     _run_and_collect(fig5_nonidealities.main, rows)
     _run_and_collect(kernel_bench.main, rows)
+    if devices > 0:
+        _run_and_collect(lambda: sharded_bench.main(devices), rows)
 
     # roofline summary (if the dry-run has produced results)
     try:

@@ -1,0 +1,123 @@
+"""Weak-scaling benchmark for the sharded CAM search subsystem.
+
+Fixed rows/device, growing nv: every device count N holds the same
+(BANKS_PER_DEV x ROWS) rows per device, so the dataset grows with the
+mesh (the scale-out story: capacity bounded by the mesh, not one HBM).
+Each sweep point reports the sharded wall time at N devices AND a
+single-device (1-bank mesh) reference over the *same* N-shard dataset —
+``speedup`` is therefore the cross-device parallelism win on identical
+data, and ``match`` asserts the merge stayed bit-identical.
+
+Device counts need ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set before jax initializes, so the parent spawns one worker subprocess
+per point:
+
+    PYTHONPATH=src python -m benchmarks.sharded_bench [--devices N]
+    PYTHONPATH=src python -m benchmarks.sharded_bench --worker N  (internal)
+
+Interpret-mode CPU numbers are a proxy (the container has no TPU): the
+structural claim is that per-device work is fixed while total rows grow.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+BANKS_PER_DEV = 8     # nv shards resident per device
+ROWS = 128            # R: rows per subarray (rows/device = 8 * 128)
+COLS = 128            # C
+NDIM = 256            # application dims -> nh = 2 segments
+Q = 128               # query batch per search
+DEVICE_SWEEP = (1, 2, 4)
+
+
+def worker(n_devices: int) -> None:
+    """One sweep point (runs in a subprocess with N host devices)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                            DeviceConfig, ShardedCAMSimulator)
+    from repro.launch.mesh import make_cam_mesh
+
+    assert len(jax.devices()) >= n_devices, jax.devices()
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"))
+
+    K = n_devices * BANKS_PER_DEV * ROWS          # fixed rows/device
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    stored = jax.random.uniform(k1, (K, NDIM))
+    queries = jax.random.uniform(k2, (Q, NDIM))
+
+    def timeit(f, n=7):
+        for _ in range(2):
+            jax.block_until_ready(f())
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    sharded = ShardedCAMSimulator(cfg, make_cam_mesh(n_devices),
+                                  use_kernel=True)
+    s_state = sharded.write(stored)
+    t_n = timeit(lambda: sharded.query(s_state, queries))
+
+    single = ShardedCAMSimulator(cfg, make_cam_mesh(1), use_kernel=True)
+    o_state = single.write(stored)
+    t_1 = timeit(lambda: single.query(o_state, queries))
+
+    ia, _ = single.query(o_state, queries)
+    ib, _ = sharded.query(s_state, queries)
+    ok = bool((np.asarray(ia) == np.asarray(ib)).all())
+    qps_n, qps_1 = Q / t_n, Q / t_1
+    print(f"kernel_cam_search_sharded_d{n_devices},{t_n * 1e6:.0f},"
+          f"qps={qps_n:.0f}_qps_1dev={qps_1:.0f}_"
+          f"speedup={t_1 / t_n:.2f}x_rows={K}_"
+          f"rows_per_dev={BANKS_PER_DEV * ROWS}_match={ok}")
+
+
+def main(max_devices: int = 4) -> None:
+    """Spawn one worker per device count <= ``max_devices``, echo CSV."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for n in DEVICE_SWEEP:
+        if n > max_devices:
+            continue
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["JAX_PLATFORMS"] = "cpu"    # skip the libtpu-init stall
+        env["PYTHONPATH"] = (str(root / "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sharded_bench",
+             "--worker", str(n)],
+            env=env, cwd=str(root), capture_output=True, text=True,
+            timeout=1800)
+        if proc.returncode != 0:
+            print(f"kernel_cam_search_sharded_d{n},0,"
+                  f"failed({proc.stderr.strip()[-200:]!r})")
+            continue
+        for line in proc.stdout.splitlines():
+            if line.startswith("kernel_cam_search_sharded"):
+                print(line)
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        worker(int(sys.argv[sys.argv.index("--worker") + 1]))
+    else:
+        devs = 4
+        if "--devices" in sys.argv:
+            devs = int(sys.argv[sys.argv.index("--devices") + 1])
+        main(devs)

@@ -9,9 +9,11 @@ from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
                      DeviceConfig)
 from .functional import CAMState, FunctionalSimulator
 from .perf import PerfResult, estimate_arch, predict_search, predict_write
+from .sharded import ShardedCAMSimulator
 
 __all__ = [
     "CAMASim", "CAMConfig", "AppConfig", "ArchConfig", "CircuitConfig",
     "DeviceConfig", "CAMState", "FunctionalSimulator", "PerfResult",
-    "estimate_arch", "predict_search", "predict_write",
+    "ShardedCAMSimulator", "estimate_arch", "predict_search",
+    "predict_write",
 ]

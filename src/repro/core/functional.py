@@ -59,13 +59,21 @@ class FunctionalSimulator:
     """Automated in-memory search simulation (accuracy path of CAMASim)."""
 
     def __init__(self, config: CAMConfig, use_kernel: bool = False,
-                 c2c_query_tile: int = 1):
+                 c2c_query_tile: int = 1, c2c_fold: str = "grid"):
         config.validate()
         self.config = config
         self.use_kernel = use_kernel
         if c2c_query_tile < 1:
             raise ValueError("c2c_query_tile must be >= 1")
+        if c2c_fold not in ("grid", "bank"):
+            raise ValueError("c2c_fold must be 'grid' or 'bank'")
         self.c2c_query_tile = c2c_query_tile
+        # 'grid': one normal draw over the whole (nv, nh, R, C) grid per
+        # cycle (the historical single-device draw).  'bank': one draw per
+        # nv bank from fold_in(cycle_key, bank index) — bit-identical no
+        # matter how the nv axis is split across devices, so the sharded
+        # simulator (core.sharded) always runs its reference in this mode.
+        self.c2c_fold = c2c_fold
 
     # ------------------------------------------------------------- write
     def write(self, stored: jax.Array, key: Optional[jax.Array] = None
@@ -118,13 +126,21 @@ class FunctionalSimulator:
     def _query_jit(self, state: CAMState, queries, key):
         cfg = self.config
         bits = cfg.app.data_bits
-        qcodes, _, _ = quantize.quantize_for_cell(
-            queries, cfg.circuit.cell_type, bits, state.lo, state.hi)
-        qseg = mapping.partition_query(qcodes, state.spec)   # (Q, nh, C)
+        qseg = self.segment_queries(state, queries)          # (Q, nh, C)
 
         if cfg.device.variation not in ("c2c", "both"):
             # store once, search many: one fused batched pass
             return self._search_batch(state.grid, qseg, state)
+
+        if self.c2c_fold == "bank":
+            # per-bank RNG fold (the shard-invariant draw): search the
+            # whole batch through the shard-local entry with v_offset=0,
+            # then one batched merge — the single-device reference for
+            # the sharded simulator's parity guarantee.
+            dist, match = self.search_shard(
+                state.grid, qseg, col_valid=state.col_valid,
+                row_valid=state.row_valid, key=key)
+            return self.merge_rows(dist, match, state.spec.padded_K)
 
         # C2C: fresh array noise per search cycle; one Q-tile per cycle.
         # All cycle noises are drawn in one batched primitive and the cycles
@@ -147,13 +163,102 @@ class FunctionalSimulator:
         mask = mask.reshape(n_tiles * tile, *mask.shape[2:])[:Q]
         return idx, mask
 
+    # ------------------------------------------------- shard-local pieces
+    # The sharded simulator (core.sharded) drives these from inside a
+    # shard_map body: each device runs the same quantize/search pipeline on
+    # its local nv (bank) shard of the grid, and only the vertical merge
+    # crosses devices.
+    def need_dist(self) -> bool:
+        """The AND merge consumes match lines only; the fused kernel then
+        skips the (Q, nv, nh, R) distance write-back entirely."""
+        cfg = self.config
+        return not (cfg.app.match_type in ("exact", "threshold")
+                    and cfg.arch.h_merge == "and")
+
+    def match_k(self, padded_K: int) -> int:
+        """Result width k of the merge for a padded_K-row store."""
+        cfg = self.config
+        return cfg.app.match_param if cfg.app.match_type == "best" else max(
+            1, min(padded_K, 16))
+
+    def segment_queries(self, state: CAMState, queries: jax.Array
+                        ) -> jax.Array:
+        """Quantize (shared scale) + partition: (Q, N) -> (Q, nh, C)."""
+        cfg = self.config
+        qcodes, _, _ = quantize.quantize_for_cell(
+            queries, cfg.circuit.cell_type, cfg.app.data_bits,
+            state.lo, state.hi)
+        return mapping.partition_query(qcodes, state.spec)
+
+    def search_shard(self, grid: jax.Array, qseg: jax.Array, *,
+                     col_valid: jax.Array, row_valid: jax.Array,
+                     key: Optional[jax.Array] = None, v_offset=0,
+                     cycle_keys: Optional[jax.Array] = None
+                     ) -> Tuple[Optional[jax.Array], jax.Array]:
+        """Shard-local search over a pre-split grid.
+
+        ``grid`` may be an nv-shard of the full stored grid whose first
+        bank has global index ``v_offset`` (``row_valid`` is the matching
+        (nv_local, R) shard; ``col_valid`` is replicated).  C2C noise uses
+        the per-bank RNG fold (``variation.apply_c2c_banked``), so any
+        split of the nv axis draws bit-identical noise.  ``cycle_keys``
+        overrides the per-cycle key derivation for query-sharded batches
+        (the caller splits the global key and slices this shard's cycles).
+
+        Returns ``(dist, match)``, each (Q, nv_local, nh, R); ``dist`` is
+        None when the merge consumes match lines only.
+        """
+        cfg = self.config
+        bits = cfg.app.data_bits
+
+        def run(g, q):
+            return subarray.subarray_query_batched(
+                g, q,
+                distance=cfg.app.distance,
+                sensing=cfg.circuit.sensing,
+                sensing_limit=cfg.circuit.sensing_limit,
+                threshold=float(cfg.app.match_param)
+                if cfg.app.match_type == "threshold" else 0.0,
+                col_valid=col_valid,
+                row_valid=row_valid,
+                use_kernel=self.use_kernel,
+                want_dist=self.need_dist())
+
+        if cfg.device.variation not in ("c2c", "both"):
+            return run(grid, qseg)
+
+        Q = qseg.shape[0]
+        tile = min(self.c2c_query_tile, Q)
+        pad = (-Q) % tile
+        qt = jnp.pad(qseg, ((0, pad), (0, 0), (0, 0)))
+        n_tiles = qt.shape[0] // tile
+        qt = qt.reshape(n_tiles, tile, *qseg.shape[1:])
+        if cycle_keys is None:
+            cycle_keys = variation.split_for_queries(key, n_tiles)
+        noisy = variation.apply_c2c_banked(grid, cfg.device, bits,
+                                           cycle_keys, v_offset)
+        dist, match = jax.vmap(run)(noisy, qt)
+        match = match.reshape(n_tiles * tile, *match.shape[2:])[:Q]
+        if dist is not None:
+            dist = dist.reshape(n_tiles * tile, *dist.shape[2:])[:Q]
+        return dist, match
+
+    def merge_rows(self, dist, match, padded_K: int):
+        """Single-device merge of (Q, nv, nh, R) subarray outputs."""
+        cfg = self.config
+        return merge.merge(
+            dist, match,
+            match_type=cfg.app.match_type,
+            h_merge=cfg.arch.h_merge,
+            v_merge=cfg.arch.v_merge,
+            match_param=self.match_k(padded_K),
+            sensing_limit=cfg.circuit.sensing_limit,
+            threshold=float(cfg.app.match_param)
+            if cfg.app.match_type == "threshold" else 0.0)
+
     def _search_batch(self, grid, qseg, state: CAMState):
         """One fused batched search + merge over a (Q, nh, C) block."""
         cfg = self.config
-        # the AND merge consumes match lines only; the fused kernel then
-        # skips the (Q, nv, nh, R) distance write-back entirely
-        need_dist = not (cfg.app.match_type in ("exact", "threshold")
-                         and cfg.arch.h_merge == "and")
         dist, match = subarray.subarray_query_batched(
             grid, qseg,
             distance=cfg.app.distance,
@@ -164,15 +269,5 @@ class FunctionalSimulator:
             col_valid=state.col_valid,
             row_valid=state.row_valid,
             use_kernel=self.use_kernel,
-            want_dist=need_dist)
-        k = cfg.app.match_param if cfg.app.match_type == "best" else max(
-            1, min(state.spec.padded_K, 16))
-        return merge.merge(
-            dist, match,
-            match_type=cfg.app.match_type,
-            h_merge=cfg.arch.h_merge,
-            v_merge=cfg.arch.v_merge,
-            match_param=k,
-            sensing_limit=cfg.circuit.sensing_limit,
-            threshold=float(cfg.app.match_param)
-            if cfg.app.match_type == "threshold" else 0.0)
+            want_dist=self.need_dist())
+        return self.merge_rows(dist, match, state.spec.padded_K)

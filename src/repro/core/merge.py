@@ -70,6 +70,145 @@ def v_merge_comparator_topk(values: jax.Array, k: int, largest: bool
 
 
 # --------------------------------------------------------------------------
+# Horizontal reductions shared with the cross-device (sharded) combiner.
+#
+# These operate on the per-subarray (..., nv, nh, R) tensors and collapse
+# only the nh axis, producing per-row quantities that are LOCAL to each nv
+# block — so a device holding an nv-shard of the grid computes exactly the
+# slice of the full reduction its rows contribute, and the vertical merge
+# across devices reduces to a gather (exact/threshold) or a candidate
+# re-rank (best).  ``core.sharded`` is the other caller.
+# --------------------------------------------------------------------------
+def h_reduce_match(dist: jax.Array, match: jax.Array, *, match_type: str,
+                   h_merge: str, sensing_limit: float = 0.0,
+                   threshold: float = 0.0) -> jax.Array:
+    """Exact/threshold horizontal merge -> (..., nv, R) 0/1 row mask."""
+    nh = match.shape[-2]
+    if h_merge == "and":
+        if match_type == "threshold" and nh > 1:
+            # Paper Fig. 3b: no existing efficient horizontal merge for
+            # threshold match.  Use 'adder' (our beyond-paper extension).
+            raise ValueError(
+                "threshold match with horizontal partitioning (nh>1) has "
+                "no AND/voting merge (paper Fig. 3b); use h_merge='adder'")
+        return h_merge_and(match)                          # (..., nv, R)
+    if h_merge == "adder":
+        total = h_merge_adder(dist)                        # exact distance
+        total = jnp.where(jnp.isfinite(total), total, 3.4e38)
+        thr = sensing_limit if match_type == "exact" else (
+            threshold + sensing_limit)
+        return (total <= thr).astype(jnp.float32)
+    if h_merge == "voting":
+        raise ValueError(f"{match_type} match has no voting h-merge "
+                         "(paper Fig. 3b)")
+    raise ValueError(f"unknown h_merge {h_merge!r}")
+
+
+def voting_dmax(dist: jax.Array) -> jax.Array:
+    """Per-query max finite summed distance (..., 1, 1) over this nv block.
+
+    The voting tie-break normalizer must be computed over ALL rows of the
+    query's grid; a sharded grid takes ``lax.pmax`` of this local value
+    across the bank axis before calling ``h_reduce_best``."""
+    total = h_merge_adder(dist)
+    return jnp.max(jnp.where(jnp.isfinite(total), total, 0.0),
+                   axis=(-2, -1), keepdims=True)
+
+
+def h_reduce_best(dist: jax.Array, match: jax.Array, *, h_merge: str,
+                  dmax: jax.Array | None = None
+                  ) -> Tuple[jax.Array, bool]:
+    """Best-match horizontal merge -> ((..., nv, R) row scores, largest).
+
+    ``largest`` tells the comparator stage which direction wins (votes are
+    maximized, distances minimized).  ``dmax``: pre-computed tie-break
+    normalizer for the voting merge (``voting_dmax`` + pmax on sharded
+    grids); defaults to the local per-query max.
+    """
+    nh = match.shape[-2]
+    if h_merge == "voting":
+        votes = h_merge_voting(match)                      # (..., nv, R)
+        # lexicographic (votes desc, distance asc): normalize the
+        # distance into [0, 1) so it can never flip a vote difference
+        # (votes are small ints — exactly representable in f32).
+        total = h_merge_adder(dist)
+        finite = jnp.isfinite(total)
+        # per-query max (last two axes): with a batched (Q, nv, R) total
+        # a global max would couple the queries' tie-break scales
+        if dmax is None:
+            dmax = voting_dmax(dist)
+        dmax = dmax + 1.0
+        norm = jnp.clip(jnp.where(finite, total, dmax) / dmax,
+                        0.0, 0.999)
+        return votes - norm, True
+    if h_merge == "adder":
+        return h_merge_adder(dist), False
+    if h_merge == "and" and nh == 1:
+        # no horizontal partitioning: distances are already global
+        return dist[..., 0, :], False
+    raise ValueError(f"best match h_merge {h_merge!r} unsupported")
+
+
+# --------------------------------------------------------------------------
+# Vertical finalization shared with the cross-device combiner
+# --------------------------------------------------------------------------
+def first_k_indices(mask: jax.Array, k: int) -> jax.Array:
+    """First-k matched indices (fixed shape) of a 0/1 row mask, -1 padded.
+
+    Appending always-zero rows to ``mask`` never changes the result, so a
+    bank-padded sharded grid yields the same indices as the unpadded one."""
+    score = mask * 2.0 - jnp.arange(mask.shape[-1]) / mask.shape[-1]
+    _, idx = jax.lax.top_k(score, k)
+    got = jnp.take_along_axis(mask, idx, axis=-1) > 0
+    return jnp.where(got, idx, -1)
+
+
+def finalize_topk(vals: jax.Array, idx: jax.Array, *, largest: bool,
+                  K: int) -> Tuple[jax.Array, jax.Array]:
+    """Winner validity + -1 padding + scatter mask over ``K`` global rows.
+
+    vals/idx (..., k): comparator outputs with their GLOBAL row indices
+    (already offset on sharded grids).  Invalid winners — zero/negative
+    votes when ``largest``, non-finite distances otherwise — become -1.
+    """
+    valid = (vals > 0) if largest else jnp.isfinite(vals)
+    idx = jnp.where(valid, idx, -1)
+    mask = jnp.zeros((*idx.shape[:-1], K))
+    return idx, put_topk_mask(mask, idx)
+
+
+def local_topk_candidates(values: jax.Array, k: int, *, largest: bool,
+                          row_offset=0) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard comparator stage: top-k candidate (values, global indices).
+
+    values (..., nv_local, R) row scores of this shard; ``row_offset`` is
+    the shard's first global row (bank_index * nv_local * R).  ``k`` is
+    clamped to the shard's row count.  ``jax.lax.top_k`` is stable (ties
+    keep the lowest index), so concatenating shards' candidate lists in
+    bank order and re-ranking with another stable top-k reproduces the
+    single-device comparator bit-for-bit: any row the global comparator
+    selects from a shard is necessarily in that shard's local top-k.
+    """
+    flat = values.reshape(*values.shape[:-2], -1)
+    kl = max(1, min(k, flat.shape[-1]))
+    sign = 1.0 if largest else -1.0
+    v, idx = jax.lax.top_k(sign * flat, kl)
+    return sign * v, idx + row_offset
+
+
+def rerank_candidates(vals: jax.Array, idx: jax.Array, k: int, *,
+                      largest: bool) -> Tuple[jax.Array, jax.Array]:
+    """Re-rank gathered candidates (..., n_shards*k_local) -> global top-k.
+
+    The candidate axis must be ordered (bank asc, local rank asc): stable
+    top-k then breaks value ties toward the lowest global row index,
+    exactly as the unsharded ``v_merge_comparator_topk`` does."""
+    sign = 1.0 if largest else -1.0
+    v, p = jax.lax.top_k(sign * vals, min(k, vals.shape[-1]))
+    return sign * v, jnp.take_along_axis(idx, p, axis=-1)
+
+
+# --------------------------------------------------------------------------
 # Full merge dispatch
 # --------------------------------------------------------------------------
 def merge(dist: jax.Array, match: jax.Array, *, match_type: str,
@@ -88,74 +227,24 @@ def merge(dist: jax.Array, match: jax.Array, *, match_type: str,
     consumes match lines only (the fused kernel then never materializes the
     distance tensor in HBM).
     """
-    nh = match.shape[-2]
     k = max(1, match_param)
 
     if match_type in ("exact", "threshold"):
-        if h_merge == "and":
-            if match_type == "threshold" and nh > 1:
-                # Paper Fig. 3b: no existing efficient horizontal merge for
-                # threshold match.  Use 'adder' (our beyond-paper extension).
-                raise ValueError(
-                    "threshold match with horizontal partitioning (nh>1) has "
-                    "no AND/voting merge (paper Fig. 3b); use h_merge='adder'")
-            row = h_merge_and(match)                       # (..., nv, R)
-        elif h_merge == "adder":
-            total = h_merge_adder(dist)                    # exact distance
-            total = jnp.where(jnp.isfinite(total), total, 3.4e38)
-            thr = sensing_limit if match_type == "exact" else (
-                threshold + sensing_limit)
-            row = (total <= thr).astype(jnp.float32)
-        elif h_merge == "voting":
-            raise ValueError(f"{match_type} match has no voting h-merge "
-                             "(paper Fig. 3b)")
-        else:
-            raise ValueError(f"unknown h_merge {h_merge!r}")
         if v_merge != "gather":
             raise ValueError(f"{match_type} match uses gather v-merge")
+        row = h_reduce_match(dist, match, match_type=match_type,
+                             h_merge=h_merge, sensing_limit=sensing_limit,
+                             threshold=threshold)
         mask = v_merge_gather(row)                          # (..., K)
-        # first-k matched indices (fixed shape), -1 padded
-        score = mask * 2.0 - jnp.arange(mask.shape[-1]) / mask.shape[-1]
-        _, idx = jax.lax.top_k(score, k)
-        got = jnp.take_along_axis(mask, idx, axis=-1) > 0
-        idx = jnp.where(got, idx, -1)
-        return idx, mask
+        return first_k_indices(mask, k), mask
 
     if match_type == "best":
         if v_merge != "comparator":
             raise ValueError("best match requires comparator v-merge")
-        if h_merge == "voting":
-            votes = h_merge_voting(match)                   # (..., nv, R)
-            # lexicographic (votes desc, distance asc): normalize the
-            # distance into [0, 1) so it can never flip a vote difference
-            # (votes are small ints — exactly representable in f32).
-            total = h_merge_adder(dist)
-            finite = jnp.isfinite(total)
-            # per-query max (last two axes): with a batched (Q, nv, R) total
-            # a global max would couple the queries' tie-break scales
-            dmax = jnp.max(jnp.where(finite, total, 0.0),
-                           axis=(-2, -1), keepdims=True) + 1.0
-            norm = jnp.clip(jnp.where(finite, total, dmax) / dmax,
-                            0.0, 0.999)
-            score = votes - norm
-            sv, idx = v_merge_comparator_topk(score, k, largest=True)
-            valid = sv > 0
-        elif h_merge == "adder":
-            total = h_merge_adder(dist)
-            dv, idx = v_merge_comparator_topk(total, k, largest=False)
-            valid = jnp.isfinite(dv)
-        elif h_merge == "and" and nh == 1:
-            # no horizontal partitioning: distances are already global
-            total = dist[..., 0, :]                         # (..., nv, R)
-            dv, idx = v_merge_comparator_topk(total, k, largest=False)
-            valid = jnp.isfinite(dv)
-        else:
-            raise ValueError(f"best match h_merge {h_merge!r} unsupported")
-        idx = jnp.where(valid, idx, -1)
-        K = dist.shape[-3] * dist.shape[-1]
-        mask = jnp.zeros((*idx.shape[:-1], K))
-        mask = put_topk_mask(mask, idx)
-        return idx, mask
+        values, largest = h_reduce_best(dist, match, h_merge=h_merge)
+        vals, idx = v_merge_comparator_topk(values, k, largest=largest)
+        K = match.shape[-3] * match.shape[-1]
+        return finalize_topk(vals, idx, largest=largest, K=K)
 
     raise ValueError(f"unknown match_type {match_type!r}")
 

@@ -1,0 +1,234 @@
+"""Sharded CAM search: the bank level of the paper's hierarchy as a
+physical device-mesh axis.
+
+``ShardedCAMSimulator`` wraps ``FunctionalSimulator`` with a shard_map over
+the stored grid's nv (vertical/bank) axis: each device holds an
+``(nv_local, nh, R, C)`` shard of the grid and runs the fused batched
+search kernel (one HBM pass per query batch) on its local banks, so
+dataset capacity scales with the mesh instead of a single HBM.  Only the
+*vertical* merge crosses devices — and it reproduces ``merge.merge``
+bit-for-bit:
+
+  * exact/threshold (gather v-merge): each device h-reduces its rows to a
+    local 0/1 match-line block; ``all_gather`` along the bank axis
+    concatenates the blocks into the global match lines (the lossless
+    gather of paper Fig. 3).
+  * best (comparator v-merge): each device takes a *stable* local top-k of
+    its row scores (``merge.local_topk_candidates``), the (n_banks × k)
+    candidate scores+global indices are gathered — bytes ~ n_banks·k, not
+    the row count — and a stable re-rank picks the global winners
+    (``merge.rerank_candidates``).  Stability makes the two-level
+    comparator tree exact, ties included.  The voting tie-break normalizer
+    is globalized with one ``lax.pmax`` of the per-device max distance.
+
+  Horizontal (nh) reduction and the sense amplifier never cross devices:
+  every device holds complete (R, C) subarrays, so ``sensing='best'``'s
+  intra-subarray winner-take-all stays inside the local kernel.
+
+C2C variation uses the per-bank RNG fold (``variation.apply_c2c_banked``):
+bank v draws its cycle noise from ``fold_in(cycle_key, v)``, which is
+invariant to how the nv axis is split — the single-device reference is
+``FunctionalSimulator(..., c2c_fold='bank')``.
+
+Grids whose nv does not divide the bank-axis size are padded with
+all-invalid banks (row_valid 0): padded rows carry +inf distance / zero
+match lines so they can never win, and the returned mask is sliced back to
+the true padded_K.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.mesh import compat_shard_map, make_cam_mesh
+from . import merge, variation
+from .config import CAMConfig
+from .functional import CAMState, FunctionalSimulator
+
+
+class ShardedCAMSimulator:
+    """Multi-device store-once / search-many CAM simulation.
+
+    Drop-in for ``FunctionalSimulator``: ``write`` places the grid across
+    the mesh, ``query`` runs the shard_map search + cross-device merge.
+
+    ``mesh``: a mesh with a ``bank_axis`` axis (see
+    ``launch.mesh.make_cam_mesh``); defaults to all local devices on
+    'bank'.  ``query_axis``: optional mesh axis that additionally splits
+    the query batch (Q must be a multiple of its size; with C2C noise, a
+    multiple of ``query_shards * c2c_query_tile`` so cycle tiles align
+    with shard boundaries).
+    """
+
+    def __init__(self, config: CAMConfig, mesh: Optional[Mesh] = None, *,
+                 bank_axis: str = "bank", query_axis: Optional[str] = None,
+                 use_kernel: bool = False, c2c_query_tile: int = 1):
+        self.sim = FunctionalSimulator(config, use_kernel=use_kernel,
+                                       c2c_query_tile=c2c_query_tile,
+                                       c2c_fold="bank")
+        self.config = config
+        self.mesh = mesh if mesh is not None else make_cam_mesh()
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.axis_sizes))
+        if bank_axis not in sizes:
+            raise ValueError(f"mesh has no {bank_axis!r} axis: "
+                             f"{self.mesh.axis_names}")
+        self.bank_axis = bank_axis
+        self.n_banks = sizes[bank_axis]
+        if query_axis and query_axis not in sizes:
+            raise ValueError(f"mesh has no {query_axis!r} axis: "
+                             f"{self.mesh.axis_names}")
+        self.query_axis = query_axis
+        self.n_query = sizes[query_axis] if query_axis else 1
+
+    # ------------------------------------------------------------- write
+    def write(self, stored: jax.Array, key: Optional[jax.Array] = None
+              ) -> CAMState:
+        """Write simulation + mesh placement of the resulting state."""
+        return self.shard_state(self.sim.write(stored, key))
+
+    def shard_state(self, state: CAMState) -> CAMState:
+        """Pad nv to a bank-axis multiple and place the state's pytree.
+
+        The padding banks are all-invalid (row_valid 0), so searches treat
+        them exactly like the in-bank padding rows the mapping submodule
+        already produces for K % R != 0.
+        """
+        from repro.runtime.sharding import cam_state_shardings
+        nv = state.grid.shape[0]
+        pad = (-nv) % self.n_banks
+        grid, row_valid = state.grid, state.row_valid
+        if pad:
+            grid = jnp.pad(grid,
+                           ((0, pad),) + ((0, 0),) * (grid.ndim - 1))
+            row_valid = jnp.pad(row_valid, ((0, pad), (0, 0)))
+        sh = cam_state_shardings(self.mesh, grid.ndim)
+        return CAMState(
+            grid=jax.device_put(grid, sh["grid"]),
+            lo=jax.device_put(state.lo, sh["lo"]),
+            hi=jax.device_put(state.hi, sh["hi"]),
+            spec=state.spec,
+            col_valid=jax.device_put(state.col_valid, sh["col_valid"]),
+            row_valid=jax.device_put(row_valid, sh["row_valid"]))
+
+    # ------------------------------------------------------------- query
+    def query(self, state: CAMState, queries: jax.Array,
+              key: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, jax.Array]:
+        """Query simulation across the mesh.
+
+        queries: (Q, N) application-domain batch (or a single (N,) query).
+        Returns (indices (Q, k), mask (Q, padded_K)), bit-identical to
+        ``FunctionalSimulator(..., c2c_fold='bank').query``.
+        """
+        if queries.ndim == 1:
+            idx, mask = self.query(state, queries[None], key)
+            return idx[0], mask[0]
+        Q = queries.shape[0]
+        if self.n_query > 1:
+            tile = (min(self.sim.c2c_query_tile, Q)
+                    if self.config.device.variation in ("c2c", "both")
+                    else 1)
+            if Q % (self.n_query * tile):
+                raise ValueError(
+                    f"Q={Q} must be a multiple of query_shards*c2c_tile="
+                    f"{self.n_query}*{tile} for query-axis sharding")
+        return self._query_jit(state, queries,
+                               key if key is not None
+                               else jax.random.PRNGKey(1))
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _query_jit(self, state: CAMState, queries, key):
+        qseg = self.sim.segment_queries(state, queries)      # (Q, nh, C)
+        idx, mask = self._sharded_search(state, qseg, key)
+        return idx, mask[..., :state.spec.padded_K]
+
+    # -------------------------------------------------------- shard_map
+    def _sharded_search(self, state: CAMState, qseg, key):
+        cfg = self.config
+        ba, qa = self.bank_axis, self.query_axis
+        nv_pad, R = state.grid.shape[0], state.grid.shape[2]
+        assert nv_pad % self.n_banks == 0, \
+            "state not placed with shard_state()"
+        nv_loc = nv_pad // self.n_banks
+        K_pad = nv_pad * R
+        k = self.sim.match_k(state.spec.padded_K)
+        Q = qseg.shape[0]
+        use_c2c = cfg.device.variation in ("c2c", "both")
+        tile = min(self.sim.c2c_query_tile, Q) if use_c2c else 1
+        n_tiles = -(-Q // tile) if use_c2c else 0
+
+        def body(grid, row_valid, col_valid, qseg_l, key):
+            b_idx = jax.lax.axis_index(ba)
+            cycle_keys = None
+            if use_c2c:
+                # the cycle keys are a function of the GLOBAL tile index:
+                # split once for all tiles, slice this query shard's range
+                gkeys = variation.split_for_queries(key, n_tiles)
+                if self.n_query > 1:
+                    tiles_loc = n_tiles // self.n_query
+                    q_idx = jax.lax.axis_index(qa)
+                    cycle_keys = jax.lax.dynamic_slice_in_dim(
+                        gkeys, q_idx * tiles_loc, tiles_loc)
+                else:
+                    cycle_keys = gkeys
+            dist, match = self.sim.search_shard(
+                grid, qseg_l, col_valid=col_valid, row_valid=row_valid,
+                key=key, v_offset=b_idx * nv_loc, cycle_keys=cycle_keys)
+            return self._combine(dist, match, b_idx, nv_loc, R, K_pad, k)
+
+        q_spec = P(qa) if self.n_query > 1 else P()
+        return compat_shard_map(
+            body, mesh=self.mesh,
+            in_specs=(P(ba), P(ba), P(), q_spec, P()),
+            out_specs=(q_spec, q_spec))(
+            state.grid, state.row_valid, state.col_valid, qseg, key)
+
+    def _combine(self, dist, match, b_idx, nv_loc: int, R: int,
+                 K_pad: int, k: int):
+        """Cross-device vertical merge of shard-local subarray outputs.
+
+        Mirrors ``merge.merge`` (same h-reduce, same stable comparator
+        ordering) with the nv reduction distributed over the bank axis.
+        """
+        cfg = self.config
+        ba = self.bank_axis
+        thr = (float(cfg.app.match_param)
+               if cfg.app.match_type == "threshold" else 0.0)
+
+        if cfg.app.match_type in ("exact", "threshold"):
+            if cfg.arch.v_merge != "gather":
+                raise ValueError(
+                    f"{cfg.app.match_type} match uses gather v-merge")
+            row = merge.h_reduce_match(
+                dist, match, match_type=cfg.app.match_type,
+                h_merge=cfg.arch.h_merge,
+                sensing_limit=cfg.circuit.sensing_limit, threshold=thr)
+            # lossless gather: concatenate the per-bank match-line blocks
+            rows = jax.lax.all_gather(row, ba, axis=1, tiled=True)
+            mask = merge.v_merge_gather(rows)               # (Q, K_pad)
+            return merge.first_k_indices(mask, k), mask
+
+        if cfg.app.match_type != "best":
+            raise ValueError(f"unknown match_type {cfg.app.match_type!r}")
+        if cfg.arch.v_merge != "comparator":
+            raise ValueError("best match requires comparator v-merge")
+        dmax = None
+        if cfg.arch.h_merge == "voting":
+            # tie-break normalizer over ALL banks: one scalar-ish pmax
+            dmax = jax.lax.pmax(merge.voting_dmax(dist), ba)
+        values, largest = merge.h_reduce_best(
+            dist, match, h_merge=cfg.arch.h_merge, dmax=dmax)
+        vals, gidx = merge.local_topk_candidates(
+            values, k, largest=largest, row_offset=b_idx * nv_loc * R)
+        # comparator tree: gather only the candidate scores + indices
+        av = jax.lax.all_gather(vals, ba)            # (n_banks, Q, k_l)
+        ai = jax.lax.all_gather(gidx, ba)
+        av = jnp.moveaxis(av, 0, -2).reshape(*vals.shape[:-1], -1)
+        ai = jnp.moveaxis(ai, 0, -2).reshape(*gidx.shape[:-1], -1)
+        best_v, best_i = merge.rerank_candidates(av, ai, k, largest=largest)
+        return merge.finalize_topk(best_v, best_i, largest=largest,
+                                   K=K_pad)

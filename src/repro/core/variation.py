@@ -66,3 +66,35 @@ def apply_c2c_batched(codes: jax.Array, cfg: DeviceConfig, bits: int,
     if cfg.variation not in ("c2c", "both"):
         return jnp.broadcast_to(codes, (keys.shape[0], *codes.shape))
     return jax.vmap(lambda k: apply_c2c(codes, cfg, bits, k))(keys)
+
+
+def apply_c2c_banked(codes: jax.Array, cfg: DeviceConfig, bits: int,
+                     keys: jax.Array, v_offset: jax.Array | int = 0
+                     ) -> jax.Array:
+    """C2C noise with a per-bank RNG fold (the multi-device draw).
+
+    The noise for bank ``v`` of cycle ``t`` is drawn from
+    ``fold_in(keys[t], v_offset + v)``, so a grid split along its nv (bank)
+    axis across devices — each device passing its first global bank index
+    as ``v_offset`` — draws bit-identical noise to the unsplit grid with
+    ``v_offset=0``.  The full-grid draw of ``apply_c2c`` has no such
+    split-invariance (one (nv, nh, R, C) normal draw cannot be sliced into
+    per-shard draws), which is why the sharded simulator uses this fold.
+
+    codes (nv, nh, R, C[, 2]); keys (T, 2) -> (T, *codes.shape).
+    """
+    if cfg.variation not in ("c2c", "both"):
+        return jnp.broadcast_to(codes, (keys.shape[0], *codes.shape))
+    nv = codes.shape[0]
+    bank_ids = jnp.arange(nv) + v_offset
+
+    def one_bank(key: jax.Array, v: jax.Array, bank: jax.Array) -> jax.Array:
+        sigma = _sigma_for(bank, cfg, bits)
+        noise = jax.random.normal(jax.random.fold_in(key, v), bank.shape,
+                                  bank.dtype)
+        return bank + sigma * noise
+
+    def one_cycle(key: jax.Array) -> jax.Array:
+        return jax.vmap(lambda v, b: one_bank(key, v, b))(bank_ids, codes)
+
+    return jax.vmap(one_cycle)(keys)

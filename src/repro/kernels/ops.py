@@ -97,6 +97,54 @@ def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
         interpret=itp)
 
 
+def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
+                             mesh, bank_axis: str = "bank",
+                             distance: str, sensing: str,
+                             sensing_limit: float = 0.0,
+                             threshold: float = 0.0,
+                             col_valid: Optional[jax.Array] = None,
+                             row_valid: Optional[jax.Array] = None,
+                             q_tile: int = 32, want_dist: bool = True,
+                             interpret: Optional[bool] = None):
+    """``cam_search_fused`` with the stored grid's nv axis sharded over
+    ``bank_axis`` of ``mesh``: each device streams only its local
+    (nv/n_banks, nh, R, C) shard — the kernel-layer unit the sharded
+    simulator (and the weak-scaling benchmark) builds on.
+
+    Outputs keep the bank sharding on their nv axis ((Q, nv, nh, R),
+    sharded on dim 1); the cross-device merge lives one layer up in
+    ``core.sharded``, which consumes these shard-local results.  nv must
+    divide the bank-axis size (``core.sharded`` handles padding).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import compat_shard_map
+
+    nv, nh, R, C = stored.shape
+    n_banks = dict(zip(mesh.axis_names, mesh.axis_sizes))[bank_axis]
+    if nv % n_banks:
+        raise ValueError(f"nv={nv} must be a multiple of the bank axis "
+                         f"size {n_banks}")
+    if col_valid is None:
+        col_valid = jnp.ones((nh, C), jnp.float32)
+    if row_valid is None:
+        row_valid = jnp.ones((nv, R), jnp.float32)
+    itp = _interpret() if interpret is None else interpret
+
+    def body(s, rv, cv, q):
+        return cam_search_fused_pallas(
+            s, q, cv, rv, distance=distance, sensing=sensing,
+            sensing_limit=float(sensing_limit), threshold=float(threshold),
+            q_tile=q_tile, want_dist=want_dist, interpret=itp)
+
+    out_spec = P(None, bank_axis)
+    return compat_shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bank_axis), P(bank_axis), P(), P()),
+        out_specs=(out_spec, out_spec) if want_dist else out_spec)(
+        stored, row_valid, col_valid, queries)
+
+
 # --------------------------------------------------------------------------
 # cam_topk: streaming best-match top-k (CAM-retrieval attention hot loop)
 # --------------------------------------------------------------------------

@@ -60,3 +60,17 @@ def make_local_mesh(model: int = 1):
     n = len(jax.devices())
     data = max(1, n // model)
     return compat_make_mesh((data, model), ("data", "model"))
+
+
+def make_cam_mesh(banks: int | None = None, queries: int = 1):
+    """Device mesh for sharded CAM search (core.sharded).
+
+    The 'bank' axis carries the stored grid's nv (vertical/bank) dimension
+    — the bank level of the paper's subarray→array→mat→bank hierarchy as a
+    physical parallelism axis; the optional 'query' axis splits the search
+    batch.  Defaults to all local devices on 'bank'.
+    """
+    n = len(jax.devices())
+    if banks is None:
+        banks = max(1, n // max(1, queries))
+    return compat_make_mesh((banks, queries), ("bank", "query"))

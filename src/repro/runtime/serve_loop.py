@@ -1,9 +1,16 @@
-"""Serve-step factory + a small continuous-batching serving loop.
+"""Serve-step factory + small continuous-batching serving loops.
 
 ``serve_step`` is the unit the decode dry-run shapes lower: one new token
 for every sequence in the batch against a seq_len KV cache.  The
 ``Server`` driver adds slot management (requests join/leave the batch
 between steps) for the serving example.
+
+``CAMSearchServer`` is the CAM-side counterpart: a micro-batching
+front-end over the store-once / search-many simulators.  Search requests
+accumulate into fixed-size query batches (padded so the jit cache stays
+warm at a single shape) and every step drives ONE fused batched search —
+on the sharded simulator that is one grid pass per device plus the
+cross-device merge, regardless of how many requests rode the batch.
 """
 from __future__ import annotations
 
@@ -103,6 +110,87 @@ class Server:
         steps = 0
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+
+# ---------------------------------------------------------------------------
+# CAM search serving
+# ---------------------------------------------------------------------------
+@dataclass
+class SearchRequest:
+    """One in-memory-search request against the resident CAM store."""
+    rid: int
+    query: np.ndarray
+    indices: Optional[np.ndarray] = None   # (k,) matched entries, -1 padded
+    mask: Optional[np.ndarray] = None      # (padded_K,) match lines
+
+    @property
+    def done(self) -> bool:
+        return self.indices is not None
+
+
+@dataclass
+class CAMSearchServer:
+    """Micro-batching CAM search server (store once, serve many).
+
+    ``sim`` is a ``FunctionalSimulator`` or ``ShardedCAMSimulator`` (any
+    object with ``query(state, queries, key)``); ``state`` its written —
+    and, for the sharded simulator, mesh-placed — store.  Requests are
+    answered in submission order in batches of exactly ``batch`` queries
+    (short tails are zero-padded, results discarded), so every step hits
+    the same compiled search and, on the sharded path, the query-shard
+    divisibility contract holds by construction.  Per-batch C2C keys are
+    folded from ``key`` by step index, matching the simulator's one-draw-
+    per-search-cycle model.
+    """
+    sim: Any
+    state: Any
+    batch: int = 32
+    key: Optional[jax.Array] = None
+
+    def __post_init__(self):
+        if self.batch < 1:
+            raise ValueError("batch must be >= 1")
+        if self.key is None:
+            self.key = jax.random.PRNGKey(0)
+        self.queue: List[SearchRequest] = []
+        self.finished: List[SearchRequest] = []
+        self._next_rid = 0
+        self._steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, query) -> SearchRequest:
+        req = SearchRequest(self._next_rid, np.asarray(query))
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def step(self) -> int:
+        """Serve one query batch; returns #requests answered."""
+        if not self.queue:
+            return 0
+        reqs = self.queue[: self.batch]
+        del self.queue[: len(reqs)]
+        qs = np.stack([r.query for r in reqs]).astype(np.float32)
+        pad = self.batch - len(reqs)
+        if pad:
+            qs = np.concatenate(
+                [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
+        step_key = jax.random.fold_in(self.key, self._steps)
+        self._steps += 1
+        idx, mask = self.sim.query(self.state, jnp.asarray(qs),
+                                   key=step_key)
+        idx_np, mask_np = np.asarray(idx), np.asarray(mask)
+        for i, req in enumerate(reqs):
+            req.indices, req.mask = idx_np[i], mask_np[i]
+            self.finished.append(req)
+        return len(reqs)
+
+    def run(self, max_steps: int = 10_000) -> List[SearchRequest]:
+        steps = 0
+        while self.queue and steps < max_steps:
             self.step()
             steps += 1
         return self.finished

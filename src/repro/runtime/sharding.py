@@ -53,14 +53,24 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "ssm_state": (),
     "conv": (),
     "ssm_groups": (),
+    # --- CAM grid axes (core.sharded): the stored grid's nv (bank) dim
+    # maps onto the 'bank' mesh axis — the bank level of the paper's
+    # subarray→array→mat→bank hierarchy as a physical parallelism axis —
+    # and the query batch optionally splits over 'query'.
+    "cam_bank": ("bank",),
+    "cam_query": ("query",),
+    "cam_row": (),            # R rows stay whole: sensing 'best' reduces
+                              # over them inside one subarray/kernel tile
+    "cam_col": (),            # C cols stay whole for the same reason
 }
 
 # priority: dims earlier in this list claim mesh axes first (batch before
 # kv_seq so the cache stays batch-major whenever batch can shard; heads
-# before attn_seq so seq-parallel attention only kicks in as a fallback)
+# before attn_seq so seq-parallel attention only kicks in as a fallback;
+# cam_bank before cam_query so the grid always claims its axis)
 _PRIORITY = ("experts", "heads", "q_lora", "vocab", "mlp", "moe_mlp",
              "ssm_inner", "ssm_heads", "kv_heads", "batch", "kv_seq",
-             "attn_seq", "seq", "embed")
+             "attn_seq", "seq", "embed", "cam_bank", "cam_query")
 # dims eligible to carry FSDP (data-axis) sharding for parameters
 _FSDP_ELIGIBLE = ("embed", "vocab", "mlp", "moe_mlp", "ssm_inner", "heads",
                   "q_lora", "kv_lora", "experts")
@@ -183,6 +193,44 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     spec = ctx.rules.spec_for(x.shape, axes, ctx.mesh)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# CAM grid placement (core.sharded)
+# ---------------------------------------------------------------------------
+def cam_state_shardings(mesh: Mesh, grid_ndim: int = 4,
+                        rules: Optional[ShardingRules] = None) -> Dict:
+    """NamedShardings for the CAMState pytree fields.
+
+    The grid's leading nv axis follows the 'cam_bank' rule; row_valid
+    shards with it (it is the (nv, R) mask of the same rows); quantization
+    scales and the (nh, C) column mask replicate.  ``grid_ndim`` is 4 for
+    value grids and 5 for ACAM [lo, hi] range grids.
+
+    Divisibility is the caller's contract (the sharded simulator pads nv
+    to a bank-axis multiple before placing), so specs are resolved
+    directly rather than through the size-probing ``spec_for``.
+    """
+    rules = rules or ShardingRules()
+    bank = rules.rules.get("cam_bank", ())
+    axis = next((a for a in bank if a in mesh.axis_names), None)
+    gspec = PartitionSpec(axis) if axis else PartitionSpec()
+    return {
+        "grid": NamedSharding(mesh, gspec),
+        "row_valid": NamedSharding(mesh, gspec),
+        "col_valid": NamedSharding(mesh, PartitionSpec()),
+        "lo": NamedSharding(mesh, PartitionSpec()),
+        "hi": NamedSharding(mesh, PartitionSpec()),
+    }
+
+
+def cam_query_spec(mesh: Mesh, q_shape: Sequence[int],
+                   rules: Optional[ShardingRules] = None) -> PartitionSpec:
+    """PartitionSpec for a (Q, ...) query batch: Q follows 'cam_query'
+    (replicated when the mesh has no query axis or Q does not divide)."""
+    rules = rules or ShardingRules()
+    axes = ("cam_query",) + (None,) * (len(q_shape) - 1)
+    return rules.spec_for(q_shape, axes, mesh)
 
 
 # ---------------------------------------------------------------------------

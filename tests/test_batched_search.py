@@ -301,6 +301,86 @@ def test_query_kernel_path_matches_jnp_path():
 
 
 # ---------------------------------------------------------------------------
+# ACAM range path (5-D [lo, hi] stored grids)
+# ---------------------------------------------------------------------------
+def test_range_violations_oracle():
+    """range_violations == brute-force count of cells whose [lo, hi]
+    range excludes the query value, with padded columns masked out."""
+    from repro.core.distance import range_violations
+    rng = np.random.default_rng(0)
+    R, C = 6, 5
+    lo = rng.random((R, C)).astype(np.float32) * 0.6
+    hi = lo + rng.random((R, C)).astype(np.float32) * 0.4
+    stored = jnp.asarray(np.stack([lo, hi], axis=-1))
+    q = jnp.asarray(rng.random((C,)).astype(np.float32))
+    valid = jnp.ones((C,)).at[C - 1].set(0.0)
+    got = np.asarray(range_violations(stored, q, valid))
+    qn = np.asarray(q)
+    want = (((qn[None, :] < lo) | (qn[None, :] > hi))
+            * np.asarray(valid)[None, :]).sum(-1)
+    np.testing.assert_array_equal(got, want)
+    # boundary values are INSIDE the range (closed interval)
+    edge = jnp.asarray(lo[0])
+    got_edge = np.asarray(range_violations(stored, edge, None))
+    assert got_edge[0] == 0.0
+
+
+def test_acam_batched_roundtrip_matches_per_query():
+    """subarray_distances on a 5-D range grid must round-trip through the
+    batched entry point: subarray_query_batched == per-query
+    subarray_query == unpartitioned oracle, for every query in the batch."""
+    from repro.core.distance import range_violations
+    rng = np.random.default_rng(3)
+    K, N, Q = 21, 10, 7
+    lo = rng.random((K, N)).astype(np.float32) * 0.5
+    hi = lo + rng.random((K, N)).astype(np.float32) * 0.5
+    stored = jnp.asarray(np.stack([lo, hi], axis=-1))
+    spec = mapping.grid_spec(K, N, 8, 4)
+    grid = mapping.partition_stored(stored, spec)           # (nv, nh, R, C, 2)
+    assert grid.ndim == 5
+    queries = jnp.asarray(rng.random((Q, N)).astype(np.float32))
+    qseg = mapping.partition_query(queries, spec)
+    kw = dict(distance="range", sensing="exact", sensing_limit=0.0,
+              col_valid=mapping.col_valid_mask(spec),
+              row_valid=mapping.row_valid_mask(spec))
+    db, mb = subarray.subarray_query_batched(grid, qseg, **kw)
+    assert db.shape == (Q, spec.nv, spec.nh, spec.padded_K // spec.nv)
+    # batched == per-query (the ACAM path has no kernel; both broadcast)
+    for i in range(Q):
+        dq, mq = subarray.subarray_query(grid, qseg[i], **kw)
+        np.testing.assert_array_equal(np.asarray(db[i]), np.asarray(dq))
+        np.testing.assert_array_equal(np.asarray(mb[i]), np.asarray(mq))
+    # horizontal adder merge over the partition == unpartitioned oracle
+    total = np.asarray(db).sum(axis=-2).reshape(Q, -1)[:, :K]
+    want = np.asarray(range_violations(stored, queries, None))
+    np.testing.assert_array_equal(total, want)
+
+
+def test_acam_functional_exact_match_on_containing_ranges():
+    """End-to-end ACAM: a query inside every cell range of entry i is an
+    exact match for entry i (X-TIME-style decision rule), on the batched
+    pipeline."""
+    cfg = CAMConfig(
+        app=AppConfig(distance="range", match_type="exact", match_param=4,
+                      data_bits=0),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=4, cols=4, cell_type="acam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"))
+    rng = np.random.default_rng(5)
+    K, N = 11, 6
+    centers = rng.random((K, N)).astype(np.float32)
+    lo, hi = centers - 0.02, centers + 0.02
+    sim = FunctionalSimulator(cfg)
+    state = sim.write(jnp.asarray(np.stack([lo, hi], axis=-1)))
+    queries = jnp.asarray(centers[[2, 9, 4]])
+    idx, mask = sim.query(state, queries)
+    for row, entry in enumerate((2, 9, 4)):
+        assert np.asarray(mask[row])[entry] == 1.0
+        assert np.asarray(idx[row])[0] == entry
+
+
+# ---------------------------------------------------------------------------
 # cam_topk reshape regression
 # ---------------------------------------------------------------------------
 def test_cam_topk_batched_3d_shapes_and_values():

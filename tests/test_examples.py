@@ -1,0 +1,38 @@
+"""Smoke tests: each refactored example's ``main()`` runs end to end.
+
+Run in subprocesses (the examples are scripts, not importable from the
+test env's path) with the repo's src + examples on PYTHONPATH; marked
+``slow`` — they pay a full jax import and real model/simulator work.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run_example(name: str, timeout: int = 600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    script = os.path.join(_ROOT, "examples", name)
+    return subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_quickstart_example_runs():
+    proc = _run_example("quickstart.py")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "top-3 matches per query" in proc.stdout
+    assert "search latency" in proc.stdout
+
+
+@pytest.mark.slow
+def test_long_context_retrieval_example_runs():
+    proc = _run_example("long_context_retrieval.py")
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK: CAM best-match retrieval recovered the needle" \
+        in proc.stdout

@@ -165,6 +165,40 @@ def test_compressed_psum_shard_map():
 
 
 # ---------------------------------------------------------------------------
+# CAM search serving (micro-batching over the store-once simulators)
+# ---------------------------------------------------------------------------
+def test_cam_search_server_batches_and_matches_direct_query():
+    from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                            DeviceConfig, FunctionalSimulator)
+    from repro.runtime import CAMSearchServer
+
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=2,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"))
+    sim = FunctionalSimulator(cfg)
+    stored = jax.random.uniform(KEY, (30, 16))
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(1),
+                                            (11, 16)))
+    state = sim.write(stored)
+    srv = CAMSearchServer(sim, state, batch=4)
+    reqs = [srv.submit(q) for q in queries]
+    assert srv.step() == 4                 # one full batch
+    assert reqs[3].done and not reqs[4].done
+    done = srv.run()
+    assert len(done) == 11 and all(r.done for r in reqs)
+    # answers equal the direct batched query (no variation => key-free)
+    idx, mask = sim.query(state, jnp.asarray(queries))
+    for i, r in enumerate(done):
+        assert r.rid == i
+        np.testing.assert_array_equal(r.indices, np.asarray(idx[i]))
+        np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
+
+
+# ---------------------------------------------------------------------------
 # sharding resolver
 # ---------------------------------------------------------------------------
 def _mesh_16x16_abstract():
@@ -194,6 +228,29 @@ def test_resolver_no_double_axis_use():
     spec = rules.spec_for((4096, 4096), ("mlp", "vocab"), mesh)
     got = [s for s in spec if s is not None]
     assert got.count("model") <= 1
+
+
+def test_resolver_cam_rules():
+    """cam_bank/cam_query resolve on a CAM mesh and stay silent on the
+    LM meshes (no 'bank'/'query' axes there)."""
+    from repro.launch.mesh import compat_abstract_mesh
+    rules = ShardingRules()
+    cam_mesh = compat_abstract_mesh((4, 2), ("bank", "query"))
+    spec = rules.spec_for((8, 2, 16, 16),
+                          ("cam_bank", None, "cam_row", "cam_col"),
+                          cam_mesh)
+    assert spec == jax.sharding.PartitionSpec("bank")
+    qspec = rules.spec_for((6, 2, 16), ("cam_query", None, None), cam_mesh)
+    assert qspec == jax.sharding.PartitionSpec("query")
+    # nv=3 does not divide bank=4: replicated, never a crash
+    assert rules.spec_for((3, 2, 16, 16),
+                          ("cam_bank", None, None, None),
+                          cam_mesh) == jax.sharding.PartitionSpec()
+    # LM mesh: cam axes silently replicate
+    lm = _mesh_16x16_abstract()
+    assert rules.spec_for((8, 2, 16, 16),
+                          ("cam_bank", None, None, None),
+                          lm) == jax.sharding.PartitionSpec()
 
 
 def test_resolver_kv_seq_takes_data_when_batch_cannot():

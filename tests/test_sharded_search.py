@@ -1,0 +1,272 @@
+"""Sharded CAM search: multi-device parity + merge/sense properties.
+
+Three layers of guarantees:
+  * a 4-host-device subprocess sweep asserting ``ShardedCAMSimulator`` is
+    bit-identical to the single-device ``FunctionalSimulator`` across all
+    {exact, best, threshold} x {l2, l1, hamming, dot} combos, including
+    C2C noise (per-bank RNG folding) and the Pallas kernel path;
+  * property tests (hypothesis, offline shim) for the cross-device merge
+    invariants: the local-top-k + re-rank comparator is split-invariant,
+    associative, and (absent score ties) shard-order permutation
+    invariant; the gather merge is split-invariant;
+  * sense-amplifier monotonicity: loosening ``sensing_limit`` never
+    removes a match, for every sensing mode.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import merge, subarray
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity (subprocess: XLA host-device trick must precede
+# jax init, reusing the JAX_PLATFORMS=cpu pattern from the batched-search PR)
+# ---------------------------------------------------------------------------
+_PARITY_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import zlib
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                        DeviceConfig, FunctionalSimulator,
+                        ShardedCAMSimulator)
+from repro.launch.mesh import make_cam_mesh
+
+assert len(jax.devices()) == 4, jax.devices()
+mesh = make_cam_mesh(4)
+mesh_q = make_cam_mesh(2, 2)
+
+def check(cfg, K=37, N=12, Q=9, use_kernel=False, query_axis=None,
+          c2c_tile=1, tag=""):
+    m = mesh_q if query_axis else mesh
+    sim = FunctionalSimulator(cfg, use_kernel=use_kernel, c2c_fold="bank",
+                              c2c_query_tile=c2c_tile)
+    ssim = ShardedCAMSimulator(cfg, m, use_kernel=use_kernel,
+                               query_axis=query_axis,
+                               c2c_query_tile=c2c_tile)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(zlib.crc32(tag.encode())))
+    stored = jax.random.uniform(k1, (K, N))
+    queries = jax.random.uniform(k2, (Q, N))
+    qkey = jax.random.PRNGKey(7)
+    ia, ma = sim.query(sim.write(stored), queries, key=qkey)
+    ib, mb = ssim.query(ssim.write(stored), queries, key=qkey)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib), err_msg=tag)
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb), err_msg=tag)
+    print("OK", tag)
+
+def cfg_for(match, distance, h_merge, v_merge, sensing, variation="none"):
+    return CAMConfig(
+        app=AppConfig(distance=distance, match_type=match, match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing=sensing, sensing_limit=0.5),
+        device=DeviceConfig(device="fefet", variation=variation,
+                            variation_std=0.4))
+
+n = 0
+for distance in ("l2", "l1", "hamming", "dot"):
+    check(cfg_for("exact", distance, "and", "gather", "exact"),
+          tag=f"exact-{distance}")
+    check(cfg_for("best", distance, "adder", "comparator", "best"),
+          tag=f"best-{distance}")
+    check(cfg_for("threshold", distance, "adder", "gather", "threshold"),
+          tag=f"threshold-{distance}")
+    n += 3
+
+# voting h-merge (the approximate paper merge; global pmax tie-break)
+check(cfg_for("best", "l2", "voting", "comparator", "best"), tag="voting")
+# C2C noise with per-shard RNG folding, one per match type
+check(cfg_for("exact", "hamming", "and", "gather", "exact", "c2c"),
+      tag="c2c-exact")
+check(cfg_for("best", "l2", "adder", "comparator", "best", "c2c"),
+      tag="c2c-best")
+check(cfg_for("threshold", "l1", "adder", "gather", "threshold", "c2c"),
+      tag="c2c-threshold")
+# Pallas fused kernel path (interpret mode on CPU)
+check(cfg_for("best", "l2", "adder", "comparator", "best"),
+      use_kernel=True, tag="kernel-best")
+check(cfg_for("exact", "hamming", "and", "gather", "exact"),
+      use_kernel=True, tag="kernel-exact")
+# query-axis sharding (2 banks x 2 query shards), incl. c2c cycle slicing
+check(cfg_for("best", "l2", "adder", "comparator", "best"), Q=8,
+      query_axis="query", tag="qshard-best")
+check(cfg_for("best", "l2", "adder", "comparator", "best", "c2c"), Q=8,
+      query_axis="query", c2c_tile=2, tag="qshard-c2c")
+n += 9
+print(f"PARITY_OK {n}")
+'''
+
+
+def _run_subprocess(script: str, timeout: int = 900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.multidevice
+def test_sharded_parity_4_devices():
+    proc = _run_subprocess(_PARITY_SCRIPT)
+    assert proc.returncode == 0 and "PARITY_OK 21" in proc.stdout, \
+        (proc.stdout[-2000:], proc.stderr[-4000:])
+
+
+# ---------------------------------------------------------------------------
+# merge invariants (pure functions — no devices needed)
+# ---------------------------------------------------------------------------
+def _merge_candidates(values: np.ndarray, splits, k: int, largest: bool):
+    """Reference two-level comparator: local top-k per shard (global row
+    indices tracked), concat in shard order, stable re-rank."""
+    vals, idxs = [], []
+    offset = 0
+    for block in np.split(values, splits, axis=-2):
+        v, i = merge.local_topk_candidates(
+            jnp.asarray(block), k, largest=largest,
+            row_offset=offset)
+        vals.append(np.asarray(v))
+        idxs.append(np.asarray(i))
+        offset += block.shape[-2] * block.shape[-1]
+    av = np.concatenate(vals, axis=-1)
+    ai = np.concatenate(idxs, axis=-1)
+    bv, bi = merge.rerank_candidates(jnp.asarray(av), jnp.asarray(ai), k,
+                                     largest=largest)
+    return np.asarray(bv), np.asarray(bi)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 4), st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_comparator_merge_split_invariant(seed, n_shards, k):
+    """Local-k + gathered re-rank == global comparator, for ANY nv split
+    (1 shard == the unsharded path), both directions."""
+    rng = np.random.default_rng(seed)
+    nv, R = 8, 5
+    values = rng.standard_normal((3, nv, R)).astype(np.float32)
+    splits = np.cumsum([nv // n_shards] * (n_shards - 1)).tolist()
+    for largest in (False, True):
+        gv, gi = merge.v_merge_comparator_topk(
+            jnp.asarray(values), k, largest=largest)
+        sv, si = _merge_candidates(values, splits, k, largest)
+        np.testing.assert_array_equal(np.asarray(gi), si)
+        np.testing.assert_allclose(np.asarray(gv), sv, rtol=0, atol=0)
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=8, deadline=None)
+def test_comparator_merge_associative(seed):
+    """Tree-reducing candidate lists == flat re-rank (associativity):
+    rerank(rerank(A ++ B) ++ C) == rerank(A ++ B ++ C), ties included."""
+    rng = np.random.default_rng(seed)
+    k = 3
+    # quantized values force ties across shards
+    blocks = [np.round(rng.standard_normal((2, 4, 4)) * 2) / 2 for _ in
+              range(3)]
+    cands = []
+    offset = 0
+    for b in blocks:
+        v, i = merge.local_topk_candidates(jnp.asarray(b.astype(np.float32)),
+                                           k, largest=False,
+                                           row_offset=offset)
+        cands.append((np.asarray(v), np.asarray(i)))
+        offset += b.shape[-2] * b.shape[-1]
+    flat_v = jnp.asarray(np.concatenate([c[0] for c in cands], axis=-1))
+    flat_i = jnp.asarray(np.concatenate([c[1] for c in cands], axis=-1))
+    fv, fi = merge.rerank_candidates(flat_v, flat_i, k, largest=False)
+    # tree: (A ++ B) first, then ++ C
+    ab_v = jnp.asarray(np.concatenate([cands[0][0], cands[1][0]], axis=-1))
+    ab_i = jnp.asarray(np.concatenate([cands[0][1], cands[1][1]], axis=-1))
+    tv, ti = merge.rerank_candidates(ab_v, ab_i, k, largest=False)
+    tv2 = jnp.concatenate([tv, jnp.asarray(cands[2][0])], axis=-1)
+    ti2 = jnp.concatenate([ti, jnp.asarray(cands[2][1])], axis=-1)
+    tv3, ti3 = merge.rerank_candidates(tv2, ti2, k, largest=False)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(ti3))
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(tv3))
+
+
+@given(st.integers(0, 10 ** 6), st.integers(2, 4))
+@settings(max_examples=8, deadline=None)
+def test_comparator_merge_shard_order_permutation_invariant(seed, n_shards):
+    """With continuous (tie-free) scores the merged winner set does not
+    depend on the order shards contribute their candidates."""
+    rng = np.random.default_rng(seed)
+    nv, R, k = 8, 4, 4
+    values = rng.standard_normal((nv, R)).astype(np.float32)
+    splits = np.split(np.arange(nv), n_shards)
+    cands = []
+    for shard in splits:
+        v, i = merge.local_topk_candidates(
+            jnp.asarray(values[shard]), k, largest=False,
+            row_offset=int(shard[0]) * R)
+        cands.append((np.asarray(v), np.asarray(i)))
+    perm = rng.permutation(n_shards)
+    v0 = jnp.asarray(np.concatenate([cands[j][0] for j in range(n_shards)]))
+    i0 = jnp.asarray(np.concatenate([cands[j][1] for j in range(n_shards)]))
+    vp = jnp.asarray(np.concatenate([cands[j][0] for j in perm]))
+    ip = jnp.asarray(np.concatenate([cands[j][1] for j in perm]))
+    bv0, bi0 = merge.rerank_candidates(v0, i0, k, largest=False)
+    bvp, bip = merge.rerank_candidates(vp, ip, k, largest=False)
+    np.testing.assert_array_equal(np.asarray(bi0), np.asarray(bip))
+    np.testing.assert_allclose(np.asarray(bv0), np.asarray(bvp), atol=0)
+
+
+@given(st.integers(0, 10 ** 6), st.integers(1, 4))
+@settings(max_examples=8, deadline=None)
+def test_gather_merge_split_invariant(seed, n_shards):
+    """Concatenating per-shard match-line blocks in bank order == the
+    unsharded gather, and first-k indices agree for every k."""
+    rng = np.random.default_rng(seed)
+    nv, R = 8, 5
+    rows = (rng.random((2, nv, R)) < 0.3).astype(np.float32)
+    full = merge.v_merge_gather(jnp.asarray(rows))
+    splits = np.cumsum([nv // n_shards] * (n_shards - 1)).tolist()
+    parts = [np.asarray(merge.v_merge_gather(jnp.asarray(b)))
+             for b in np.split(rows, splits, axis=-2)]
+    np.testing.assert_array_equal(np.asarray(full),
+                                  np.concatenate(parts, axis=-1))
+    for k in (1, 3, nv * R):
+        ia = merge.first_k_indices(jnp.asarray(full), k)
+        ib = merge.first_k_indices(
+            jnp.asarray(np.concatenate(parts, axis=-1)), k)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+
+
+def test_first_k_indices_ignores_trailing_zero_banks():
+    """Bank padding appends always-zero match lines; indices must not
+    move (the sharded simulator slices the mask but reuses the indices)."""
+    mask = jnp.asarray([[0.0, 1.0, 0.0, 1.0, 1.0, 0.0]])
+    padded = jnp.pad(mask, ((0, 0), (0, 10)))
+    for k in (1, 2, 4):
+        np.testing.assert_array_equal(
+            np.asarray(merge.first_k_indices(mask, k)),
+            np.asarray(merge.first_k_indices(padded, k)))
+
+
+# ---------------------------------------------------------------------------
+# sense monotonicity: loosening the sensing limit never removes a match
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=10, deadline=None)
+def test_sense_monotone_in_sensing_limit(seed):
+    rng = np.random.default_rng(seed)
+    dist = jnp.asarray(rng.random((2, 3, 2, 8)).astype(np.float32) * 4)
+    row_valid = jnp.asarray((rng.random((3, 8)) < 0.9).astype(np.float32))
+    limits = sorted(rng.random(4) * 3)
+    for sensing in ("exact", "best", "threshold"):
+        prev = None
+        for sl in limits:
+            m = np.asarray(subarray.sense(dist, sensing, float(sl),
+                                          threshold=1.0,
+                                          row_valid=row_valid))
+            if prev is not None:
+                assert (m >= prev).all(), (sensing, sl)
+            prev = m
