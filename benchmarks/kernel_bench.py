@@ -53,6 +53,50 @@ def bench_batched_vs_vmap():
               f"speedup={us_v / us_b:.2f}x_match={ok}")
 
 
+def bench_acam_range():
+    """ACAM range search Q-sweep: the fused batched range kernel
+    (``cam_range_fused_pallas``, match-only AND-merge path) vs the jnp
+    broadcast path it replaces (``subarray_query_batched`` use_kernel=False,
+    which materializes the (Q, nv, nh, R, C) violation block).  The grid is
+    sized so the broadcast intermediate blows past cache at Q>=16 — the
+    regime the kernel exists for; at Q=1 the jnp path wins (no batch to
+    amortize the interpret-mode grid overhead over) and the row records the
+    crossover honestly."""
+    from repro.core import subarray
+
+    nv, nh, R, C = 8, 1, 512, 128
+    k1, k2 = jax.random.split(jax.random.PRNGKey(2))
+    lo = jax.random.uniform(k1, (nv, nh, R, C))
+    grid = jnp.stack([lo, lo + 0.05], axis=-1)        # (nv, nh, R, C, 2)
+    centers = lo + 0.025                              # exact-match queries
+    cv = jnp.ones((nh, C))
+    rv = jnp.ones((nv, R))
+    kw = dict(distance="range", sensing="exact", sensing_limit=0.0,
+              col_valid=cv, row_valid=rv)
+    jnp_f = jax.jit(lambda g, q: subarray.subarray_query_batched(
+        g, q, use_kernel=False, **kw)[1])
+    ker_f = jax.jit(lambda g, q: subarray.subarray_query_batched(
+        g, q, use_kernel=True, want_dist=False, **kw)[1])
+    for Q in (1, 16, 64, 256):
+        # half the batch queries stored-row centers (guaranteed in-range
+        # for every cell of that row), half random misses — so the parity
+        # bit compares real match lines, not two all-zero tensors
+        qb = jax.random.uniform(k2, (Q, nh, C))
+        hit = centers[jnp.arange(Q) % nv, :, jnp.arange(Q) % R, :]
+        qb = jnp.where((jnp.arange(Q) % 2 == 0)[:, None, None], hit, qb)
+        mk, mj = ker_f(grid, qb), jnp_f(grid, qb)
+        ok = bool(np.array_equal(np.asarray(mk), np.asarray(mj)))
+        hit_q = int((np.asarray(mj).reshape(Q, -1).sum(-1) > 0).sum())
+        us_k = _time(ker_f, grid, qb)
+        us_j = _time(jnp_f, grid, qb)
+        qps_k = Q / (us_k * 1e-6)
+        qps_j = Q / (us_j * 1e-6)
+        print(f"kernel_acam_range_q{Q},{us_k:.0f},"
+              f"qps_kernel={qps_k:.0f}_qps_jnp={qps_j:.0f}_"
+              f"speedup={us_j / us_k:.2f}x_rows={nv * R}_"
+              f"hit_q={hit_q}_match={ok}")
+
+
 def main():
     key = jax.random.PRNGKey(0)
     # cam_search: MANN-like grid
@@ -68,6 +112,7 @@ def main():
           f"ref_us={us_r:.0f}_match={ok}")
 
     bench_batched_vs_vmap()
+    bench_acam_range()
 
     # cam_topk: retrieval attention hot loop
     keys = jax.random.normal(key, (8192, 128))

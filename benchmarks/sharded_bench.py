@@ -35,7 +35,9 @@ DEVICE_SWEEP = (1, 2, 4)
 
 
 def worker(n_devices: int) -> None:
-    """One sweep point (runs in a subprocess with N host devices)."""
+    """One sweep point (runs in a subprocess with N host devices): the
+    point-code (mcam/l2) row and the ACAM range-search row, both at fixed
+    rows/device."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -45,18 +47,6 @@ def worker(n_devices: int) -> None:
     from repro.launch.mesh import make_cam_mesh
 
     assert len(jax.devices()) >= n_devices, jax.devices()
-    cfg = CAMConfig(
-        app=AppConfig(distance="l2", match_type="best", match_param=3,
-                      data_bits=3),
-        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
-        circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="mcam",
-                              sensing="best"),
-        device=DeviceConfig(device="fefet"))
-
-    K = n_devices * BANKS_PER_DEV * ROWS          # fixed rows/device
-    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-    stored = jax.random.uniform(k1, (K, NDIM))
-    queries = jax.random.uniform(k2, (Q, NDIM))
 
     def timeit(f, n=7):
         for _ in range(2):
@@ -69,23 +59,59 @@ def worker(n_devices: int) -> None:
         ts.sort()
         return ts[len(ts) // 2]
 
-    sharded = ShardedCAMSimulator(cfg, make_cam_mesh(n_devices),
-                                  use_kernel=True)
-    s_state = sharded.write(stored)
-    t_n = timeit(lambda: sharded.query(s_state, queries))
+    def one(cfg, stored, name: str) -> None:
+        queries = jax.random.uniform(jax.random.PRNGKey(1), (Q, NDIM))
+        if stored.ndim == 3:
+            # ACAM: half the batch queries stored-row centers (guaranteed
+            # exact range matches) so the parity bit compares real match
+            # results, not two all-miss tensors
+            centers = stored.mean(-1)
+            rows = (jnp.arange(Q) * 7) % stored.shape[0]
+            queries = jnp.where((jnp.arange(Q) % 2 == 0)[:, None],
+                                centers[rows], queries)
+        sharded = ShardedCAMSimulator(cfg, make_cam_mesh(n_devices),
+                                      use_kernel=True)
+        s_state = sharded.write(stored)
+        t_n = timeit(lambda: sharded.query(s_state, queries))
 
-    single = ShardedCAMSimulator(cfg, make_cam_mesh(1), use_kernel=True)
-    o_state = single.write(stored)
-    t_1 = timeit(lambda: single.query(o_state, queries))
+        single = ShardedCAMSimulator(cfg, make_cam_mesh(1), use_kernel=True)
+        o_state = single.write(stored)
+        t_1 = timeit(lambda: single.query(o_state, queries))
 
-    ia, _ = single.query(o_state, queries)
-    ib, _ = sharded.query(s_state, queries)
-    ok = bool((np.asarray(ia) == np.asarray(ib)).all())
-    qps_n, qps_1 = Q / t_n, Q / t_1
-    print(f"kernel_cam_search_sharded_d{n_devices},{t_n * 1e6:.0f},"
-          f"qps={qps_n:.0f}_qps_1dev={qps_1:.0f}_"
-          f"speedup={t_1 / t_n:.2f}x_rows={K}_"
-          f"rows_per_dev={BANKS_PER_DEV * ROWS}_match={ok}")
+        ia, _ = single.query(o_state, queries)
+        ib, _ = sharded.query(s_state, queries)
+        ok = bool((np.asarray(ia) == np.asarray(ib)).all())
+        K = stored.shape[0]
+        qps_n, qps_1 = Q / t_n, Q / t_1
+        print(f"{name}_d{n_devices},{t_n * 1e6:.0f},"
+              f"qps={qps_n:.0f}_qps_1dev={qps_1:.0f}_"
+              f"speedup={t_1 / t_n:.2f}x_rows={K}_"
+              f"rows_per_dev={BANKS_PER_DEV * ROWS}_match={ok}")
+
+    K = n_devices * BANKS_PER_DEV * ROWS          # fixed rows/device
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"))
+    one(cfg, jax.random.uniform(k1, (K, NDIM)), "kernel_cam_search_sharded")
+
+    # ACAM: same grid geometry, [lo, hi] range rows, exact range match on
+    # the fused range kernel's match-only path
+    acam_cfg = CAMConfig(
+        app=AppConfig(distance="range", match_type="exact", match_param=3,
+                      data_bits=0),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="acam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"))
+    lo = jax.random.uniform(k2, (K, NDIM))
+    ranges = jnp.stack([lo, lo + 0.05], axis=-1)
+    one(acam_cfg, ranges, "kernel_acam_range_sharded")
 
 
 def main(max_devices: int = 4) -> None:
@@ -104,13 +130,22 @@ def main(max_devices: int = 4) -> None:
              "--worker", str(n)],
             env=env, cwd=str(root), capture_output=True, text=True,
             timeout=1800)
-        if proc.returncode != 0:
-            print(f"kernel_cam_search_sharded_d{n},0,"
-                  f"failed({proc.stderr.strip()[-200:]!r})")
-            continue
+        # forward whatever rows the worker managed to print; only rows it
+        # never reached are marked failed (a crash in the later ACAM
+        # measurement must not discard the point-code result)
+        printed = set()
         for line in proc.stdout.splitlines():
-            if line.startswith("kernel_cam_search_sharded"):
-                print(line)
+            for prefix in ("kernel_cam_search_sharded",
+                           "kernel_acam_range_sharded"):
+                if line.startswith(prefix):
+                    printed.add(prefix)
+                    print(line)
+        if proc.returncode != 0:
+            err = proc.stderr.strip()[-200:]
+            for prefix in ("kernel_cam_search_sharded",
+                           "kernel_acam_range_sharded"):
+                if prefix not in printed:
+                    print(f"{prefix}_d{n},0,failed({err!r})")
 
 
 if __name__ == "__main__":

@@ -3,25 +3,27 @@ cites): every root-to-leaf path becomes one row of analog [lo, hi] ranges;
 a sample classifies by EXACT range-match — one CAM search replaces the
 whole tree traversal.
 
-    PYTHONPATH=src python examples/acam_decision_tree.py
+    PYTHONPATH=src python examples/acam_decision_tree.py [--kernel]
+
+``--kernel`` routes the batched classification through the fused ACAM
+range-search Pallas kernel (``cam_range_fused_pallas``) instead of the jnp
+broadcast path — same results, one HBM pass over the stored ranges for the
+whole query batch.
 """
+import argparse
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
                         CircuitConfig, DeviceConfig)
 
-rng = np.random.default_rng(0)
+N_FEAT, DEPTH = 6, 3
+
 
 # ---------------------------------------------------------------------------
 # fit a tiny greedy decision tree on synthetic tabular data
 # ---------------------------------------------------------------------------
-N_FEAT, DEPTH = 6, 3
-X = rng.uniform(0, 1, (600, N_FEAT))
-w = rng.normal(size=N_FEAT)
-y = ((X @ w + 0.3 * np.sin(7 * X[:, 0])) > np.median(X @ w)).astype(int)
-
-
 def fit(X, y, depth):
     if depth == 0 or len(set(y.tolist())) == 1 or len(y) < 8:
         return int(round(y.mean()))
@@ -66,42 +68,59 @@ def tree_predict(node, x):
     return node
 
 
-tree = fit(X, y, DEPTH)
-paths = tree_paths(tree, np.zeros(N_FEAT), np.ones(N_FEAT))
-print(f"tree with {len(paths)} leaves -> {len(paths)} ACAM rows "
-      f"x {N_FEAT} range cells")
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kernel", action="store_true",
+                    help="use the fused batched ACAM range Pallas kernel")
+    args = ap.parse_args(argv)
 
-# ---------------------------------------------------------------------------
-# map leaves onto the ACAM and classify with one exact range-match search
-# ---------------------------------------------------------------------------
-lo = jnp.asarray(np.stack([p[0] for p in paths]), jnp.float32)
-hi = jnp.asarray(np.stack([p[1] for p in paths]), jnp.float32)
-labels = np.asarray([p[2] for p in paths])
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 1, (600, N_FEAT))
+    w = rng.normal(size=N_FEAT)
+    y = ((X @ w + 0.3 * np.sin(7 * X[:, 0])) > np.median(X @ w)).astype(int)
 
-cfg = CAMConfig(
-    app=AppConfig(distance="range", match_type="exact", match_param=1,
-                  data_bits=0),
-    arch=ArchConfig(h_merge="and", v_merge="gather"),
-    circuit=CircuitConfig(rows=8, cols=8, cell_type="acam",
-                          sensing="exact"),
-    device=DeviceConfig(device="fefet"))
-sim = CAMASim(cfg)
-state = sim.write(jnp.stack([lo, hi], axis=-1))
+    tree = fit(X, y, DEPTH)
+    paths = tree_paths(tree, np.zeros(N_FEAT), np.ones(N_FEAT))
+    print(f"tree with {len(paths)} leaves -> {len(paths)} ACAM rows "
+          f"x {N_FEAT} range cells")
 
-Xt = rng.uniform(0, 1, (200, N_FEAT)).astype(np.float32)
-idx, mask = sim.query(state, jnp.asarray(Xt))
-cam_pred = labels[np.maximum(np.asarray(idx[:, 0]), 0)]
-sw_pred = np.asarray([tree_predict(tree, x) for x in Xt])
+    # -----------------------------------------------------------------
+    # map leaves onto the ACAM and classify with one exact range-match
+    # -----------------------------------------------------------------
+    lo = jnp.asarray(np.stack([p[0] for p in paths]), jnp.float32)
+    hi = jnp.asarray(np.stack([p[1] for p in paths]), jnp.float32)
+    labels = np.asarray([p[2] for p in paths])
 
-agree = (cam_pred == sw_pred).mean()
-matches_per_query = np.asarray(mask).sum(1)
-perf = sim.eval_perf()
-print(f"CAM vs software-tree agreement: {agree:.3f} (expect 1.0 — leaf "
-      f"ranges tile the feature space)")
-print(f"matches per query: min={matches_per_query.min():.0f} "
-      f"max={matches_per_query.max():.0f} (expect exactly 1)")
-print(f"modeled ACAM search: {perf['latency_ns']:.2f} ns, "
-      f"{perf['energy_pj']:.2f} pJ")
-assert agree == 1.0
-assert (matches_per_query == 1).all()
-print("OK: one ACAM search == full decision-tree inference.")
+    cfg = CAMConfig(
+        app=AppConfig(distance="range", match_type="exact", match_param=1,
+                      data_bits=0),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="acam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"))
+    sim = CAMASim(cfg, use_kernel=args.kernel)
+    state = sim.write(jnp.stack([lo, hi], axis=-1))
+
+    Xt = rng.uniform(0, 1, (200, N_FEAT)).astype(np.float32)
+    idx, mask = sim.query(state, jnp.asarray(Xt))
+    cam_pred = labels[np.maximum(np.asarray(idx[:, 0]), 0)]
+    sw_pred = np.asarray([tree_predict(tree, x) for x in Xt])
+
+    agree = (cam_pred == sw_pred).mean()
+    matches_per_query = np.asarray(mask).sum(1)
+    perf = sim.eval_perf()
+    path = "fused range kernel" if args.kernel else "jnp broadcast"
+    print(f"search path: {path}")
+    print(f"CAM vs software-tree agreement: {agree:.3f} (expect 1.0 — leaf "
+          f"ranges tile the feature space)")
+    print(f"matches per query: min={matches_per_query.min():.0f} "
+          f"max={matches_per_query.max():.0f} (expect exactly 1)")
+    print(f"modeled ACAM search: {perf['latency_ns']:.2f} ns, "
+          f"{perf['energy_pj']:.2f} pJ")
+    assert agree == 1.0
+    assert (matches_per_query == 1).all()
+    print("OK: one ACAM search == full decision-tree inference.")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,11 +20,15 @@ from .perf import (ArchSpecifics, PerfResult, estimate_arch, predict_search,
 
 class CAMASim:
     def __init__(self, config: CAMConfig, use_kernel: bool = False,
-                 c2c_query_tile: int = 1):
+                 c2c_query_tile: int = 1, c2c_fold: str = "grid"):
         config.validate()
         self.config = config
+        # c2c_fold plumbs through to the functional simulator so the facade
+        # can serve as the bit-exact single-device reference for
+        # ShardedCAMSimulator (which always draws C2C noise per bank)
         self.functional = FunctionalSimulator(config, use_kernel=use_kernel,
-                                              c2c_query_tile=c2c_query_tile)
+                                              c2c_query_tile=c2c_query_tile,
+                                              c2c_fold=c2c_fold)
         self._arch: Optional[ArchSpecifics] = None
         self._KN: Optional[Tuple[int, int]] = None
 

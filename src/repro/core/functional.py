@@ -85,6 +85,18 @@ class FunctionalSimulator:
         cfg = self.config
         if stored.ndim == 3:
             assert cfg.circuit.cell_type == "acam",                 "range stores need cell_type='acam'"
+            if cfg.app.distance != "range":
+                # fail loudly at write time: the jnp path used to compute
+                # range violations silently mislabeled as the configured
+                # distance, while the kernel path rejected the combination
+                # deep in dispatch
+                raise ValueError(
+                    "ACAM [lo, hi] range stores require distance='range' "
+                    f"(got {cfg.app.distance!r})")
+        elif cfg.app.distance == "range":
+            raise ValueError(
+                "distance='range' requires a (K, N, 2) range store "
+                f"(got shape {tuple(stored.shape)})")
         K, N = stored.shape[:2]
         spec = mapping.grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols)
         return self._write_jit(stored, spec,

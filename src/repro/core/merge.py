@@ -56,17 +56,38 @@ def v_merge_gather(row_scores: jax.Array) -> jax.Array:
     return row_scores.reshape(*row_scores.shape[:-2], -1)
 
 
+def pad_topk(vals: jax.Array, idx: jax.Array, k: int, *, largest: bool
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Pad comparator outputs (..., k') out to width ``k`` with never-valid
+    sentinels: 0 votes when ``largest``, +inf distance otherwise, index -1.
+
+    ``finalize_topk`` maps both sentinels to -1 / unmatched, so a clamped
+    top-k (fewer rows than requested matches) keeps the caller-visible
+    (..., match_param) shape instead of crashing ``jax.lax.top_k``."""
+    short = k - vals.shape[-1]
+    if short <= 0:
+        return vals, idx
+    pad = [(0, 0)] * (vals.ndim - 1) + [(0, short)]
+    sentinel = 0.0 if largest else float("inf")
+    return (jnp.pad(vals, pad, constant_values=sentinel),
+            jnp.pad(idx, pad, constant_values=-1))
+
+
 def v_merge_comparator_topk(values: jax.Array, k: int, largest: bool
                             ) -> Tuple[jax.Array, jax.Array]:
     """Comparator tree: global top-k over all nv*R rows.
 
     values: (..., nv, R) per-row scores (votes if ``largest`` else distances).
-    Returns (topk_values, topk_global_indices).
+    Returns (topk_values, topk_global_indices), always of width ``k``:
+    ``k`` is clamped to the row count for the ``jax.lax.top_k`` call (a
+    match_param larger than the padded store must degrade to -1 padding,
+    not crash — the sharded comparator path already clamps) and the result
+    is padded back out with never-valid sentinels.
     """
     flat = values.reshape(*values.shape[:-2], -1)
     sign = 1.0 if largest else -1.0
-    v, idx = jax.lax.top_k(sign * flat, k)
-    return sign * v, idx
+    v, idx = jax.lax.top_k(sign * flat, min(k, flat.shape[-1]))
+    return pad_topk(sign * v, idx, k, largest=largest)
 
 
 # --------------------------------------------------------------------------
@@ -156,11 +177,18 @@ def first_k_indices(mask: jax.Array, k: int) -> jax.Array:
     """First-k matched indices (fixed shape) of a 0/1 row mask, -1 padded.
 
     Appending always-zero rows to ``mask`` never changes the result, so a
-    bank-padded sharded grid yields the same indices as the unpadded one."""
+    bank-padded sharded grid yields the same indices as the unpadded one.
+    ``k`` beyond the row count pads with -1 (same clamp-and-pad contract as
+    the comparator merge)."""
     score = mask * 2.0 - jnp.arange(mask.shape[-1]) / mask.shape[-1]
-    _, idx = jax.lax.top_k(score, k)
+    _, idx = jax.lax.top_k(score, min(k, mask.shape[-1]))
     got = jnp.take_along_axis(mask, idx, axis=-1) > 0
-    return jnp.where(got, idx, -1)
+    idx = jnp.where(got, idx, -1)
+    short = k - idx.shape[-1]
+    if short > 0:
+        idx = jnp.pad(idx, [(0, 0)] * (idx.ndim - 1) + [(0, short)],
+                      constant_values=-1)
+    return idx
 
 
 def finalize_topk(vals: jax.Array, idx: jax.Array, *, largest: bool,
@@ -202,10 +230,14 @@ def rerank_candidates(vals: jax.Array, idx: jax.Array, k: int, *,
 
     The candidate axis must be ordered (bank asc, local rank asc): stable
     top-k then breaks value ties toward the lowest global row index,
-    exactly as the unsharded ``v_merge_comparator_topk`` does."""
+    exactly as the unsharded ``v_merge_comparator_topk`` does.  Output is
+    padded out to width ``k`` (sentinels via ``pad_topk``) when fewer
+    candidates exist — matching the single-device clamp-and-pad, so both
+    paths return (..., match_param) even for k > padded_K."""
     sign = 1.0 if largest else -1.0
     v, p = jax.lax.top_k(sign * vals, min(k, vals.shape[-1]))
-    return sign * v, jnp.take_along_axis(idx, p, axis=-1)
+    return pad_topk(sign * v, jnp.take_along_axis(idx, p, axis=-1), k,
+                    largest=largest)
 
 
 # --------------------------------------------------------------------------

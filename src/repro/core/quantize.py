@@ -50,7 +50,8 @@ def dequantize(codes: jax.Array, bits: int, lo: jax.Array,
     return codes * scale + lo
 
 
-def binarize(x: jax.Array, threshold: float | None = None) -> jax.Array:
+def binarize(x: jax.Array,
+             threshold: float | jax.Array | None = None) -> jax.Array:
     """1-bit quantization for BCAM/TCAM (sign/threshold binarization)."""
     thr = jnp.mean(x) if threshold is None else threshold
     return (x > thr).astype(jnp.float32)
@@ -65,9 +66,19 @@ def acam_ranges(x: jax.Array, margin: float = 0.0
 
 def quantize_for_cell(x: jax.Array, cell_type: str, bits: int,
                       lo=None, hi=None):
-    """Dispatch on CAM cell type (paper: BCAM/TCAM 1b, MCAM nb, ACAM analog)."""
+    """Dispatch on CAM cell type (paper: BCAM/TCAM 1b, MCAM nb, ACAM analog).
+
+    Returns ``(codes, lo, hi)``; ``lo``/``hi`` are the quantization state
+    shared between write and query time.  For binary cells the state is the
+    binarization threshold itself (carried in ``lo``): queries must be
+    thresholded at the STORE's write-time threshold, not at their own batch
+    mean — otherwise a query's code drifts with the composition of the
+    batch it happens to arrive in (the "shared scale" contract of
+    ``functional.segment_queries``).
+    """
     if cell_type in ("bcam", "tcam"):
-        return binarize(x), jnp.zeros(()), jnp.ones(())
+        thr = jnp.mean(x) if lo is None else jnp.asarray(lo)
+        return binarize(x, thr), thr, thr + 1.0
     if cell_type == "mcam":
         return linear_quantize(x, bits, lo, hi)
     if cell_type == "acam":

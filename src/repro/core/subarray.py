@@ -113,21 +113,24 @@ def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
     The store-once / search-many entry point: one call evaluates the whole
     query batch against the resident grid.  On the kernel path this runs the
     query-batched Pallas kernel with the sense epilogue fused (distances and
-    match lines produced in a single pass over the stored grid); the jnp
-    path broadcasts the batch through the same ops as ``subarray_query``.
-    ACAM range grids (5-dim stored) have no kernel and always broadcast.
+    match lines produced in a single pass over the stored grid); ACAM range
+    grids (5-dim [lo, hi] stored) dispatch to the fused range kernel.  The
+    jnp path broadcasts the batch through the same ops as ``subarray_query``.
 
-    ``want_dist=False`` (kernel path) skips the distance write-back entirely
-    and returns ``(None, match)`` — for merges that consume match lines only.
+    ``want_dist=False`` skips the distance write-back on the kernel path and
+    returns ``(None, match)`` on both paths — one contract for merges that
+    consume match lines only.
     """
-    if use_kernel and stored.ndim == 4:
+    if use_kernel:
         from repro.kernels import ops as kops
         out = kops.cam_search_fused(
             stored, queries, distance=distance, sensing=sensing,
             sensing_limit=sensing_limit, threshold=threshold,
             col_valid=col_valid, row_valid=row_valid, want_dist=want_dist)
         return out if want_dist else (None, out)
-    return subarray_query(stored, queries, distance=distance,
-                          sensing=sensing, sensing_limit=sensing_limit,
-                          threshold=threshold, col_valid=col_valid,
-                          row_valid=row_valid, use_kernel=False)
+    dist, match = subarray_query(stored, queries, distance=distance,
+                                 sensing=sensing,
+                                 sensing_limit=sensing_limit,
+                                 threshold=threshold, col_valid=col_valid,
+                                 row_valid=row_valid, use_kernel=False)
+    return (dist, match) if want_dist else (None, match)

@@ -23,8 +23,16 @@ from .config import DeviceConfig
 
 
 def _sigma_for(codes: jax.Array, cfg: DeviceConfig, bits: int) -> jax.Array:
-    """Per-cell noise STD, from either a scalar or a per-level table."""
-    if cfg.variation_spec == "stat" or cfg.exper_table is None:
+    """Per-cell noise STD, from either a scalar or a per-level table.
+
+    The exper table is indexed by *integer code level*; analog cells
+    (``bits == 0`` — fp MCAM stores and ACAM [lo, hi] ranges) have no
+    levels, so casting their values to indices would silently bin
+    e.g. every range bound in [0, 1) to level 0.  For analog cells the
+    table is a documented no-op: the stat STD is used instead.
+    """
+    if (cfg.variation_spec == "stat" or cfg.exper_table is None
+            or bits == 0):
         return jnp.full_like(codes, cfg.variation_std)
     table = jnp.asarray(cfg.exper_table, jnp.float32)
     levels = table.shape[0]
@@ -32,22 +40,47 @@ def _sigma_for(codes: jax.Array, cfg: DeviceConfig, bits: int) -> jax.Array:
     return table[idx]
 
 
+def sort_ranges(noisy: jax.Array) -> jax.Array:
+    """Re-order a noisy ACAM grid's trailing [lo, hi] planes so lo <= hi.
+
+    Independent noise draws on the two bounds can invert a narrow range
+    (lo + eps > hi + eps'); an inverted range matches NOTHING, so a cell
+    that should *widen* under noise would instead go dark.  Physically the
+    two programmed conductances still define an interval — the cell's
+    effective range is [min, max] of the noisy bounds.
+    """
+    return jnp.sort(noisy, axis=-1)
+
+
+def _maybe_sort_ranges(noisy: jax.Array, is_range: bool) -> jax.Array:
+    return sort_ranges(noisy) if is_range else noisy
+
+
 def apply_d2d(codes: jax.Array, cfg: DeviceConfig, bits: int,
               key: jax.Array) -> jax.Array:
-    """Write-time (one-shot) variation on stored codes."""
+    """Write-time (one-shot) variation on stored codes.
+
+    ``codes`` is the full (nv, nh, R, C[, 2]) grid; a 5-D grid is an ACAM
+    range store whose noisy [lo, hi] planes are re-sorted (``sort_ranges``).
+    """
     if cfg.variation not in ("d2d", "both"):
         return codes
     sigma = _sigma_for(codes, cfg, bits)
-    return codes + sigma * jax.random.normal(key, codes.shape, codes.dtype)
+    noisy = codes + sigma * jax.random.normal(key, codes.shape, codes.dtype)
+    return _maybe_sort_ranges(noisy, codes.ndim == 5)
 
 
 def apply_c2c(codes: jax.Array, cfg: DeviceConfig, bits: int,
               key: jax.Array) -> jax.Array:
-    """Per-query (dynamic) variation; fresh noise every search cycle."""
+    """Per-query (dynamic) variation; fresh noise every search cycle.
+
+    Same grid contract (and range re-sort) as ``apply_d2d``.
+    """
     if cfg.variation not in ("c2c", "both"):
         return codes
     sigma = _sigma_for(codes, cfg, bits)
-    return codes + sigma * jax.random.normal(key, codes.shape, codes.dtype)
+    noisy = codes + sigma * jax.random.normal(key, codes.shape, codes.dtype)
+    return _maybe_sort_ranges(noisy, codes.ndim == 5)
 
 
 def split_for_queries(key: jax.Array, n_queries: int) -> jax.Array:
@@ -97,4 +130,7 @@ def apply_c2c_banked(codes: jax.Array, cfg: DeviceConfig, bits: int,
     def one_cycle(key: jax.Array) -> jax.Array:
         return jax.vmap(lambda v, b: one_bank(key, v, b))(bank_ids, codes)
 
-    return jax.vmap(one_cycle)(keys)
+    # the [lo, hi] re-sort is elementwise over the trailing dim, so it
+    # commutes with the bank split: sorting after the fold keeps the
+    # shard-invariance of the draw
+    return _maybe_sort_ranges(jax.vmap(one_cycle)(keys), codes.ndim == 5)

@@ -51,6 +51,24 @@ is still in VMEM.  With ``want_dist=False`` only the digital match lines are
 written back, so the (Q, nv, nh, R) float distance tensor never hits HBM —
 this is the common exact/threshold AND-merge path, where the merge consumes
 match lines only.
+
+``cam_range_fused_pallas`` — the ACAM variant of the fused batched kernel
+(paper §III-C, Table III: analog cells store a [lo, hi] range per cell; the
+memristor / complementary-FeFET ACAMs are the hardware targets).  The
+"distance" is the range-violation count of ``core.distance.range_violations``
+— #cells whose stored interval excludes the query value — and the same
+exact/best/threshold sense epilogue runs on it in-kernel.  The 5-D
+(nv, nh, R, C, 2) range grid is NOT blocked as a 5-D ref: the caller splits
+the trailing [lo, hi] dim before ``pallas_call`` and the kernel takes two
+dense (R, C) planes per tile, so the lane (last) dimension of every block
+stays the dense C axis the VPU wants.  Per grid step (i, j, k):
+
+    lo, hi    (1, 1, R, C)  VMEM  <- HBM tiles (i, j); resident across k
+    queries   (Qt, 1, C)    VMEM  <- Q-tile k, segment j
+    out       (Qt, 1, 1, R) VMEM  -> violation-count / match tile (k, i, j)
+
+The violation compare-and-count has no matmul form (like l1/hamming) and
+materializes a (Qt, R, C) block in registers on the VPU.
 """
 from __future__ import annotations
 
@@ -201,14 +219,9 @@ def _sense_block(d: jax.Array, rv: jax.Array, sensing: str,
     return m.astype(jnp.float32) * rv[None, :]
 
 
-def _fused_kernel(stored_ref, query_ref, valid_ref, rowv_ref, *out_refs,
-                  distance: str, sensing: str, sensing_limit: float,
-                  threshold: float, want_dist: bool):
-    stored = stored_ref[0, 0]            # (R, C)
-    q = query_ref[:, 0, :]               # (Qt, C)
-    valid = valid_ref[0]                 # (C,)
-    rv = rowv_ref[0]                     # (R,)
-    d = _dist_block_batched(stored, q, valid, distance)
+def _fused_epilogue(d, rv, out_refs, *, sensing: str, sensing_limit: float,
+                    threshold: float, want_dist: bool):
+    """Shared kernel epilogue: padding-row inf mask, sense, write-back."""
     d = jnp.where(rv[None, :] > 0, d, _INF)   # padding rows never win
     m = _sense_block(d, rv, sensing, sensing_limit, threshold)
     if want_dist:
@@ -216,6 +229,55 @@ def _fused_kernel(stored_ref, query_ref, valid_ref, rowv_ref, *out_refs,
         out_refs[1][:, 0, 0, :] = m
     else:
         out_refs[0][:, 0, 0, :] = m
+
+
+def _fused_kernel(stored_ref, query_ref, valid_ref, rowv_ref, *out_refs,
+                  distance: str, sensing: str, sensing_limit: float,
+                  threshold: float, want_dist: bool):
+    d = _dist_block_batched(stored_ref[0, 0], query_ref[:, 0, :],
+                            valid_ref[0], distance)
+    _fused_epilogue(d, rowv_ref[0], out_refs, sensing=sensing,
+                    sensing_limit=sensing_limit, threshold=threshold,
+                    want_dist=want_dist)
+
+
+def _fused_driver(kernel_body, stored_planes, queries: jax.Array,
+                  col_valid: jax.Array, row_valid: jax.Array, *,
+                  q_tile: int, want_dist: bool, interpret: bool):
+    """Shared scaffolding for the fused batched kernels: Q-tile clamp/pad,
+    the (nv, nh, Q/Qt) grid with the Q-tile axis innermost, BlockSpecs
+    (one (1, 1, R, C) resident spec per stored plane), pallas_call, and
+    the [:Q] unpad.  ``stored_planes`` is (stored,) for point-code grids
+    and (lo, hi) for ACAM range grids."""
+    nv, nh, R, C = stored_planes[0].shape
+    Q = queries.shape[0]
+    assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
+    assert row_valid.shape == (nv, R), (row_valid.shape, (nv, R))
+    qt = max(1, min(q_tile, Q))
+    pad = (-Q) % qt
+    if pad:
+        queries = jnp.pad(queries, ((0, pad), (0, 0), (0, 0)))
+    nq = (Q + pad) // qt
+    shape = jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32)
+    spec = pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0))
+    stored_spec = pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0))
+    out = pl.pallas_call(
+        kernel_body,
+        grid=(nv, nh, nq),
+        in_specs=[stored_spec] * len(stored_planes) + [
+            pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
+            pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((1, R), lambda i, j, k: (i, 0)),
+        ],
+        out_specs=(spec, spec) if want_dist else spec,
+        out_shape=(shape, shape) if want_dist else shape,
+        interpret=interpret,
+    )(*(p.astype(jnp.float32) for p in stored_planes),
+      queries.astype(jnp.float32), col_valid.astype(jnp.float32),
+      row_valid.astype(jnp.float32))
+    if want_dist:
+        return out[0][:Q], out[1][:Q]
+    return out[:Q]
 
 
 @functools.partial(jax.jit,
@@ -239,33 +301,70 @@ def cam_search_fused_pallas(stored: jax.Array, queries: jax.Array,
     written to HBM (exact/threshold AND-merge path).  Distances on padding
     rows are +inf, matching ``core.subarray.subarray_query``.
     """
-    nv, nh, R, C = stored.shape
-    Q = queries.shape[0]
-    assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
-    assert row_valid.shape == (nv, R), (row_valid.shape, (nv, R))
-    qt = max(1, min(q_tile, Q))
-    pad = (-Q) % qt
-    if pad:
-        queries = jnp.pad(queries, ((0, pad), (0, 0), (0, 0)))
-    nq = (Q + pad) // qt
-    shape = jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32)
-    spec = pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0))
-    out = pl.pallas_call(
-        functools.partial(_fused_kernel, distance=distance, sensing=sensing,
-                          sensing_limit=float(sensing_limit),
-                          threshold=float(threshold), want_dist=want_dist),
-        grid=(nv, nh, nq),
-        in_specs=[
-            pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0)),
-            pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
-            pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
-            pl.BlockSpec((1, R), lambda i, j, k: (i, 0)),
-        ],
-        out_specs=(spec, spec) if want_dist else spec,
-        out_shape=(shape, shape) if want_dist else shape,
-        interpret=interpret,
-    )(stored.astype(jnp.float32), queries.astype(jnp.float32),
-      col_valid.astype(jnp.float32), row_valid.astype(jnp.float32))
-    if want_dist:
-        return out[0][:Q], out[1][:Q]
-    return out[:Q]
+    body = functools.partial(
+        _fused_kernel, distance=distance, sensing=sensing,
+        sensing_limit=float(sensing_limit), threshold=float(threshold),
+        want_dist=want_dist)
+    return _fused_driver(body, (stored,), queries, col_valid, row_valid,
+                         q_tile=q_tile, want_dist=want_dist,
+                         interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# ACAM range match with fused sense-and-reduce epilogue
+# ---------------------------------------------------------------------------
+def _range_block_batched(lo, hi, q, valid) -> jax.Array:
+    """lo/hi (R, C), q (Qt, C), valid (C,) -> violation counts (Qt, R).
+
+    A cell votes a violation when the query value falls outside its stored
+    closed interval [lo, hi]; padded columns are masked out.  Counts are
+    small integers in f32, so the sum is exact in any reduction order."""
+    qq = q[:, None, :]                                   # (Qt, 1, C)
+    viol = ((qq < lo[None, :, :]) | (qq > hi[None, :, :])
+            ).astype(jnp.float32)
+    return jnp.sum(viol * valid[None, None, :], axis=-1)
+
+
+def _range_fused_kernel(lo_ref, hi_ref, query_ref, valid_ref, rowv_ref,
+                        *out_refs, sensing: str, sensing_limit: float,
+                        threshold: float, want_dist: bool):
+    d = _range_block_batched(lo_ref[0, 0], hi_ref[0, 0], query_ref[:, 0, :],
+                             valid_ref[0])
+    _fused_epilogue(d, rowv_ref[0], out_refs, sensing=sensing,
+                    sensing_limit=sensing_limit, threshold=threshold,
+                    want_dist=want_dist)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sensing", "sensing_limit", "threshold",
+                                    "q_tile", "want_dist", "interpret"))
+def cam_range_fused_pallas(stored_lo: jax.Array, stored_hi: jax.Array,
+                           queries: jax.Array, col_valid: jax.Array,
+                           row_valid: jax.Array, *, sensing: str = "exact",
+                           sensing_limit: float = 0.0,
+                           threshold: float = 0.0, q_tile: int = 32,
+                           want_dist: bool = True,
+                           interpret: bool = False):
+    """Batched ACAM range search + in-kernel sense amplifier.
+
+    stored_lo / stored_hi (nv, nh, R, C) — the two planes of a 5-D
+    (nv, nh, R, C, 2) range grid, split by the caller so every BlockSpec
+    keeps a dense lane dim; queries (Q, nh, C); col_valid (nh, C);
+    row_valid (nv, R).
+
+    Same contract as ``cam_search_fused_pallas``: returns ``(dist, match)``
+    each (Q, nv, nh, R) — dist is the range-violation count, +inf on
+    padding rows — or ``match`` alone when ``want_dist=False`` (the count
+    tensor then never hits HBM; the ACAM exact-match AND-merge path).
+    The grid is (nv, nh, Q/Qt) with the Q-tile innermost, so both stored
+    planes are streamed from HBM once per query batch.
+    """
+    assert stored_hi.shape == stored_lo.shape, (stored_hi.shape,
+                                                stored_lo.shape)
+    body = functools.partial(
+        _range_fused_kernel, sensing=sensing,
+        sensing_limit=float(sensing_limit), threshold=float(threshold),
+        want_dist=want_dist)
+    return _fused_driver(body, (stored_lo, stored_hi), queries, col_valid,
+                         row_valid, q_tile=q_tile, want_dist=want_dist,
+                         interpret=interpret)

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .cam_search import (cam_search_batched_pallas, cam_search_fused_pallas,
-                         cam_search_pallas)
+from .cam_search import (cam_range_fused_pallas, cam_search_batched_pallas,
+                         cam_search_fused_pallas, cam_search_pallas)
 from .cam_topk import cam_topk_pallas
 from .hamming_pack import hamming_packed_batched_pallas, hamming_packed_pallas
 
@@ -72,6 +72,34 @@ def cam_search_vmap(stored: jax.Array, query: jax.Array, *,
     return out.reshape(*query.shape[:-2], nv, nh, R)
 
 
+def _fused_call(stored: jax.Array, queries: jax.Array,
+                col_valid: jax.Array, row_valid: jax.Array, *,
+                distance: str, sensing: str, sensing_limit: float,
+                threshold: float, q_tile: int, want_dist: bool,
+                interpret: bool):
+    """Shape-dispatched fused kernel call (shared with the sharded wrapper).
+
+    5-D stored grids are ACAM [lo, hi] ranges and require
+    ``distance='range'``; the trailing dim is split into two dense (R, C)
+    planes before ``pallas_call`` (see ``cam_range_fused_pallas``).
+    """
+    if (stored.ndim == 5) != (distance == "range"):
+        raise ValueError(
+            f"distance='range' needs a 5-D [lo, hi] grid and vice versa; "
+            f"got distance={distance!r} with stored.ndim={stored.ndim}")
+    if stored.ndim == 5:
+        return cam_range_fused_pallas(
+            stored[..., 0], stored[..., 1], queries, col_valid, row_valid,
+            sensing=sensing, sensing_limit=float(sensing_limit),
+            threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
+            interpret=interpret)
+    return cam_search_fused_pallas(
+        stored, queries, col_valid, row_valid, distance=distance,
+        sensing=sensing, sensing_limit=float(sensing_limit),
+        threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
+        interpret=interpret)
+
+
 def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
                      distance: str, sensing: str, sensing_limit: float = 0.0,
                      threshold: float = 0.0,
@@ -81,16 +109,18 @@ def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
                      interpret: Optional[bool] = None):
     """Batched search with the sense-and-reduce epilogue fused in-kernel.
 
+    stored (nv, nh, R, C) point codes, or (nv, nh, R, C, 2) ACAM [lo, hi]
+    ranges with ``distance='range'`` (dispatched to the range kernel).
     queries (Q, nh, C) -> (dist, match) each (Q, nv, nh, R), or match alone
     when ``want_dist=False`` (the distance tensor then never leaves VMEM).
     """
-    nv, nh, R, C = stored.shape
+    nv, nh, R, C = stored.shape[:4]
     if col_valid is None:
         col_valid = jnp.ones((nh, C), jnp.float32)
     if row_valid is None:
         row_valid = jnp.ones((nv, R), jnp.float32)
     itp = _interpret() if interpret is None else interpret
-    return cam_search_fused_pallas(
+    return _fused_call(
         stored, queries, col_valid, row_valid, distance=distance,
         sensing=sensing, sensing_limit=float(sensing_limit),
         threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
@@ -109,7 +139,9 @@ def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
     """``cam_search_fused`` with the stored grid's nv axis sharded over
     ``bank_axis`` of ``mesh``: each device streams only its local
     (nv/n_banks, nh, R, C) shard — the kernel-layer unit the sharded
-    simulator (and the weak-scaling benchmark) builds on.
+    simulator (and the weak-scaling benchmark) builds on.  ACAM
+    (nv, nh, R, C, 2) range grids take the same route with
+    ``distance='range'`` (the trailing [lo, hi] dim is shard-local).
 
     Outputs keep the bank sharding on their nv axis ((Q, nv, nh, R),
     sharded on dim 1); the cross-device merge lives one layer up in
@@ -120,7 +152,7 @@ def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
 
     from repro.launch.mesh import compat_shard_map
 
-    nv, nh, R, C = stored.shape
+    nv, nh, R, C = stored.shape[:4]
     n_banks = dict(zip(mesh.axis_names, mesh.axis_sizes))[bank_axis]
     if nv % n_banks:
         raise ValueError(f"nv={nv} must be a multiple of the bank axis "
@@ -132,7 +164,7 @@ def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
     itp = _interpret() if interpret is None else interpret
 
     def body(s, rv, cv, q):
-        return cam_search_fused_pallas(
+        return _fused_call(
             s, q, cv, rv, distance=distance, sensing=sensing,
             sensing_limit=float(sensing_limit), threshold=float(threshold),
             q_tile=q_tile, want_dist=want_dist, interpret=itp)

@@ -35,10 +35,24 @@ except ImportError:
                 out.append(rng.randint(self.lo, self.hi))
             return out[:n]
 
+    class _SampledStrategy:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def samples(self, rng: random.Random, n: int):
+            out = list(self.elements)
+            while len(out) < n:
+                out.append(rng.choice(self.elements))
+            return out[:n]
+
     class strategies:  # noqa: N801 - mimics the hypothesis module name
         @staticmethod
         def integers(min_value: int, max_value: int) -> _IntStrategy:
             return _IntStrategy(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements) -> "_SampledStrategy":
+            return _SampledStrategy(elements)
 
     def settings(max_examples: int = 100, deadline=None, **_kw):
         def deco(fn):

@@ -1,0 +1,366 @@
+"""Fused batched ACAM range-search kernel + the bugfix sweep that shipped
+with it.
+
+Layers of guarantees:
+  * ``cam_range_fused_pallas`` (via ``subarray_query_batched`` use_kernel)
+    is bit-identical to the jnp ``range_violations`` + ``sense`` oracle for
+    all {exact, best, threshold} x {want_dist, match-only} x
+    padded/unpadded combos;
+  * the kernel result is invariant to the Q-tiling and to the column
+    partitioning (nh split) — same properties the point-code kernels hold;
+  * ``FunctionalSimulator(use_kernel=True)`` on ACAM range stores is
+    bit-identical to the jnp pipeline end to end;
+  * regression tests for the satellite bugfixes: best-match merge with
+    ``match_param > padded_K`` (clamp + -1 pad instead of a top_k crash),
+    bcam/tcam query binarization at the STORE's threshold (codes must not
+    drift with batch composition), D2D/C2C noise never inverting ACAM
+    ranges (lo <= hi always; exper table a no-op for analog cells), and
+    the ``CAMASim`` facade plumbing ``c2c_fold``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
+                        CircuitConfig, DeviceConfig)
+from repro.core import mapping, merge, subarray, variation
+from repro.core.distance import range_violations
+from repro.core.functional import FunctionalSimulator
+from repro.kernels import ops
+
+
+def _range_grid(K, N, rng, width=0.4):
+    lo = rng.random((K, N)).astype(np.float32) * 0.6
+    hi = lo + rng.random((K, N)).astype(np.float32) * width
+    return jnp.asarray(np.stack([lo, hi], axis=-1))
+
+
+def _acam_cfg(match="exact", h_merge="and", v_merge="gather",
+              sensing="exact", k=2, sl=0.0, rows=8, cols=4,
+              variation="none", std=0.0):
+    return CAMConfig(
+        app=AppConfig(distance="range", match_type=match, match_param=k,
+                      data_bits=0),
+        arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+        circuit=CircuitConfig(rows=rows, cols=cols, cell_type="acam",
+                              sensing=sensing, sensing_limit=sl),
+        device=DeviceConfig(device="fefet", variation=variation,
+                            variation_std=std))
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp oracle: full parity matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("K,N,R,C", [
+    (16, 8, 8, 4),     # aligned (no padding rows/cols)
+    (21, 10, 8, 4),    # padded rows AND cols
+    (5, 3, 8, 16),     # single subarray, heavy padding
+])
+@pytest.mark.parametrize("sensing", ["exact", "best", "threshold"])
+@pytest.mark.parametrize("want_dist", [True, False])
+def test_range_kernel_parity_matrix(K, N, R, C, sensing, want_dist):
+    rng = np.random.default_rng(K * 100 + R + (sensing == "best"))
+    stored = _range_grid(K, N, rng)
+    spec = mapping.grid_spec(K, N, R, C)
+    grid = mapping.partition_stored(stored, spec)
+    assert grid.ndim == 5
+    queries = jnp.asarray(rng.random((7, N)).astype(np.float32))
+    qseg = mapping.partition_query(queries, spec)
+    kw = dict(distance="range", sensing=sensing, sensing_limit=0.5,
+              threshold=2.0, col_valid=mapping.col_valid_mask(spec),
+              row_valid=mapping.row_valid_mask(spec))
+    dk, mk = subarray.subarray_query_batched(
+        grid, qseg, use_kernel=True, want_dist=want_dist, **kw)
+    dj, mj = subarray.subarray_query_batched(
+        grid, qseg, use_kernel=False, **kw)
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mj))
+    if want_dist:
+        dj_, dk_ = np.asarray(dj), np.asarray(dk)
+        finite = np.isfinite(dj_)
+        # padding rows carry +inf in both pipelines; violation counts are
+        # small ints in f32, so equality is exact, not approx
+        assert (finite == np.isfinite(dk_)).all()
+        np.testing.assert_array_equal(dk_[finite], dj_[finite])
+    else:
+        assert dk is None
+
+
+def test_range_kernel_q_tile_invariance():
+    rng = np.random.default_rng(3)
+    stored = _range_grid(21, 10, rng)
+    spec = mapping.grid_spec(21, 10, 8, 4)
+    grid = mapping.partition_stored(stored, spec)
+    queries = jnp.asarray(rng.random((13, 10)).astype(np.float32))
+    qseg = mapping.partition_query(queries, spec)
+    outs = [ops.cam_search_fused(
+        grid, qseg, distance="range", sensing="best", sensing_limit=0.0,
+        col_valid=mapping.col_valid_mask(spec),
+        row_valid=mapping.row_valid_mask(spec), q_tile=qt)
+        for qt in (1, 4, 8, 13, 64)]
+    for d, m in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(outs[0][0]))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(outs[0][1]))
+
+
+def test_range_kernel_rejects_mismatched_distance():
+    """distance='range' needs a 5-D grid and vice versa (no silent path)."""
+    grid4 = jnp.zeros((1, 1, 4, 4))
+    grid5 = jnp.zeros((1, 1, 4, 4, 2))
+    q = jnp.zeros((2, 1, 4))
+    with pytest.raises(ValueError, match="range"):
+        ops.cam_search_fused(grid4, q, distance="range", sensing="exact")
+    with pytest.raises(ValueError, match="range"):
+        ops.cam_search_fused(grid5, q, distance="l2", sensing="exact")
+
+
+def test_write_rejects_range_store_distance_mismatch():
+    """The store shape ⟺ distance coupling fails loudly at WRITE time on
+    both paths (the jnp path used to compute range violations silently
+    mislabeled as the configured distance)."""
+    cfg = _acam_cfg()
+    bad = cfg.replace(app=dict(distance="l2", match_type="best"),
+                      arch=dict(v_merge="comparator"))
+    rng = np.random.default_rng(0)
+    ranges = _range_grid(9, 5, rng)
+    for use_kernel in (False, True):
+        with pytest.raises(ValueError, match="distance='range'"):
+            FunctionalSimulator(bad, use_kernel=use_kernel).write(ranges)
+        with pytest.raises(ValueError, match="range store"):
+            FunctionalSimulator(cfg, use_kernel=use_kernel).write(
+                jnp.asarray(rng.random((9, 5), dtype=np.float32)))
+
+
+@given(st.integers(0, 10 ** 6), st.sampled_from([3, 4, 5, 10]))
+@settings(max_examples=10, deadline=None)
+def test_range_kernel_column_partition_invariant(seed, cols):
+    """Like the point-code kernels: splitting the N columns into different
+    nh segmentations never changes the (adder-merged) violation totals —
+    they always equal the unpartitioned oracle."""
+    rng = np.random.default_rng(seed)
+    K, N, Q = 13, 10, 5
+    stored = _range_grid(K, N, rng)
+    queries = jnp.asarray(rng.random((Q, N)).astype(np.float32))
+    want = np.asarray(range_violations(stored, queries, None))
+    spec = mapping.grid_spec(K, N, 8, cols)
+    grid = mapping.partition_stored(stored, spec)
+    qseg = mapping.partition_query(queries, spec)
+    d, _ = subarray.subarray_query_batched(
+        grid, qseg, distance="range", sensing="exact", sensing_limit=0.0,
+        col_valid=mapping.col_valid_mask(spec),
+        row_valid=mapping.row_valid_mask(spec), use_kernel=True)
+    total = np.asarray(d).sum(axis=-2).reshape(Q, -1)[:, :K]
+    np.testing.assert_array_equal(total, want)
+
+
+# ---------------------------------------------------------------------------
+# FunctionalSimulator: ACAM kernel path == jnp path, end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("match,h_merge,v_merge,sensing", [
+    ("exact", "and", "gather", "exact"),
+    ("best", "adder", "comparator", "best"),
+    ("threshold", "adder", "gather", "threshold"),
+])
+def test_acam_query_kernel_path_matches_jnp_path(match, h_merge, v_merge,
+                                                 sensing):
+    cfg = _acam_cfg(match=match, h_merge=h_merge, v_merge=v_merge,
+                    sensing=sensing, sl=0.5)
+    rng = np.random.default_rng(11)
+    stored = _range_grid(21, 10, rng)
+    queries = jnp.asarray(rng.random((9, 10)).astype(np.float32))
+    a = FunctionalSimulator(cfg, use_kernel=False)
+    b = FunctionalSimulator(cfg, use_kernel=True)
+    ia, ma = a.query(a.write(stored), queries)
+    ib, mb = b.query(b.write(stored), queries)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+
+
+def test_acam_kernel_path_with_c2c_noise_matches_jnp_path():
+    """Same RNG stream on both paths: the noisy grids are identical, so the
+    kernel/jnp results must still be bit-identical under C2C noise (both
+    the grid fold and the shard-invariant bank fold, on 5-D grids)."""
+    for fold in ("grid", "bank"):
+        cfg = _acam_cfg(variation="c2c", std=0.02)
+        rng = np.random.default_rng(7)
+        stored = _range_grid(17, 6, rng)
+        queries = jnp.asarray(rng.random((6, 6)).astype(np.float32))
+        qkey = jax.random.PRNGKey(3)
+        a = FunctionalSimulator(cfg, use_kernel=False, c2c_fold=fold)
+        b = FunctionalSimulator(cfg, use_kernel=True, c2c_fold=fold)
+        ia, ma = a.query(a.write(stored), queries, key=qkey)
+        ib, mb = b.query(b.write(stored), queries, key=qkey)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib),
+                                      err_msg=fold)
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb),
+                                      err_msg=fold)
+
+
+# ---------------------------------------------------------------------------
+# bugfix: best-match merge with match_param > padded_K
+# ---------------------------------------------------------------------------
+def test_best_match_k_beyond_padded_K_pads_with_minus_one():
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=50,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"))
+    sim = FunctionalSimulator(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (21, 12))
+    queries = jax.random.uniform(jax.random.PRNGKey(1), (5, 12))
+    idx, mask = sim.query(sim.write(stored), queries)   # crashed before
+    idx = np.asarray(idx)
+    assert idx.shape == (5, 50)
+    # padded_K = ceil(21/8)*8 = 24 real+padding rows; the rest is -1 pad
+    assert (idx[:, 24:] == -1).all()
+    # every real entry appears exactly once among the first 21 winners
+    for row in idx:
+        assert sorted(r for r in row.tolist() if r >= 0) == list(range(21))
+
+
+def test_comparator_topk_clamps_and_pads():
+    values = jnp.asarray([[[3.0, 1.0], [2.0, 0.5]]])     # (1, nv=2, R=2)
+    v, i = merge.v_merge_comparator_topk(values, 7, largest=False)
+    assert v.shape == (1, 7) and i.shape == (1, 7)
+    np.testing.assert_array_equal(np.asarray(i[0, :4]), [3, 1, 2, 0])
+    assert (np.asarray(i[0, 4:]) == -1).all()
+    assert np.isinf(np.asarray(v[0, 4:])).all()
+    v, i = merge.v_merge_comparator_topk(values, 7, largest=True)
+    np.testing.assert_array_equal(np.asarray(i[0, :4]), [0, 2, 1, 3])
+    assert (np.asarray(v[0, 4:]) == 0.0).all()
+
+
+def test_first_k_indices_pads_beyond_row_count():
+    mask = jnp.asarray([[1.0, 0.0, 1.0]])
+    idx = merge.first_k_indices(mask, 6)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  [[0, 2, -1, -1, -1, -1]])
+
+
+# ---------------------------------------------------------------------------
+# bugfix: bcam/tcam queries binarize at the store's threshold
+# ---------------------------------------------------------------------------
+def test_binary_query_codes_do_not_drift_with_batch_composition():
+    cfg = CAMConfig(
+        app=AppConfig(distance="hamming", match_type="exact", match_param=1,
+                      data_bits=1),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=4, cols=4, cell_type="tcam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"))
+    sim = FunctionalSimulator(cfg)
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (10, 8))
+    state = sim.write(stored)
+    # CAMState.lo carries the store's binarization threshold
+    np.testing.assert_allclose(float(state.lo),
+                               float(jnp.mean(stored)), rtol=1e-6)
+    q = jax.random.uniform(jax.random.PRNGKey(1), (8,))
+    batch_a = jnp.stack([q, jnp.zeros(8)])          # batch mean pulled low
+    batch_b = jnp.stack([q, jnp.ones(8) * 0.95])    # batch mean pulled high
+    _, ma = sim.query(state, batch_a)
+    _, mb = sim.query(state, batch_b)
+    np.testing.assert_array_equal(np.asarray(ma[0]), np.asarray(mb[0]))
+    # and the shared threshold makes stored-row self-queries exact matches
+    _, mm = sim.query(state, stored)
+    assert (np.asarray(mm)[np.arange(10), np.arange(10)] == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# bugfix: variation never inverts ACAM ranges; exper table no-op on analog
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10 ** 6), st.sampled_from(["stat", "exper"]))
+@settings(max_examples=10, deadline=None)
+def test_noisy_acam_ranges_keep_lo_below_hi(seed, spec):
+    rng = np.random.default_rng(seed)
+    lo = rng.random((2, 2, 4, 4)).astype(np.float32)
+    grid = jnp.asarray(np.stack([lo, lo + 0.01], axis=-1))  # narrow ranges
+    cfg = DeviceConfig(device="fefet", variation="both", variation_std=0.5,
+                       variation_spec=spec,
+                       exper_table=(0.3,) * 8 if spec == "exper" else None)
+    key = jax.random.PRNGKey(seed % (2 ** 31))
+    d2d = variation.apply_d2d(grid, cfg, 0, key)
+    assert (np.asarray(d2d[..., 0]) <= np.asarray(d2d[..., 1])).all()
+    keys = variation.split_for_queries(key, 3)
+    banked = variation.apply_c2c_banked(grid, cfg, 0, keys, 1)
+    assert (np.asarray(banked[..., 0]) <= np.asarray(banked[..., 1])).all()
+    batched = variation.apply_c2c_batched(grid, cfg, 0, keys)
+    assert (np.asarray(batched[..., 0]) <= np.asarray(batched[..., 1])).all()
+    # noise must actually be applied (the sort must not freeze the grid)
+    assert not np.array_equal(np.asarray(d2d), np.asarray(grid))
+
+
+def test_exper_table_is_noop_for_analog_cells():
+    """bits == 0 (analog): sigma falls back to the stat STD instead of
+    binning analog values through the integer level table."""
+    cfg_t = DeviceConfig(device="fefet", variation="d2d", variation_std=0.25,
+                         variation_spec="exper",
+                         exper_table=(99.0,) * 8)
+    cfg_s = DeviceConfig(device="fefet", variation="d2d", variation_std=0.25,
+                         variation_spec="stat")
+    grid = jnp.ones((1, 1, 2, 2, 2)) * 0.5
+    key = jax.random.PRNGKey(0)
+    np.testing.assert_array_equal(
+        np.asarray(variation.apply_d2d(grid, cfg_t, 0, key)),
+        np.asarray(variation.apply_d2d(grid, cfg_s, 0, key)))
+    # integer-coded cells (bits > 0) still use the table
+    codes = jnp.ones((1, 1, 2, 2)) * 3.0
+    with_table = variation.apply_d2d(codes, cfg_t, 3, key)
+    without = variation.apply_d2d(codes, cfg_s, 3, key)
+    assert not np.array_equal(np.asarray(with_table), np.asarray(without))
+
+
+def test_noisy_acam_end_to_end_still_matches_wide_ranges():
+    """A query at the center of a wide range must still match under noise
+    (the old inverted-range bug made exactly these cells go dark)."""
+    cfg = _acam_cfg(variation="both", std=0.01)
+    rng = np.random.default_rng(5)
+    K, N = 11, 6
+    centers = rng.random((K, N)).astype(np.float32)
+    lo, hi = centers - 0.3, centers + 0.3
+    sim = FunctionalSimulator(cfg, use_kernel=True)
+    state = sim.write(jnp.asarray(np.stack([lo, hi], axis=-1)))
+    idx, mask = sim.query(state, jnp.asarray(centers[[2, 8]]),
+                          key=jax.random.PRNGKey(1))
+    m = np.asarray(mask)
+    assert m[0, 2] == 1.0 and m[1, 8] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# facade: c2c_fold plumbs through (sharded-parity reference)
+# ---------------------------------------------------------------------------
+def test_camasim_plumbs_c2c_fold():
+    cfg = _acam_cfg(variation="c2c", std=0.05)
+    sim = CAMASim(cfg, use_kernel=True, c2c_fold="bank")
+    assert sim.functional.c2c_fold == "bank"
+    ref = FunctionalSimulator(cfg, use_kernel=True, c2c_fold="bank")
+    rng = np.random.default_rng(9)
+    stored = _range_grid(13, 6, rng)
+    queries = jnp.asarray(rng.random((4, 6)).astype(np.float32))
+    qkey = jax.random.PRNGKey(2)
+    ia, ma = sim.query(sim.write(stored), queries, key=qkey)
+    ib, mb = ref.query(ref.write(stored), queries, key=qkey)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+    with pytest.raises(ValueError, match="c2c_fold"):
+        CAMASim(cfg, c2c_fold="nope")
+
+
+def test_jnp_path_honors_want_dist_false():
+    rng = np.random.default_rng(1)
+    stored = _range_grid(9, 5, rng)
+    spec = mapping.grid_spec(9, 5, 4, 5)
+    grid = mapping.partition_stored(stored, spec)
+    qseg = mapping.partition_query(
+        jnp.asarray(rng.random((3, 5)).astype(np.float32)), spec)
+    kw = dict(distance="range", sensing="exact", sensing_limit=0.0,
+              col_valid=mapping.col_valid_mask(spec),
+              row_valid=mapping.row_valid_mask(spec))
+    d, m = subarray.subarray_query_batched(grid, qseg, use_kernel=False,
+                                           want_dist=False, **kw)
+    assert d is None
+    _, want = subarray.subarray_query_batched(grid, qseg, use_kernel=False,
+                                              **kw)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(want))

@@ -13,12 +13,12 @@ import pytest
 _ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
-def _run_example(name: str, timeout: int = 600):
+def _run_example(name: str, *args: str, timeout: int = 600):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
     script = os.path.join(_ROOT, "examples", name)
-    return subprocess.run([sys.executable, script], env=env,
+    return subprocess.run([sys.executable, script, *args], env=env,
                           capture_output=True, text=True, timeout=timeout)
 
 
@@ -36,3 +36,16 @@ def test_long_context_retrieval_example_runs():
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "OK: CAM best-match retrieval recovered the needle" \
         in proc.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("args", [(), ("--kernel",)])
+def test_acam_decision_tree_example_runs(args):
+    """X-TIME-style decision-tree inference, on both the jnp broadcast
+    path and the fused batched ACAM range Pallas kernel."""
+    proc = _run_example("acam_decision_tree.py", *args)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK: one ACAM search == full decision-tree inference." \
+        in proc.stdout
+    if args:
+        assert "fused range kernel" in proc.stdout

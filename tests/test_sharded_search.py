@@ -4,7 +4,9 @@ Three layers of guarantees:
   * a 4-host-device subprocess sweep asserting ``ShardedCAMSimulator`` is
     bit-identical to the single-device ``FunctionalSimulator`` across all
     {exact, best, threshold} x {l2, l1, hamming, dot} combos, including
-    C2C noise (per-bank RNG folding) and the Pallas kernel path;
+    C2C noise (per-bank RNG folding), the Pallas kernel path, ACAM 5-D
+    [lo, hi] range grids on the fused range kernel, and best-match with
+    match_param > padded_K (clamp + -1 pad parity);
   * property tests (hypothesis, offline shim) for the cross-device merge
     invariants: the local-top-k + re-rank comparator is split-invariant,
     associative, and (absent score ties) shard-order permutation
@@ -54,6 +56,8 @@ def check(cfg, K=37, N=12, Q=9, use_kernel=False, query_axis=None,
                                c2c_query_tile=c2c_tile)
     k1, k2 = jax.random.split(jax.random.PRNGKey(zlib.crc32(tag.encode())))
     stored = jax.random.uniform(k1, (K, N))
+    if cfg.circuit.cell_type == "acam":     # 5-D [lo, hi] range grid
+        stored = jnp.stack([stored, stored + 0.2], axis=-1)
     queries = jax.random.uniform(k2, (Q, N))
     qkey = jax.random.PRNGKey(7)
     ia, ma = sim.query(sim.write(stored), queries, key=qkey)
@@ -102,6 +106,41 @@ check(cfg_for("best", "l2", "adder", "comparator", "best"), Q=8,
 check(cfg_for("best", "l2", "adder", "comparator", "best", "c2c"), Q=8,
       query_axis="query", c2c_tile=2, tag="qshard-c2c")
 n += 9
+
+# ACAM 5-D [lo, hi] range grids on the fused range kernel, all sensings,
+# jnp path, and C2C on the per-bank fold over the 5-D grid
+def acam_cfg(match, h_merge, v_merge, sensing, variation="none"):
+    return CAMConfig(
+        app=AppConfig(distance="range", match_type=match, match_param=3,
+                      data_bits=0),
+        arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="acam",
+                              sensing=sensing, sensing_limit=0.5),
+        device=DeviceConfig(device="fefet", variation=variation,
+                            variation_std=0.05))
+
+check(acam_cfg("exact", "and", "gather", "exact"), use_kernel=True,
+      tag="acam-kernel-exact")
+check(acam_cfg("best", "adder", "comparator", "best"), use_kernel=True,
+      tag="acam-kernel-best")
+check(acam_cfg("threshold", "adder", "gather", "threshold"),
+      use_kernel=True, tag="acam-kernel-threshold")
+check(acam_cfg("exact", "and", "gather", "exact"), tag="acam-jnp-exact")
+check(acam_cfg("exact", "and", "gather", "exact", "c2c"), use_kernel=True,
+      tag="acam-kernel-c2c")
+n += 5
+
+# best-match merge with match_param > padded_K: the single-device clamp
+# + -1 pad must agree with the sharded candidate re-rank (regression for
+# the unclamped jax.lax.top_k crash in v_merge_comparator_topk)
+big_k = CAMConfig(
+    app=AppConfig(distance="l2", match_type="best", match_param=64,
+                  data_bits=3),
+    arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+    circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam", sensing="best"),
+    device=DeviceConfig(device="fefet"))
+check(big_k, tag="bigk-best")
+n += 1
 print(f"PARITY_OK {n}")
 '''
 
@@ -118,7 +157,7 @@ def _run_subprocess(script: str, timeout: int = 900):
 @pytest.mark.multidevice
 def test_sharded_parity_4_devices():
     proc = _run_subprocess(_PARITY_SCRIPT)
-    assert proc.returncode == 0 and "PARITY_OK 21" in proc.stdout, \
+    assert proc.returncode == 0 and "PARITY_OK 27" in proc.stdout, \
         (proc.stdout[-2000:], proc.stderr[-4000:])
 
 
