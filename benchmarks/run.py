@@ -24,6 +24,24 @@ import time
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent /     "BENCH_kernels.json"
 
 
+def merge_bench_rows(rows: list, path: pathlib.Path = BENCH_JSON) -> list:
+    """Replace-by-name merge into the JSON perf trajectory.
+
+    A partial run (e.g. ``--devices 0``, or the standalone
+    ``sharded_perf`` sweep) must refresh its own rows without destroying
+    rows only other sweeps emit; a corrupt/truncated file self-heals."""
+    existing = []
+    if path.exists():
+        try:
+            existing = json.loads(path.read_text())
+        except ValueError:
+            existing = []
+    fresh = {r["name"] for r in rows}
+    merged = [r for r in existing if r.get("name") not in fresh] + rows
+    path.write_text(json.dumps(merged, indent=1))
+    return merged
+
+
 def _run_and_collect(fn, rows: list) -> None:
     """Run a benchmark main, echo its stdout, and parse the CSV rows."""
     buf = io.StringIO()
@@ -48,7 +66,7 @@ def main() -> None:
     if "--devices" in sys.argv:
         devices = int(sys.argv[sys.argv.index("--devices") + 1])
     from . import (fig4_sweep, fig5_nonidealities, kernel_bench,
-                   sharded_bench, table4_validation)
+                   sharded_bench, sharded_perf, table4_validation)
 
     rows: list = []
 
@@ -60,6 +78,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
     _run_and_collect(table4_validation.main, rows)
+    _run_and_collect(sharded_perf.main, rows)
     _run_and_collect(fig4_sweep.main, rows)
     _run_and_collect(fig5_nonidealities.main, rows)
     _run_and_collect(kernel_bench.main, rows)
@@ -90,8 +109,8 @@ def main() -> None:
         emit("fig5_full", 0, fig5_nonidealities.check_trends(out))
     emit("total_wall_s", round((time.perf_counter() - t0) * 1e6),
          f"{time.perf_counter() - t0:.1f}s")
-    BENCH_JSON.write_text(json.dumps(rows, indent=1))
-    print(f"bench_json,0,rows={len(rows)}_path={BENCH_JSON.name}")
+    merged = merge_bench_rows(rows)
+    print(f"bench_json,0,rows={len(merged)}_path={BENCH_JSON.name}")
 
 
 if __name__ == "__main__":

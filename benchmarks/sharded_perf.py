@@ -1,0 +1,97 @@
+"""Mesh-level perf-model sweep for sharded CAM topologies.
+
+Runs ``predict_search_sharded`` over the SAME weak-scaling geometry the
+measured sweep (``sharded_bench``) executes — fixed 8 banks x 128 rows per
+device, Q=128 query batches — at d in {1, 2, 4} devices for each match
+family, emitting one ``perf_sharded_d{d}_{match}`` row per point.  This is
+the hardware-prediction counterpart of the ``kernel_*_sharded_d{d}``
+wall-time rows: the model is pure arithmetic (no devices needed), so the
+sweep also runs in CI and on machines without forced host devices.
+
+    PYTHONPATH=src python -m benchmarks.sharded_perf
+
+Standalone runs merge their rows into ``BENCH_kernels.json`` (replacing
+stale rows of the same name); under ``benchmarks.run`` the parent collects
+the CSV like every other benchmark.
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+BANKS_PER_DEV = 8     # nv shards resident per device (matches sharded_bench)
+ROWS = 128
+COLS = 128
+NDIM = 256
+Q = 128               # queries amortizing one merge collective
+DEVICE_SWEEP = (1, 2, 4)
+LINK = "on_package"
+
+
+def _configs():
+    from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                            DeviceConfig)
+
+    def cam(match, h_merge, v_merge, sensing):
+        return CAMConfig(
+            app=AppConfig(distance="l2", match_type=match, match_param=3,
+                          data_bits=3),
+            arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+            circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="mcam",
+                                  sensing=sensing),
+            device=DeviceConfig(device="fefet"))
+
+    return (("exact", cam("exact", "and", "gather", "exact")),
+            ("best", cam("best", "adder", "comparator", "best")),
+            ("threshold", cam("threshold", "adder", "gather", "threshold")))
+
+
+def sweep() -> list:
+    """All sweep points as ``(name, us_per_call, derived)`` rows."""
+    from repro.core.perf import (MeshSpec, estimate_arch, predict_search,
+                                 predict_search_sharded)
+
+    out = []
+    for match, cfg in _configs():
+        lat_prev = None
+        for d in DEVICE_SWEEP:
+            K = d * BANKS_PER_DEV * ROWS          # fixed rows/device
+            arch = estimate_arch(cfg, K, NDIM)
+            t0 = time.perf_counter()
+            p = predict_search_sharded(cfg, arch, MeshSpec(d, LINK),
+                                       queries_per_batch=Q)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            one_chip = predict_search(cfg, arch)  # same K on a single chip
+            mesh = p.breakdown["mesh"]
+            mono = lat_prev is None or p.latency_ns <= lat_prev
+            lat_prev = p.latency_ns
+            out.append((
+                f"perf_sharded_d{d}_{match}", f"{dt_us:.1f}",
+                f"lat_ns={p.latency_ns:.4f}_"
+                f"lat_1chip_ns={one_chip.latency_ns:.4f}_"
+                f"energy_pj={p.energy_pj:.1f}_"
+                f"energy_1chip_pj={one_chip.energy_pj:.1f}_"
+                f"bytes_dev={mesh['bytes_per_device_batch']:.0f}_"
+                f"rows={K}_link={LINK}_monotone={mono}"))
+    return out
+
+
+def main() -> None:
+    for name, us, derived in sweep():
+        print(f"{name},{us},{derived}")
+
+
+def merge_into_json(rows) -> pathlib.Path:
+    """Replace/append our rows in BENCH_kernels.json (standalone mode)."""
+    from .run import BENCH_JSON, merge_bench_rows
+    merge_bench_rows([{"name": name, "us_per_call": float(us),
+                       "derived": derived} for name, us, derived in rows])
+    return BENCH_JSON
+
+
+if __name__ == "__main__":
+    got = sweep()
+    for name, us, derived in got:
+        print(f"{name},{us},{derived}")
+    p = merge_into_json(got)
+    print(f"bench_json,0,rows={len(got)}_merged_into={p.name}")

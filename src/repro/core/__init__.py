@@ -8,12 +8,13 @@ from .camasim import CAMASim
 from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
                      DeviceConfig)
 from .functional import CAMState, FunctionalSimulator
-from .perf import PerfResult, estimate_arch, predict_search, predict_write
+from .perf import (MeshLink, MeshSpec, PerfResult, estimate_arch,
+                   predict_search, predict_search_sharded, predict_write)
 from .sharded import ShardedCAMSimulator
 
 __all__ = [
     "CAMASim", "CAMConfig", "AppConfig", "ArchConfig", "CircuitConfig",
     "DeviceConfig", "CAMState", "FunctionalSimulator", "PerfResult",
-    "ShardedCAMSimulator", "estimate_arch", "predict_search",
-    "predict_write",
+    "MeshLink", "MeshSpec", "ShardedCAMSimulator", "estimate_arch",
+    "predict_search", "predict_search_sharded", "predict_write",
 ]

@@ -7,15 +7,14 @@
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from .config import CAMConfig
 from .functional import CAMState, FunctionalSimulator
-from .perf import (ArchSpecifics, PerfResult, estimate_arch, predict_search,
-                   predict_write)
+from .perf import (ArchSpecifics, MeshSpec, estimate_arch, perf_report)
 
 
 class CAMASim:
@@ -52,35 +51,23 @@ class CAMASim:
 
     def eval_perf(self, n_queries: int = 1, include_write: bool = False,
                   ops_per_query: int = 1,
-                  clock_hz: Optional[float] = None) -> dict:
+                  clock_hz: Optional[float] = None,
+                  mesh: Optional[Union[int, MeshSpec]] = None,
+                  queries_per_batch: int = 1) -> dict:
         """Hardware performance prediction for the written store.
 
         ``clock_hz``: system clock — each search cycle is quantized to
-        max(combinational search latency, one clock period)."""
-        arch = self.arch_specifics()
-        search = predict_search(self.config, arch, ops_per_query=1)
-        if clock_hz is not None:
-            cycle = max(search.latency_ns, 1e9 / clock_hz)
-        else:
-            cycle = search.latency_ns
-        from .perf.estimator import PerfResult
-        search = PerfResult(latency_ns=cycle * ops_per_query,
-                            energy_pj=search.energy_pj * ops_per_query,
-                            area_um2=search.area_um2,
-                            breakdown=search.breakdown)
-        out = {
-            "arch": arch.describe(),
-            "search": search,
-            "latency_ns": search.latency_ns,
-            "energy_pj": search.energy_pj * n_queries,
-            "area_um2": search.area_um2,
-            "edp_pj_ns": search.edp,
-        }
-        if include_write:
-            w = predict_write(self.config, arch)
-            out["write"] = w
-            out["energy_pj"] += w.energy_pj
-        return out
+        max(combinational search latency, one clock period).
+
+        ``mesh``: device count or ``perf.MeshSpec`` — when given, predict
+        for the sharded topology ``ShardedCAMSimulator`` executes (per-
+        device hierarchy + cross-device merge over chip-to-chip links,
+        amortized over ``queries_per_batch``); ``mesh=1`` reproduces the
+        single-chip prediction exactly."""
+        return perf_report(self.config, self.arch_specifics(), mesh=mesh,
+                           n_queries=n_queries, include_write=include_write,
+                           ops_per_query=ops_per_query, clock_hz=clock_hz,
+                           queries_per_batch=queries_per_batch)
 
     # ------------------------------------------------------- convenience
     def search(self, stored: jax.Array, queries: jax.Array,

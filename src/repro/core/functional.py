@@ -190,8 +190,8 @@ class FunctionalSimulator:
     def match_k(self, padded_K: int) -> int:
         """Result width k of the merge for a padded_K-row store."""
         cfg = self.config
-        return cfg.app.match_param if cfg.app.match_type == "best" else max(
-            1, min(padded_K, 16))
+        return merge.match_k(cfg.app.match_type, cfg.app.match_param,
+                             padded_K)
 
     def segment_queries(self, state: CAMState, queries: jax.Array
                         ) -> jax.Array:

@@ -241,6 +241,49 @@ def rerank_candidates(vals: jax.Array, idx: jax.Array, k: int, *,
 
 
 # --------------------------------------------------------------------------
+# Cross-device merge payload accounting (perf model contract)
+# --------------------------------------------------------------------------
+def match_k(match_type: str, match_param: int, padded_K: int) -> int:
+    """Result width k of the merge for a ``padded_K``-row store.
+
+    Single source of truth for ``FunctionalSimulator.match_k`` and the
+    perf model (``perf.estimator.predict_search_sharded``), so the
+    modeled candidate widths can never drift from the executed ones."""
+    if match_type == "best":
+        return match_param
+    return max(1, min(padded_K, 16))
+
+
+def shard_merge_payload(match_type: str, h_merge: str, *, Q: int,
+                        nv_local: int, R: int, k: int) -> dict:
+    """Per-device array shapes the cross-device vertical merge moves.
+
+    Mirrors ``core.sharded.ShardedCAMSimulator._combine`` exactly — the
+    perf model derives its chip-to-chip byte counts from these shapes and
+    a multidevice test asserts them against the arrays the simulator
+    actually hands to ``lax.all_gather`` / ``lax.pmax``:
+
+      exact/threshold  ``all_gather`` of the h-reduced 0/1 match-line
+                       block -> ``{'match_rows': (Q, nv_local, R)}``
+      best             stable local top-k candidates, k clamped to the
+                       shard's row count (``local_topk_candidates``) ->
+                       ``{'cand_vals': (Q, kl), 'cand_idx': (Q, kl)}``;
+                       the voting h-merge additionally all-reduces the
+                       per-query tie-break normalizer ->
+                       ``{'dmax': (Q, 1, 1)}``.
+    """
+    if match_type in ("exact", "threshold"):
+        return {"match_rows": (Q, nv_local, R)}
+    if match_type != "best":
+        raise ValueError(f"unknown match_type {match_type!r}")
+    kl = max(1, min(k, nv_local * R))
+    payload = {"cand_vals": (Q, kl), "cand_idx": (Q, kl)}
+    if h_merge == "voting":
+        payload["dmax"] = (Q, 1, 1)
+    return payload
+
+
+# --------------------------------------------------------------------------
 # Full merge dispatch
 # --------------------------------------------------------------------------
 def merge(dist: jax.Array, match: jax.Array, *, match_type: str,

@@ -13,8 +13,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional, Union
 
+from .. import merge
 from ..config import CAMConfig
 from ..mapping import GridSpec, grid_spec
 from . import interconnect
@@ -64,8 +65,8 @@ class PerfResult:
     @property
     def edp_aj_s(self) -> float:
         """EDP in aJ*s (units used by paper Fig. 4)."""
-        return self.edp * 1e-3 * 1e-9  # pJ->aJ is *1e6; ns->s is *1e-9
-        # (kept explicit: pJ*ns = 1e-12 J * 1e-9 s = 1e-21 J*s = 1e-3 aJ*s)
+        # pJ*ns = 1e-12 J * 1e-9 s = 1e-21 J*s = 1e-3 aJ*s
+        return self.edp * 1e-3
 
 
 def estimate_arch(config: CAMConfig, K: int, N: int) -> ArchSpecifics:
@@ -156,6 +157,157 @@ def predict_search(config: CAMConfig, arch: ArchSpecifics,
     return PerfResult(latency_ns=t * ops_per_query,
                       energy_pj=e * ops_per_query,
                       area_um2=area, breakdown=breakdown)
+
+
+# Bit widths of the cross-device merge payload fields (merge.
+# shard_merge_payload): match lines are 1-bit wires; candidate scores and
+# the voting tie-break normalizer travel as f32; candidate indices are
+# log2(global rows) wide (same convention as the on-chip bits_up).
+def _payload_bits(field: str, global_rows: int) -> int:
+    if field == "match_rows":
+        return 1
+    if field == "cand_idx":
+        return max(1, math.ceil(math.log2(max(2, global_rows))))
+    if field in ("cand_vals", "dmax"):
+        return 32
+    raise KeyError(f"unknown merge payload field {field!r}")
+
+
+def sharded_merge_bytes(config: CAMConfig, arch: ArchSpecifics,
+                        devices: int, queries_per_batch: int = 1) -> dict:
+    """Per-device chip-to-chip payload bytes for one query batch.
+
+    Shapes come from ``merge.shard_merge_payload`` — the same accounting
+    ``ShardedCAMSimulator._combine`` executes — converted to bytes with
+    the per-field wire widths above.  Returns the per-field byte map plus
+    ``total`` and the shard geometry used (``nv_local``, mesh-padded
+    global row count ``rows_pad``).
+    """
+    cfg = config
+    spec = arch.spec
+    nv_local = math.ceil(spec.nv / max(1, devices))
+    rows_pad = nv_local * max(1, devices) * spec.R
+    k = merge.match_k(cfg.app.match_type, cfg.app.match_param,
+                      spec.padded_K)
+    payload = merge.shard_merge_payload(
+        cfg.app.match_type, cfg.arch.h_merge, Q=queries_per_batch,
+        nv_local=nv_local, R=spec.R, k=k)
+    out = {name: math.prod(shape) * _payload_bits(name, rows_pad) / 8.0
+           for name, shape in payload.items()}
+    out["total"] = sum(out.values())
+    out["nv_local"] = nv_local
+    out["rows_pad"] = rows_pad
+    return out
+
+
+def predict_search_sharded(config: CAMConfig, arch: ArchSpecifics,
+                           mesh: Union[int, "interconnect.MeshSpec"], *,
+                           queries_per_batch: int = 1,
+                           ops_per_query: int = 1) -> PerfResult:
+    """Mesh-level performance prediction: per-device hierarchy rollup plus
+    the cross-device merge, exactly as ``ShardedCAMSimulator`` executes it.
+
+    The stored grid's nv (bank) axis is padded to a device multiple and
+    split; every device runs the full single-chip ``predict_search``
+    rollup over its local shard (all devices search in parallel), and the
+    vertical merge crosses the mesh with the arrays
+    ``merge.shard_merge_payload`` describes: an all_gather of per-bank
+    match lines for exact/threshold, local-top-k candidate scores +
+    indices for best match, one pmax scalar per query for voting
+    tie-breaks.  Link traffic amortizes over ``queries_per_batch`` (the
+    collective moves the whole batch's payload at once).
+
+    At ``mesh`` size 1 this degenerates bit-for-bit to
+    ``predict_search(config, arch, ops_per_query)`` — the Table IV
+    calibration anchor.
+    """
+    mesh = interconnect.as_mesh(mesh)
+    d = mesh.devices
+    cfg = config
+    spec = arch.spec
+    # d == 1 reuses the caller's arch so the degeneration is bitwise, not
+    # merely numerically close
+    local_arch = arch if d == 1 else estimate_arch(
+        cfg, math.ceil(spec.nv / d) * spec.R, spec.N)
+    local = predict_search(cfg, local_arch, ops_per_query=1)
+
+    Q = max(1, queries_per_batch)
+    link = mesh.link_model
+    traffic = sharded_merge_bytes(cfg, arch, d, Q)
+    wire = interconnect.mesh_all_gather(d, traffic["total"], link)
+    # mesh-root merge peripherals: d device results reduced once more with
+    # the same scheme the on-chip top level uses.  Only the LINK traffic
+    # amortizes over the batch (the collective moves all Q queries' payload
+    # in one transfer); the root peripherals merge every query's results
+    # separately, so they bill fully per query — same convention as the
+    # on-chip 'top' level in predict_search (one root instance).
+    root = estimate_merge_peripherals(
+        d, cfg.circuit.rows, match_type=cfg.app.match_type,
+        h_merge=cfg.arch.h_merge, v_merge=cfg.arch.v_merge,
+        merging_horizontal=False)
+    t_mesh = wire["latency_ns"] / Q + root.latency()
+    e_mesh = wire["energy_pj"] / Q + root.energy()
+    a_mesh = root.area() + link.phy_area_um2 * d if d > 1 else 0.0
+
+    t = (local.latency_ns + t_mesh) * ops_per_query
+    e = (local.energy_pj * d + e_mesh) * ops_per_query
+    breakdown = dict(local.breakdown)
+    breakdown["mesh"] = {
+        "latency_ns": t_mesh * ops_per_query,
+        "energy_pj": e_mesh * ops_per_query,
+        "area_um2": a_mesh,
+        "devices": float(d),
+        "bytes_per_device_batch": traffic["total"],
+        "bytes_on_wire_batch": wire["bytes_on_wire"],
+    }
+    return PerfResult(latency_ns=t, energy_pj=e,
+                      area_um2=local.area_um2 * d + a_mesh,
+                      breakdown=breakdown)
+
+
+def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
+                mesh: Optional[Union[int, "interconnect.MeshSpec"]] = None,
+                n_queries: int = 1, include_write: bool = False,
+                ops_per_query: int = 1, clock_hz: Optional[float] = None,
+                queries_per_batch: int = 1) -> dict:
+    """The ``eval_perf`` dict shared by ``CAMASim`` (mesh=None: single
+    chip) and ``ShardedCAMSimulator`` (mesh = its bank-axis size).
+
+    ``clock_hz``: system clock — each search cycle is quantized to
+    max(combinational search latency, one clock period)."""
+    if mesh is None:
+        search = predict_search(config, arch, ops_per_query=1)
+    else:
+        search = predict_search_sharded(
+            config, arch, mesh, queries_per_batch=queries_per_batch)
+    cycle = search.latency_ns
+    if clock_hz is not None:
+        cycle = max(cycle, 1e9 / clock_hz)
+    search = PerfResult(latency_ns=cycle * ops_per_query,
+                        energy_pj=search.energy_pj * ops_per_query,
+                        area_um2=search.area_um2,
+                        breakdown=search.breakdown)
+    out = {
+        "arch": arch.describe(),
+        "search": search,
+        "latency_ns": search.latency_ns,
+        "energy_pj": search.energy_pj * n_queries,
+        "area_um2": search.area_um2,
+        "edp_pj_ns": search.edp,
+    }
+    if mesh is not None:
+        # the per-level breakdown stays per-op (as every on-chip level
+        # does), but this top-level entry sits next to the ops-scaled
+        # latency_ns/energy_pj and must scale with them
+        m = dict(search.breakdown["mesh"])
+        m["latency_ns"] *= ops_per_query
+        m["energy_pj"] *= ops_per_query
+        out["mesh"] = m
+    if include_write:
+        w = predict_write(config, arch)
+        out["write"] = w
+        out["energy_pj"] += w.energy_pj
+    return out
 
 
 def predict_write(config: CAMConfig, arch: ArchSpecifics) -> PerfResult:

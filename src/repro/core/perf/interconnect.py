@@ -1,15 +1,23 @@
-"""Interconnect estimation (NVSim-like RC H-tree, paper §III-D).
+"""Interconnect estimation (NVSim-like RC H-tree, paper §III-D) plus the
+mesh level above it: chip-to-chip links for sharded CAM topologies.
 
-Each hierarchy level routes query data down to its children and match
-results back up through an H-tree.  We estimate wire length from the
+Each on-chip hierarchy level routes query data down to its children and
+match results back up through an H-tree.  We estimate wire length from the
 children's footprint (sqrt of aggregate area) and apply distributed-RC
 delay + switching energy per the NVSim methodology, with 22nm wire
 constants.
+
+Above ``top`` sits the device mesh that ``core.sharded`` actually executes
+on: ``MeshLink`` models one chip-to-chip link class (bandwidth, per-hop
+latency, energy per bit, PHY area) with presets spanning on-package
+bridges, PCB SerDes, and NVLink-class cables; ``mesh_all_gather`` costs the
+ring collective the cross-device merge performs.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Union
 
 # 22nm global-layer wire constants
 R_WIRE = 3.0       # ohm/um
@@ -46,4 +54,84 @@ def level_interconnect(children: int, child_area_um2: float,
         "energy_pj": w.energy_pj_per_bit * (bits_down + bits_up),
         "area_um2": 0.15 * w.length_um * max(bits_down, bits_up) ** 0.5,
         "length_um": w.length_um,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mesh level: chip-to-chip links above the ``top`` hierarchy level
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MeshLink:
+    """One chip-to-chip link class of the device mesh."""
+    name: str
+    bandwidth_gbyte_s: float  # per-direction payload bandwidth in
+                              # gigaBYTES/s (1 GB/s == 1 byte/ns)
+    latency_ns: float         # per-hop link + protocol latency
+    energy_pj_per_bit: float  # end-to-end transfer energy per bit
+    phy_area_um2: float       # per-chip PHY/SerDes macro footprint
+
+
+# Link presets (per-direction, per-link ballpark figures for 2.5D bridges,
+# board-level SerDes, and NVLink-class cabled fabrics).
+MESH_LINKS = {
+    "on_package": MeshLink("on_package", bandwidth_gbyte_s=512.0,
+                           latency_ns=5.0, energy_pj_per_bit=0.25,
+                           phy_area_um2=9_000.0),
+    "pcb": MeshLink("pcb", bandwidth_gbyte_s=32.0, latency_ns=30.0,
+                    energy_pj_per_bit=4.0, phy_area_um2=25_000.0),
+    "nvlink": MeshLink("nvlink", bandwidth_gbyte_s=200.0, latency_ns=12.0,
+                       energy_pj_per_bit=1.3, phy_area_um2=40_000.0),
+}
+
+
+def get_mesh_link(link: Union[str, MeshLink]) -> MeshLink:
+    if isinstance(link, MeshLink):
+        return link
+    if link not in MESH_LINKS:
+        raise KeyError(f"unknown mesh link {link!r}; presets: "
+                       f"{sorted(MESH_LINKS)} (or pass a MeshLink)")
+    return MESH_LINKS[link]
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Mesh topology above ``top``: device count + link class."""
+    devices: int = 1
+    link: Union[str, MeshLink] = "on_package"
+
+    def __post_init__(self):
+        if self.devices < 1:
+            raise ValueError("mesh devices must be >= 1")
+        get_mesh_link(self.link)   # validate eagerly
+
+    @property
+    def link_model(self) -> MeshLink:
+        return get_mesh_link(self.link)
+
+
+def as_mesh(mesh: Union[int, MeshSpec]) -> MeshSpec:
+    """Accept a bare device count where a ``MeshSpec`` is expected."""
+    return MeshSpec(devices=mesh) if isinstance(mesh, int) else mesh
+
+
+def mesh_all_gather(devices: int, bytes_per_device: float,
+                    link: Union[str, MeshLink]) -> dict:
+    """Ring all-gather of one ``bytes_per_device`` block per chip.
+
+    The standard ring runs ``devices - 1`` serialized steps; in each step
+    every chip forwards one block over one link, so every block crosses
+    ``devices - 1`` links in total.  A single chip (or an empty payload)
+    moves nothing.  ``lax.pmax``-style scalar all-reduces are costed with
+    the same ring (their payload is tiny, the hop latency dominates).
+    """
+    lk = get_mesh_link(link)
+    if devices <= 1 or bytes_per_device <= 0:
+        return {"latency_ns": 0.0, "energy_pj": 0.0, "bytes_on_wire": 0.0}
+    steps = devices - 1
+    t_serial = bytes_per_device / lk.bandwidth_gbyte_s     # ns per step
+    bytes_on_wire = float(bytes_per_device) * devices * steps
+    return {
+        "latency_ns": steps * (lk.latency_ns + t_serial),
+        "energy_pj": 8.0 * bytes_on_wire * lk.energy_pj_per_bit,
+        "bytes_on_wire": bytes_on_wire,
     }

@@ -38,7 +38,7 @@ the true padded_K.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +48,7 @@ from repro.launch.mesh import compat_shard_map, make_cam_mesh
 from . import merge, variation
 from .config import CAMConfig
 from .functional import CAMState, FunctionalSimulator
+from .perf import ArchSpecifics, MeshLink, MeshSpec, estimate_arch, perf_report
 
 
 class ShardedCAMSimulator:
@@ -83,11 +84,13 @@ class ShardedCAMSimulator:
                              f"{self.mesh.axis_names}")
         self.query_axis = query_axis
         self.n_query = sizes[query_axis] if query_axis else 1
+        self._arch: Optional[ArchSpecifics] = None
 
     # ------------------------------------------------------------- write
     def write(self, stored: jax.Array, key: Optional[jax.Array] = None
               ) -> CAMState:
         """Write simulation + mesh placement of the resulting state."""
+        self._arch = estimate_arch(self.config, *stored.shape[:2])
         return self.shard_state(self.sim.write(stored, key))
 
     def shard_state(self, state: CAMState) -> CAMState:
@@ -113,6 +116,31 @@ class ShardedCAMSimulator:
             spec=state.spec,
             col_valid=jax.device_put(state.col_valid, sh["col_valid"]),
             row_valid=jax.device_put(row_valid, sh["row_valid"]))
+
+    # ------------------------------------------------------------- perf
+    def arch_specifics(self) -> ArchSpecifics:
+        if self._arch is None:
+            raise RuntimeError("call write() before querying arch specifics")
+        return self._arch
+
+    def eval_perf(self, n_queries: int = 1, include_write: bool = False,
+                  ops_per_query: int = 1,
+                  clock_hz: Optional[float] = None,
+                  link: Union[str, MeshLink] = "on_package",
+                  queries_per_batch: int = 1) -> dict:
+        """Mesh-level hardware performance prediction for the written
+        store: per-device hierarchy rollup + cross-device merge over
+        chip-to-chip ``link``s, for the topology this simulator executes
+        (its bank-axis size).
+
+        ``queries_per_batch`` amortizes the merge collective over a query
+        batch (the serving batch size); defaults to 1.  A 1-bank mesh
+        reproduces ``CAMASim.eval_perf`` exactly."""
+        return perf_report(
+            self.config, self.arch_specifics(),
+            mesh=MeshSpec(self.n_banks, link), n_queries=n_queries,
+            include_write=include_write, ops_per_query=ops_per_query,
+            clock_hz=clock_hz, queries_per_batch=queries_per_batch)
 
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,

@@ -79,3 +79,24 @@ DRL = ValidationTarget(
     pub_energy_pj=None or 46.0e6, sim_energy_pj=46.0e6)
 
 TARGETS = (DRL, MANN, HDC)
+
+
+def mesh_anchor(target: ValidationTarget, devices: int = 1,
+                link: str = "on_package"):
+    """Single-chip vs mesh-level prediction pair for a Table IV target.
+
+    The d=1 mesh prediction is the calibration anchor: it must reproduce
+    the single-chip rollup (the numbers validated against Table IV)
+    bit-for-bit, so the mesh extension can never drift the calibrated
+    baseline.  Returns ``(single, sharded)`` PerfResults at the target's
+    ``ops_per_query``.
+    """
+    from .perf import (MeshSpec, estimate_arch, predict_search,
+                       predict_search_sharded)
+    arch = estimate_arch(target.config, target.K, target.N)
+    single = predict_search(target.config, arch,
+                            ops_per_query=target.ops_per_query)
+    sharded = predict_search_sharded(
+        target.config, arch, MeshSpec(devices, link),
+        ops_per_query=target.ops_per_query)
+    return single, sharded

@@ -12,6 +12,33 @@ def test_table4_bench_fast():
         assert abs(de) < 8.0, (name, de)
 
 
+def test_sharded_perf_sweep_rows():
+    """The mesh perf sweep emits one row per (d, match) point; the d=1
+    point is the single-chip prediction exactly (no mesh tax) and the
+    payload carries the fields README documents."""
+    from benchmarks.sharded_perf import DEVICE_SWEEP, sweep
+    rows = sweep()
+    names = [name for name, _, _ in rows]
+    for match in ("exact", "best", "threshold"):
+        for d in DEVICE_SWEEP:
+            assert f"perf_sharded_d{d}_{match}" in names
+    assert len(rows) == 3 * len(DEVICE_SWEEP)
+
+    def field(derived, key):
+        return derived.split(f"{key}=")[1].split("_")[0]
+
+    for name, _, derived in rows:
+        assert float(field(derived, "lat_ns")) > 0, name
+        assert float(field(derived, "bytes_dev")) > 0, name
+        assert "link=on_package" in derived, name
+        if name.startswith("perf_sharded_d1_"):
+            # d=1: sharded prediction degenerates to the 1-chip reference
+            assert field(derived, "lat_ns") == field(derived,
+                                                     "lat_1chip_ns"), name
+            assert field(derived, "energy_pj") == field(
+                derived, "energy_1chip_pj"), name
+
+
 @pytest.mark.slow
 def test_fig4_trends_minimal():
     from benchmarks.fig4_sweep import check_trends, run

@@ -19,6 +19,43 @@ def test_table4_within_8pct(target):
                                               rel=0.08)
 
 
+# Golden snapshot of the CURRENT calibration (rel=1e-6, far tighter than
+# the ±8% paper band): estimator refactors that silently shift the Table IV
+# rollup must fail here loudly instead of drifting inside the tolerance.
+# A deliberate recalibration regenerates these from
+# CAMASim.eval_perf(ops_per_query=t.ops_per_query, clock_hz=t.clock_hz)
+# per target (latency_ns, energy_pj, area_um2).
+_TABLE4_GOLDEN = {
+    "DRL [4]": (946.6666666666667, 44681541.58538784, 698887.2811836092),
+    "MANN [8]": (6.255124060521206, 17.672045870958204, 8367.636229702011),
+    "HDC [7]": (12.786644524378557, 252.33384877314623, 19673.19192773514),
+}
+
+
+@pytest.mark.parametrize("target", TARGETS, ids=lambda t: t.name)
+def test_table4_golden_snapshot(target):
+    lat, en, area = _TABLE4_GOLDEN[target.name]
+    sim = CAMASim(target.config)
+    sim.write(jnp.zeros((target.K, target.N)))
+    perf = sim.eval_perf(ops_per_query=target.ops_per_query,
+                         clock_hz=target.clock_hz)
+    assert perf["latency_ns"] == pytest.approx(lat, rel=1e-6)
+    assert perf["energy_pj"] == pytest.approx(en, rel=1e-6)
+    assert perf["area_um2"] == pytest.approx(area, rel=1e-6)
+
+
+def test_edp_aj_s_unit_conversion():
+    """pJ*ns = 1e-21 J*s = 1e-3 aJ*s (regression: an extra *1e-9 used to
+    contradict the property's own comment)."""
+    from repro.core.perf.estimator import PerfResult
+    known = PerfResult(latency_ns=2.0, energy_pj=3.0, area_um2=1.0)
+    assert known.edp == 6.0
+    assert known.edp_aj_s == pytest.approx(6e-3, rel=1e-12)
+    for lat, en in ((0.5, 80.0), (946.7, 4.5e7), (12.8, 252.3)):
+        r = PerfResult(latency_ns=lat, energy_pj=en, area_um2=0.0)
+        assert r.edp_aj_s == r.edp * 1e-3
+
+
 def test_arch_estimation_counts():
     from repro.core.validation import DRL, HDC, MANN
     for t, n_sub in ((DRL, 64), (MANN, 8), (HDC, 16)):

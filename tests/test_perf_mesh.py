@@ -1,0 +1,316 @@
+"""Mesh-level perf estimation: degeneracy anchor, link-model properties,
+and byte-count parity with the sharded simulator.
+
+Three layers of guarantees:
+  * the d=1 mesh prediction degenerates bit-for-bit to the single-chip
+    Table IV rollup for every validation target (the calibration anchor);
+  * hypothesis properties (offline shim) for the interconnect models:
+    H-tree and mesh-link costs are zero below two children/devices and
+    monotone non-decreasing in fan-in, footprint, bit widths, device
+    count, and payload bytes;
+  * a 4-host-device subprocess asserting the per-sensing payload shapes
+    the model bills (``merge.shard_merge_payload``) are exactly the
+    arrays ``ShardedCAMSimulator._combine`` hands to ``lax.all_gather`` /
+    ``lax.pmax`` at d in {2, 4}.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import merge
+from repro.core.perf import (MESH_LINKS, MeshSpec, estimate_arch,
+                             interconnect, mesh_all_gather, perf_report,
+                             predict_search_sharded, sharded_merge_bytes)
+from repro.core.validation import TARGETS, mesh_anchor
+
+
+# ---------------------------------------------------------------------------
+# d=1 degeneracy: the calibration anchor
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("target", TARGETS, ids=lambda t: t.name)
+def test_mesh_size_1_degenerates_to_single_chip(target):
+    """predict_search_sharded at mesh size 1 reproduces the single-chip
+    prediction EXACTLY (same floats that pass test_table4_within_8pct)."""
+    single, sharded = mesh_anchor(target, devices=1)
+    assert sharded.latency_ns == single.latency_ns
+    assert sharded.energy_pj == single.energy_pj
+    assert sharded.area_um2 == single.area_um2
+    # and the mesh contribution is identically zero
+    m = sharded.breakdown["mesh"]
+    assert m["latency_ns"] == 0.0 and m["energy_pj"] == 0.0
+    assert m["area_um2"] == 0.0
+
+
+@pytest.mark.parametrize("target", TARGETS, ids=lambda t: t.name)
+def test_eval_perf_mesh_1_matches_plain_eval_perf(target):
+    """The CAMASim facade: eval_perf(mesh=1) == eval_perf(), incl. the
+    clock quantization and ops_per_query handling."""
+    import jax.numpy as jnp
+
+    from repro.core import CAMASim
+    sim = CAMASim(target.config)
+    sim.write(jnp.zeros((target.K, target.N)))
+    p0 = sim.eval_perf(ops_per_query=target.ops_per_query,
+                       clock_hz=target.clock_hz)
+    p1 = sim.eval_perf(ops_per_query=target.ops_per_query,
+                       clock_hz=target.clock_hz, mesh=1)
+    for key in ("latency_ns", "energy_pj", "area_um2", "edp_pj_ns"):
+        assert p1[key] == p0[key], key
+
+
+def test_mesh_prediction_every_link_preset_and_q_amortization():
+    """Bigger batches amortize the per-query merge cost; every preset is
+    usable; slower links never predict faster merges."""
+    t = TARGETS[0]   # DRL: gather path, biggest payload
+    arch = estimate_arch(t.config, t.K, t.N)
+    for link in ("on_package", "nvlink", "pcb"):
+        p1 = predict_search_sharded(t.config, arch, MeshSpec(4, link),
+                                    queries_per_batch=1)
+        p128 = predict_search_sharded(t.config, arch, MeshSpec(4, link),
+                                      queries_per_batch=128)
+        m1, m128 = p1.breakdown["mesh"], p128.breakdown["mesh"]
+        assert m1["latency_ns"] > 0.0
+        # per-query amortized mesh latency shrinks with the batch
+        assert m128["latency_ns"] < m1["latency_ns"]
+    # ordering of the presets by bandwidth shows up in the serial term
+    lat = {name: mesh_all_gather(4, 1 << 20, name)["latency_ns"]
+           for name in MESH_LINKS}
+    assert lat["on_package"] < lat["nvlink"] < lat["pcb"]
+
+
+# ---------------------------------------------------------------------------
+# per-sensing byte accounting (model side; executed shapes below)
+# ---------------------------------------------------------------------------
+def test_sharded_merge_bytes_per_sensing_fields():
+    gather = sharded_merge_bytes(TARGETS[0].config,
+                                 estimate_arch(TARGETS[0].config,
+                                               TARGETS[0].K, TARGETS[0].N),
+                                 devices=4, queries_per_batch=8)
+    assert "match_rows" in gather and "cand_vals" not in gather
+    # match lines travel as single bits: Q * nv_local * R / 8 bytes
+    assert gather["match_rows"] == 8 * gather["nv_local"] * 64 / 8.0
+
+    voting = sharded_merge_bytes(TARGETS[1].config,
+                                 estimate_arch(TARGETS[1].config,
+                                               TARGETS[1].K, TARGETS[1].N),
+                                 devices=2, queries_per_batch=8)
+    assert {"cand_vals", "cand_idx", "dmax"} <= set(voting)
+    assert voting["total"] == (voting["cand_vals"] + voting["cand_idx"]
+                               + voting["dmax"])
+
+
+def test_match_k_single_source_of_truth():
+    from repro.core import FunctionalSimulator
+    for cfg in (TARGETS[0].config, TARGETS[1].config):
+        sim = FunctionalSimulator(cfg)
+        for padded_K in (8, 64, 4096):
+            assert sim.match_k(padded_K) == merge.match_k(
+                cfg.app.match_type, cfg.app.match_param, padded_K)
+
+
+# ---------------------------------------------------------------------------
+# interconnect model properties (hypothesis, offline shim)
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 64), st.integers(0, 5000))
+@settings(max_examples=20, deadline=None)
+def test_htree_zero_below_two_children_and_monotone(children, area_i):
+    area = area_i * 3.7
+    w = interconnect.htree_level(children, area)
+    if children <= 1 or area <= 0:
+        assert (w.length_um, w.latency_ns, w.energy_pj_per_bit) == (0, 0, 0)
+    w2 = interconnect.htree_level(children + 1, area + 1.0)
+    assert w2.latency_ns >= w.latency_ns
+    assert w2.energy_pj_per_bit >= w.energy_pj_per_bit
+    assert w2.length_um >= w.length_um
+
+
+@given(st.integers(0, 32), st.integers(1, 4000), st.integers(1, 512),
+       st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_level_interconnect_monotone(children, area_i, bits_down, bits_up):
+    area = float(area_i)
+    ic = interconnect.level_interconnect(children, area, bits_down, bits_up)
+    if children <= 1:
+        assert ic["latency_ns"] == 0.0 and ic["energy_pj"] == 0.0
+        assert ic["area_um2"] == 0.0
+    for kids2, area2, bd2, bu2 in ((children + 1, area, bits_down, bits_up),
+                                   (children, area + 9.0, bits_down, bits_up),
+                                   (children, area, 2 * bits_down, bits_up),
+                                   (children, area, bits_down, 2 * bits_up)):
+        ic2 = interconnect.level_interconnect(kids2, area2, bd2, bu2)
+        for key in ("latency_ns", "energy_pj", "area_um2"):
+            assert ic2[key] >= ic[key], (key, kids2, area2, bd2, bu2)
+
+
+@given(st.integers(1, 64), st.integers(0, 1 << 20))
+@settings(max_examples=20, deadline=None)
+def test_mesh_link_cost_zero_at_one_device_and_monotone(devices, nbytes):
+    for link in MESH_LINKS:
+        c = mesh_all_gather(devices, nbytes, link)
+        if devices <= 1 or nbytes <= 0:
+            assert c["latency_ns"] == 0.0 and c["energy_pj"] == 0.0
+        c_d = mesh_all_gather(devices + 1, nbytes, link)
+        c_b = mesh_all_gather(devices, nbytes + 4096, link)
+        for key in ("latency_ns", "energy_pj", "bytes_on_wire"):
+            assert c_d[key] >= c[key], (key, "devices")
+            assert c_b[key] >= c[key], (key, "bytes")
+
+
+def test_bad_mesh_inputs_raise():
+    with pytest.raises(KeyError):
+        interconnect.get_mesh_link("carrier-pigeon")
+    with pytest.raises(ValueError):
+        MeshSpec(0)
+
+
+# ---------------------------------------------------------------------------
+# executed-shape parity: the model's payload == what the simulator gathers
+# (subprocess: XLA host-device trick must precede jax init)
+# ---------------------------------------------------------------------------
+_SHAPES_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import math
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                        DeviceConfig, ShardedCAMSimulator, merge)
+from repro.core.perf import estimate_arch, sharded_merge_bytes
+from repro.launch.mesh import make_cam_mesh
+
+assert len(jax.devices()) == 4, jax.devices()
+K, N, Q, R = 37, 12, 9, 8
+
+rec = []
+orig_ag, orig_pmax = jax.lax.all_gather, jax.lax.pmax
+def ag(x, *a, **k):
+    rec.append(("all_gather", tuple(x.shape)))
+    return orig_ag(x, *a, **k)
+def pm(x, *a, **k):
+    rec.append(("pmax", tuple(x.shape)))
+    return orig_pmax(x, *a, **k)
+jax.lax.all_gather, jax.lax.pmax = ag, pm
+
+def cfg_for(match, h_merge, v_merge, sensing):
+    return CAMConfig(
+        app=AppConfig(distance="l2", match_type=match, match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+        circuit=CircuitConfig(rows=R, cols=8, cell_type="mcam",
+                              sensing=sensing),
+        device=DeviceConfig(device="fefet"))
+
+checks = 0
+for d in (2, 4):
+    for tag, cfg in (
+            ("exact", cfg_for("exact", "and", "gather", "exact")),
+            ("threshold", cfg_for("threshold", "adder", "gather",
+                                  "threshold")),
+            ("best", cfg_for("best", "adder", "comparator", "best")),
+            ("voting", cfg_for("best", "voting", "comparator", "best"))):
+        sim = ShardedCAMSimulator(cfg, make_cam_mesh(d))
+        state = sim.write(jax.random.uniform(jax.random.PRNGKey(0), (K, N)))
+        arch = estimate_arch(cfg, K, N)
+        traffic = sharded_merge_bytes(cfg, arch, d, Q)
+        # model shard geometry == the placed grid's
+        nv_pad = state.grid.shape[0]
+        assert nv_pad % d == 0 and traffic["nv_local"] == nv_pad // d, \
+            (tag, d, traffic["nv_local"], nv_pad)
+        assert traffic["rows_pad"] == nv_pad * R, (tag, d)
+        rec.clear()
+        sim.query(state, jax.random.uniform(jax.random.PRNGKey(1), (Q, N)))
+        got = sorted(rec)
+        k = sim.sim.match_k(state.spec.padded_K)
+        payload = merge.shard_merge_payload(
+            cfg.app.match_type, cfg.arch.h_merge, Q=Q,
+            nv_local=nv_pad // d, R=R, k=k)
+        want = sorted(
+            [("all_gather", payload["match_rows"])]
+            if "match_rows" in payload else
+            [("all_gather", payload["cand_vals"]),
+             ("all_gather", payload["cand_idx"])]
+            + ([("pmax", payload["dmax"])] if "dmax" in payload else []))
+        assert got == want, (tag, d, got, want)
+        # and the billed byte count is exactly these shapes x wire widths
+        idx_bits = max(1, math.ceil(math.log2(max(2, nv_pad * R))))
+        bits = {"match_rows": 1, "cand_vals": 32, "cand_idx": idx_bits,
+                "dmax": 32}
+        total = sum(math.prod(s) * bits[f] / 8.0
+                    for f, s in payload.items())
+        assert traffic["total"] == total, (tag, d, traffic["total"], total)
+        checks += 1
+print(f"SHAPES_OK {checks}")
+'''
+
+
+def _run_subprocess(script: str, timeout: int = 900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.multidevice
+def test_model_payload_matches_executed_gather_shapes():
+    proc = _run_subprocess(_SHAPES_SCRIPT)
+    assert proc.returncode == 0 and "SHAPES_OK 8" in proc.stdout, \
+        (proc.stdout[-2000:], proc.stderr[-4000:])
+
+
+# ---------------------------------------------------------------------------
+# ShardedCAMSimulator.eval_perf wiring
+# ---------------------------------------------------------------------------
+def test_sharded_eval_perf_single_device_mesh_matches_camasim():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import CAMASim, ShardedCAMSimulator
+    from repro.launch.mesh import make_cam_mesh
+    cfg = TARGETS[1].config
+    stored = jax.random.uniform(jax.random.PRNGKey(0),
+                                (TARGETS[1].K, TARGETS[1].N))
+    ref = CAMASim(cfg)
+    ref.write(stored)
+    sharded = ShardedCAMSimulator(cfg, make_cam_mesh(1))
+    with pytest.raises(RuntimeError):
+        sharded.eval_perf()
+    sharded.write(stored)
+    a, b = ref.eval_perf(), sharded.eval_perf()
+    for key in ("latency_ns", "energy_pj", "area_um2", "edp_pj_ns", "arch"):
+        assert a[key] == b[key], key
+    # breakdown carries the (zero) mesh level
+    assert b["mesh"]["devices"] == 1.0
+
+
+def test_perf_report_mesh_entry_scales_with_ops_per_query():
+    """out['mesh'] sits next to the ops-scaled latency_ns/energy_pj and
+    must scale with them (regression: it used to stay at the 1-op value,
+    under-reporting the mesh share by ops_per_query x)."""
+    t = TARGETS[2]
+    arch = estimate_arch(t.config, t.K, t.N)
+    p1 = perf_report(t.config, arch, mesh=4, queries_per_batch=8)
+    p10 = perf_report(t.config, arch, mesh=4, queries_per_batch=8,
+                      ops_per_query=10)
+    assert p10["mesh"]["latency_ns"] == pytest.approx(
+        10 * p1["mesh"]["latency_ns"])
+    assert p10["mesh"]["energy_pj"] == pytest.approx(
+        10 * p1["mesh"]["energy_pj"])
+    assert p10["latency_ns"] == pytest.approx(10 * p1["latency_ns"])
+
+
+def test_perf_report_mesh_energy_grows_with_devices():
+    """More chips never search for free: total energy is monotone
+    non-decreasing in the mesh size (padding banks + link traffic)."""
+    t = TARGETS[2]
+    arch = estimate_arch(t.config, t.K, t.N)
+    prev = None
+    for d in (1, 2, 4, 8):
+        p = perf_report(t.config, arch, mesh=d, queries_per_batch=16)
+        if prev is not None:
+            assert p["energy_pj"] >= prev
+        prev = p["energy_pj"]

@@ -198,6 +198,91 @@ def test_cam_search_server_batches_and_matches_direct_query():
         np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
 
 
+def _cam_server_cfg(variation: str = "none"):
+    from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
+                            DeviceConfig)
+    return CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=2,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet", variation=variation,
+                            variation_std=0.8))
+
+
+def test_cam_search_server_tail_padding_discards_padded_results():
+    """A batch+1 submission leaves a 1-request tail step: the padded
+    zero-queries ride the search but their results must be discarded, and
+    every answer must equal the unpadded single-shot query bit-for-bit."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    batch = 4
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(2),
+                                            (batch + 1, 16)))
+    srv = CAMSearchServer(sim, state, batch=batch)
+    reqs = [srv.submit(q) for q in queries]
+    done = srv.run()
+    assert len(done) == batch + 1 and all(r.done for r in reqs)
+    for q, r in zip(queries, reqs):
+        idx, mask = sim.query(state, jnp.asarray(q))     # single, unpadded
+        np.testing.assert_array_equal(r.indices, np.asarray(idx))
+        np.testing.assert_array_equal(r.mask, np.asarray(mask))
+
+
+def test_cam_search_server_empty_step_does_not_fold_key():
+    """step() on an empty queue returns 0 WITHOUT consuming a per-step C2C
+    key: the first real batch must still search with fold_in(key, 0)."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg("c2c"))
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    srv = CAMSearchServer(sim, state, batch=4)
+    for _ in range(3):
+        assert srv.step() == 0
+    assert srv._steps == 0
+    qs = np.asarray(jax.random.uniform(jax.random.PRNGKey(3), (4, 16)))
+    for q in qs:
+        srv.submit(q)
+    assert srv.step() == 4
+    idx, mask = sim.query(state, jnp.asarray(qs),
+                          key=jax.random.fold_in(srv.key, 0))
+    for i, r in enumerate(srv.finished):
+        np.testing.assert_array_equal(r.indices, np.asarray(idx[i]))
+        np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
+
+
+def test_cam_search_server_c2c_keys_differ_across_steps():
+    """Each served batch draws its cycle noise from fold_in(key, step):
+    consecutive steps use different keys, and each step's answers are
+    bit-identical to a direct query under that step's key."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg("c2c"))
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    batch = 4
+    q = np.asarray(jax.random.uniform(jax.random.PRNGKey(4), (16,)))
+    srv = CAMSearchServer(sim, state, batch=batch)
+    for _ in range(2 * batch):          # the SAME query in both batches
+        srv.submit(q)
+    assert srv.step() == batch and srv.step() == batch
+    k0 = jax.random.fold_in(srv.key, 0)
+    k1 = jax.random.fold_in(srv.key, 1)
+    assert not np.array_equal(np.asarray(k0), np.asarray(k1))
+    qs = jnp.asarray(np.stack([q] * batch))
+    for step, key in ((0, k0), (1, k1)):
+        idx, mask = sim.query(state, qs, key=key)
+        for i in range(batch):
+            r = srv.finished[step * batch + i]
+            np.testing.assert_array_equal(r.indices, np.asarray(idx[i]))
+            np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
+
+
 # ---------------------------------------------------------------------------
 # sharding resolver
 # ---------------------------------------------------------------------------
