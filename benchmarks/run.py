@@ -66,7 +66,8 @@ def main() -> None:
     if "--devices" in sys.argv:
         devices = int(sys.argv[sys.argv.index("--devices") + 1])
     from . import (fig4_sweep, fig5_nonidealities, kernel_bench,
-                   sharded_bench, sharded_perf, table4_validation)
+                   serve_bench, sharded_bench, sharded_perf,
+                   table4_validation)
 
     rows: list = []
 
@@ -82,6 +83,7 @@ def main() -> None:
     _run_and_collect(fig4_sweep.main, rows)
     _run_and_collect(fig5_nonidealities.main, rows)
     _run_and_collect(kernel_bench.main, rows)
+    _run_and_collect(serve_bench.main, rows)
     if devices > 0:
         _run_and_collect(lambda: sharded_bench.main(devices), rows)
 

@@ -1,0 +1,75 @@
+"""Serve-loop tail latency: query-axis autoscaling vs fixed-batch padding.
+
+``CAMSearchServer`` pads every step to one compiled batch shape.  For a
+mostly-idle server that means a 1-request tail still streams the full
+``serve_batch``-wide query block through the grid.  With
+``autoscale=True`` the padded width comes from the power-of-two ladder
+{1, ..., serve_batch} by queue depth, so the tail step shrinks to width
+1.  This benchmark measures that tail step (one resident request) both
+ways and asserts the answers stayed bit-identical.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import time
+
+K, N = 4096, 128          # resident store
+SERVE_BATCH = 64          # fixed-batch padding width
+REPS = 7
+
+
+def _tail_step_time(srv, query, reps: int = REPS) -> float:
+    """Median wall time of a 1-request step (tail of the stream)."""
+    for _ in range(2):                        # warm the jit cache
+        srv.submit(query)
+        srv.step()
+    ts = []
+    for _ in range(reps):
+        srv.submit(query)
+        t0 = time.perf_counter()
+        srv.step()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def main() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
+                            CircuitConfig, DeviceConfig, SimConfig)
+    from repro.runtime import CAMSearchServer
+
+    cfg = CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=128, cols=128, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig(serve_batch=SERVE_BATCH))
+    sim = CAMASim(cfg)
+    state = sim.write(jax.random.uniform(jax.random.PRNGKey(0), (K, N)))
+    query = np.asarray(jax.random.uniform(jax.random.PRNGKey(1), (N,)))
+
+    fixed = CAMSearchServer(sim, state)
+    auto = CAMSearchServer(sim, state, autoscale=True)
+    t_fixed = _tail_step_time(fixed, query)
+    t_auto = _tail_step_time(auto, query)
+
+    # the autoscaled tail answers must equal the fixed-batch ones
+    ok = all(
+        np.array_equal(a.indices, b.indices)
+        and np.array_equal(a.mask, b.mask)
+        for a, b in zip(fixed.finished, auto.finished))
+
+    print(f"serve_autoscale_tail,{t_auto * 1e6:.0f},"
+          f"fixed_us={t_fixed * 1e6:.0f}_speedup={t_fixed / t_auto:.2f}x_"
+          f"batch={SERVE_BATCH}_rows={K}_match={ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,7 +43,7 @@ def worker(n_devices: int) -> None:
     import numpy as np
 
     from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
-                            DeviceConfig, ShardedCAMSimulator)
+                            DeviceConfig, ShardedCAMSimulator, SimConfig)
     from repro.launch.mesh import make_cam_mesh
 
     assert len(jax.devices()) >= n_devices, jax.devices()
@@ -69,12 +69,11 @@ def worker(n_devices: int) -> None:
             rows = (jnp.arange(Q) * 7) % stored.shape[0]
             queries = jnp.where((jnp.arange(Q) % 2 == 0)[:, None],
                                 centers[rows], queries)
-        sharded = ShardedCAMSimulator(cfg, make_cam_mesh(n_devices),
-                                      use_kernel=True)
+        sharded = ShardedCAMSimulator(cfg, make_cam_mesh(n_devices))
         s_state = sharded.write(stored)
         t_n = timeit(lambda: sharded.query(s_state, queries))
 
-        single = ShardedCAMSimulator(cfg, make_cam_mesh(1), use_kernel=True)
+        single = ShardedCAMSimulator(cfg, make_cam_mesh(1))
         o_state = single.write(stored)
         t_1 = timeit(lambda: single.query(o_state, queries))
 
@@ -97,7 +96,8 @@ def worker(n_devices: int) -> None:
         arch=ArchConfig(h_merge="adder", v_merge="comparator"),
         circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="mcam",
                               sensing="best"),
-        device=DeviceConfig(device="fefet"))
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig(use_kernel=True))
     one(cfg, jax.random.uniform(k1, (K, NDIM)), "kernel_cam_search_sharded")
 
     # ACAM: same grid geometry, [lo, hi] range rows, exact range match on
@@ -108,7 +108,8 @@ def worker(n_devices: int) -> None:
         arch=ArchConfig(h_merge="and", v_merge="gather"),
         circuit=CircuitConfig(rows=ROWS, cols=COLS, cell_type="acam",
                               sensing="exact"),
-        device=DeviceConfig(device="fefet"))
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig(use_kernel=True))
     lo = jax.random.uniform(k2, (K, NDIM))
     ranges = jnp.stack([lo, lo + 0.05], axis=-1)
     one(acam_cfg, ranges, "kernel_acam_range_sharded")

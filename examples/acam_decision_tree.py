@@ -16,7 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
-                        CircuitConfig, DeviceConfig)
+                        CircuitConfig, DeviceConfig, SimConfig)
 
 N_FEAT, DEPTH = 6, 3
 
@@ -97,8 +97,9 @@ def main(argv=None) -> None:
         arch=ArchConfig(h_merge="and", v_merge="gather"),
         circuit=CircuitConfig(rows=8, cols=8, cell_type="acam",
                               sensing="exact"),
-        device=DeviceConfig(device="fefet"))
-    sim = CAMASim(cfg, use_kernel=args.kernel)
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig(use_kernel=args.kernel))
+    sim = CAMASim(cfg)
     state = sim.write(jnp.stack([lo, hi], axis=-1))
 
     Xt = rng.uniform(0, 1, (200, N_FEAT)).astype(np.float32)

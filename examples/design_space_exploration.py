@@ -4,10 +4,13 @@ Sweeps quantization bits x subarray columns x device variation for the
 MANN task and prints an accuracy / EDP Pareto view — the workflow CAMASim
 exists to enable.
 
+The hardware side is PURE-MODEL planning: ``CAMASim.plan(entries, dims)``
+derives the architecture specifics from the store SHAPE alone, so
+``eval_perf`` runs before (and here, without) any ``write`` — the sweep
+no longer fabricates zero-filled stores just to bill area.
+
     PYTHONPATH=src:. python examples/design_space_exploration.py
 """
-import jax.numpy as jnp
-
 from benchmarks import mann_task
 from repro.core import CAMASim
 
@@ -15,32 +18,39 @@ DIMS = (64, 128)
 BITS = (2, 3)
 COLS = (32, 64)
 STD = (0.0, 1.0)
+ENTRIES = 32          # support-set rows planned into the CAM
 
-print("training embedding nets...")
-nets = {d: mann_task.train_embedding(dim=d, steps=250) for d in DIMS}
 
-print(f"{'dim':>4} {'bits':>4} {'cols':>4} {'d2d':>4} "
-      f"{'acc':>6} {'lat_ns':>8} {'en_pJ':>8} {'EDP_aJs':>8}")
-best = None
-for d in DIMS:
-    for b in BITS:
-        for c in COLS:
-            for s in STD:
-                cfg = mann_task.mann_cam_config(d, b, rows=32, cols=c,
-                                                d2d_std=s)
-                acc = mann_task.eval_mann(nets[d], cfg, episodes=5)
-                sim = CAMASim(cfg)
-                sim.write(jnp.zeros((32, d)))
-                perf = sim.eval_perf()
-                edp = perf["latency_ns"] * perf["energy_pj"] * 1e-3
-                print(f"{d:4d} {b:4d} {c:4d} {s:4.1f} {acc:6.3f} "
-                      f"{perf['latency_ns']:8.2f} "
-                      f"{perf['energy_pj']:8.2f} {edp:8.3f}")
-                score = acc - 0.002 * edp
-                if best is None or score > best[0]:
-                    best = (score, d, b, c, s, acc, edp)
+def main() -> None:
+    print("training embedding nets...")
+    nets = {d: mann_task.train_embedding(dim=d, steps=250) for d in DIMS}
 
-_, d, b, c, s, acc, edp = best
-print(f"\nbest accuracy/EDP trade-off: dim={d} bits={b} cols={c} "
-      f"(acc={acc:.3f}, EDP={edp:.3f} aJ*s)"
-      f"{' under variation' if s else ''}")
+    print(f"{'dim':>4} {'bits':>4} {'cols':>4} {'d2d':>4} "
+          f"{'acc':>6} {'lat_ns':>8} {'en_pJ':>8} {'EDP_aJs':>8}")
+    best = None
+    for d in DIMS:
+        for b in BITS:
+            for c in COLS:
+                for s in STD:
+                    cfg = mann_task.mann_cam_config(d, b, rows=32, cols=c,
+                                                    d2d_std=s)
+                    acc = mann_task.eval_mann(nets[d], cfg, episodes=5)
+                    sim = CAMASim(cfg)
+                    sim.plan(ENTRIES, d)        # estimator-only: no write
+                    perf = sim.eval_perf()
+                    edp = perf.latency_ns * perf.energy_pj * 1e-3
+                    print(f"{d:4d} {b:4d} {c:4d} {s:4.1f} {acc:6.3f} "
+                          f"{perf.latency_ns:8.2f} "
+                          f"{perf.energy_pj:8.2f} {edp:8.3f}")
+                    score = acc - 0.002 * edp
+                    if best is None or score > best[0]:
+                        best = (score, d, b, c, s, acc, edp)
+
+    _, d, b, c, s, acc, edp = best
+    print(f"\nbest accuracy/EDP trade-off: dim={d} bits={b} cols={c} "
+          f"(acc={acc:.3f}, EDP={edp:.3f} aJ*s)"
+          f"{' under variation' if s else ''}")
+
+
+if __name__ == "__main__":
+    main()

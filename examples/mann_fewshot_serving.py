@@ -2,8 +2,12 @@
 validation application [8], served with batched requests).
 
 Flow: train an embedding net -> write support-set embeddings into the CAM
--> serve batched classification queries through the functional simulator
--> report accuracy and the accelerator's latency/energy per batch.
+through the ``CAMASim`` facade -> serve classification requests through
+``runtime.CAMSearchServer`` (micro-batching; the batch ceiling comes from
+``config.sim.serve_batch``, and query-axis autoscaling picks each step's
+padded width from the power-of-two ladder by queue depth, so the tail of
+the request stream doesn't pay the full-batch grid pass) -> report
+accuracy and the accelerator's modeled latency/energy.
 
     PYTHONPATH=src:. python examples/mann_fewshot_serving.py
 """
@@ -11,45 +15,58 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import mann_task
-from repro.models.cam_memory import CAMMemory
+from repro.core import CAMASim
+from repro.runtime import CAMSearchServer
 
 DIM, BITS = 128, 3
 N_WAY, N_SHOT = 10, 5
 BATCHES, BATCH_SIZE = 8, 32
 
-print("training embedding net (prototypical loss, synthetic episodes)...")
-net = mann_task.train_embedding(dim=DIM, steps=300)
 
-cfg = mann_task.mann_cam_config(DIM, BITS, rows=32, cols=64)
-mem = CAMMemory(cfg)
+def main() -> None:
+    print("training embedding net (prototypical loss, synthetic episodes)...")
+    net = mann_task.train_embedding(dim=DIM, steps=300)
 
-# one episode acts as the serving corpus
-key = jax.random.PRNGKey(7)
-sup, sup_y, qry, qry_y = mann_task.make_episode(
-    key, N_WAY, N_SHOT, BATCHES * BATCH_SIZE // N_WAY)
-es = mann_task.embed(net, sup)
-s = jnp.std(es) * 3.0
-mem.write(jnp.clip(es, -s, s), sup_y)
-print(f"wrote {es.shape[0]} support embeddings into the CAM "
-      f"({mem.sim.arch_specifics().describe()})")
+    # one config describes the whole experiment, serving batch included
+    cfg = mann_task.mann_cam_config(DIM, BITS, rows=32, cols=64).replace(
+        sim=dict(serve_batch=BATCH_SIZE))
+    sim = CAMASim(cfg)
 
-# batched serving loop
-eq = jnp.clip(mann_task.embed(net, qry), -s, s)
-correct = total = 0
-t0 = time.perf_counter()
-for b in range(eq.shape[0] // BATCH_SIZE):
-    xb = eq[b * BATCH_SIZE:(b + 1) * BATCH_SIZE]
-    yb = qry_y[b * BATCH_SIZE:(b + 1) * BATCH_SIZE]
-    pred, _ = mem.query(xb, rng=jax.random.fold_in(key, b))
-    correct += int((pred == yb).sum())
-    total += BATCH_SIZE
-wall = time.perf_counter() - t0
+    # one episode acts as the serving corpus
+    key = jax.random.PRNGKey(7)
+    sup, sup_y, qry, qry_y = mann_task.make_episode(
+        key, N_WAY, N_SHOT, BATCHES * BATCH_SIZE // N_WAY)
+    es = mann_task.embed(net, sup)
+    s = jnp.std(es) * 3.0
+    state = sim.write(jnp.clip(es, -s, s))
+    print(f"wrote {es.shape[0]} support embeddings into the CAM "
+          f"({sim.arch_specifics().describe()})")
 
-perf = mem.perf(n_queries=BATCH_SIZE)
-print(f"served {total} queries in {wall*1e3:.0f} ms "
-      f"(simulation wall-time)")
-print(f"accuracy: {correct/total:.3f}")
-print(f"modeled accelerator: {perf['latency_ns']:.2f} ns/query, "
-      f"{perf['energy_pj']/BATCH_SIZE:.2f} pJ/query")
+    # serving loop: requests stream in, the server micro-batches them
+    # (batch read from cfg.sim.serve_batch; autoscale shrinks tail steps)
+    eq = np.asarray(jnp.clip(mann_task.embed(net, qry), -s, s))
+    labels = np.asarray(sup_y)
+    srv = CAMSearchServer(sim, state, autoscale=True)
+    t0 = time.perf_counter()
+    reqs = [srv.submit(q) for q in eq]
+    done = srv.run()
+    wall = time.perf_counter() - t0
+
+    # MANN config is 1-NN (match_param=1): label = nearest match's label
+    pred = labels[np.maximum(np.stack([r.indices[0] for r in done]), 0)]
+    correct = int((pred == np.asarray(qry_y)[[r.rid for r in done]]).sum())
+    total = len(done)
+
+    perf = sim.eval_perf(n_queries=BATCH_SIZE)
+    print(f"served {total} queries in {wall*1e3:.0f} ms "
+          f"(simulation wall-time, batch<={srv.batch})")
+    print(f"accuracy: {correct/total:.3f}")
+    print(f"modeled accelerator: {perf.latency_ns:.2f} ns/query, "
+          f"{perf.energy_pj/BATCH_SIZE:.2f} pJ/query")
+
+
+if __name__ == "__main__":
+    main()

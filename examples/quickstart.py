@@ -1,11 +1,13 @@
 """Quickstart: CAMASim in 30 lines — write data, search it, get hardware
-numbers.
+numbers, all from ONE config.
 
-The query call is the store-once / search-many entry point: the WHOLE
-query batch is answered by one fused batched search (a single pass over
-the resident CAM grid), not a per-query loop.  Scale-out note: swap
-``CAMASim`` for ``repro.core.ShardedCAMSimulator`` to spread the grid's
-bank axis across a device mesh with bit-identical results.
+The config now has five sections: the paper's four design levels
+(app/arch/circuit/device, Table III) plus ``sim``, which says how the
+experiment *executes* (backend, kernels, serving batch).  Swapping the
+single-chip simulator for the mesh-sharded one is the one-line change
+``sim=SimConfig(backend="sharded")`` — same results, and the whole
+experiment can live in a JSON file (``CAMASim.from_json(path)``; see
+examples/configs/ and the ``camasim-run`` console script).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,11 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
-                        CircuitConfig, DeviceConfig)
+                        CircuitConfig, DeviceConfig, SimConfig)
 
 
 def main() -> None:
-    # 1. describe the accelerator (paper Table III: 4-level config)
+    # 1. describe the experiment (4 design levels + execution)
     config = CAMConfig(
         app=AppConfig(distance="l2", match_type="best", match_param=3,
                       data_bits=3),
@@ -25,7 +27,8 @@ def main() -> None:
         circuit=CircuitConfig(rows=32, cols=64, cell_type="mcam",
                               sensing="best", sensing_limit=0.0),
         device=DeviceConfig(device="fefet", variation="d2d",
-                            variation_std=0.1))
+                            variation_std=0.1),
+        sim=SimConfig(backend="functional"))   # "sharded" = device mesh
 
     sim = CAMASim(config)
 
@@ -36,16 +39,19 @@ def main() -> None:
     state = sim.write(stored, key=jax.random.PRNGKey(1))
 
     queries = stored[jnp.array([17, 42, 133])] + 0.01
-    indices, mask = sim.query(state, queries)
+    result = sim.query(state, queries)        # typed SearchResult;
+    indices, mask = result                    # ...still unpacks as a tuple
     print("top-3 matches per query:\n", indices)
-    assert (jnp.asarray([17, 42, 133]) == indices[:, 0]).all()
+    assert (jnp.asarray([17, 42, 133]) == result.topk(1)[:, 0]).all()
 
-    # 3. hardware performance (EvaCAM-calibrated circuit models)
+    # 3. hardware performance (EvaCAM-calibrated circuit models).
+    # eval_perf also works BEFORE write: sim.plan(entries, dims) derives
+    # the architecture from shapes alone (pure-model design sweeps).
     perf = sim.eval_perf(n_queries=queries.shape[0])
     print(f"architecture : {perf['arch']}")
-    print(f"search latency: {perf['latency_ns']:.2f} ns")
-    print(f"energy (3 q) : {perf['energy_pj']:.2f} pJ")
-    print(f"area         : {perf['area_um2']/1e3:.1f} x10^3 um^2")
+    print(f"search latency: {perf.latency_ns:.2f} ns")
+    print(f"energy (3 q) : {perf.energy_pj:.2f} pJ")
+    print(f"area         : {perf.area_um2/1e3:.1f} x10^3 um^2")
     print(f"EDP          : {perf['edp_pj_ns']:.1f} pJ*ns")
 
 

@@ -1,0 +1,85 @@
+"""``camasim-run``: execute one JSON experiment config end to end.
+
+    camasim-run CONFIG.json [--entries K] [--dims N] [--queries Q]
+                            [--seed S] [--include-write] [--plan-only]
+
+The config is the FULL experiment description (app/arch/circuit/device
+design levels + the sim execution section); the CLI drives
+``CAMASim.from_json`` through write -> query -> eval_perf on synthetic
+data and prints the performance report as JSON to stdout.  With
+``--plan-only`` no data is ever written: the architecture is derived from
+the (entries, dims) shape alone (estimator-only planning).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Optional
+
+
+def _jsonable(obj):
+    """Report -> plain JSON: PerfResult leaves become their field dicts."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return _jsonable(dataclasses.asdict(obj))
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    return obj
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(prog="camasim-run", description=__doc__)
+    ap.add_argument("config", help="path to the JSON experiment config")
+    ap.add_argument("--entries", type=int, default=64,
+                    help="stored entries K (default 64)")
+    ap.add_argument("--dims", type=int, default=32,
+                    help="entry dims N (default 32)")
+    ap.add_argument("--queries", type=int, default=8,
+                    help="query batch size (default 8)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--include-write", action="store_true",
+                    help="add the write-path prediction to the report")
+    ap.add_argument("--plan-only", action="store_true",
+                    help="estimator-only: no functional simulation at all")
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import CAMASim
+
+    sim = CAMASim.from_json(args.config)
+    cfg = sim.config
+    print(f"config : {args.config}", file=sys.stderr)
+    print(f"backend: {cfg.sim.backend} (use_kernel={cfg.sim.use_kernel})",
+          file=sys.stderr)
+
+    if args.plan_only:
+        sim.plan(args.entries, args.dims)
+    else:
+        key = jax.random.PRNGKey(args.seed)
+        k1, k2, k3 = jax.random.split(key, 3)
+        stored = jax.random.uniform(k1, (args.entries, args.dims))
+        if cfg.app.distance == "range":      # ACAM [lo, hi] range store
+            stored = jnp.stack([stored, stored + 0.2], axis=-1)
+        queries = jax.random.uniform(k2, (args.queries, args.dims))
+        state = sim.write(stored, key=k3)
+        res = sim.query(state, queries)
+        hits = int((jnp.asarray(res.mask) > 0).any(-1).sum())
+        print(f"search : {args.queries} queries against "
+              f"{args.entries}x{args.dims} store, "
+              f"{hits} with >=1 match", file=sys.stderr)
+        print(f"arch   : {sim.arch_specifics().describe()}", file=sys.stderr)
+
+    perf = sim.eval_perf(n_queries=args.queries,
+                         include_write=args.include_write)
+    json.dump(_jsonable(perf.to_dict()), sys.stdout, indent=1)
+    print()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

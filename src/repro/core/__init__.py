@@ -4,17 +4,21 @@ Functional simulator (accuracy) + performance evaluator (latency/energy/area)
 for CAM-based in-memory search accelerators, configurable across the
 application / architecture / circuit / device levels (paper Table III).
 """
+from .backend import Backend, make_backend
 from .camasim import CAMASim
 from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
-                     DeviceConfig)
+                     DeviceConfig, SimConfig)
 from .functional import CAMState, FunctionalSimulator
-from .perf import (MeshLink, MeshSpec, PerfResult, estimate_arch,
+from .perf import (MeshLink, MeshSpec, PerfReport, PerfResult, estimate_arch,
                    predict_search, predict_search_sharded, predict_write)
+from .results import SearchResult
 from .sharded import ShardedCAMSimulator
 
 __all__ = [
-    "CAMASim", "CAMConfig", "AppConfig", "ArchConfig", "CircuitConfig",
-    "DeviceConfig", "CAMState", "FunctionalSimulator", "PerfResult",
+    "Backend", "CAMASim", "CAMConfig", "AppConfig", "ArchConfig",
+    "CircuitConfig", "DeviceConfig", "SimConfig", "CAMState",
+    "FunctionalSimulator", "PerfReport", "PerfResult", "SearchResult",
     "MeshLink", "MeshSpec", "ShardedCAMSimulator", "estimate_arch",
-    "predict_search", "predict_search_sharded", "predict_write",
+    "make_backend", "predict_search", "predict_search_sharded",
+    "predict_write",
 ]

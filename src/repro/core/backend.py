@@ -1,0 +1,66 @@
+"""The backend contract behind the CAMASim facade.
+
+C4CAM-style argument: compilers and DSE loops need ONE stable CAM
+execution interface regardless of topology.  ``Backend`` is that
+contract — ``FunctionalSimulator`` (single chip) and
+``ShardedCAMSimulator`` (device mesh) both implement it, and
+``make_backend`` turns ``config.sim.backend`` into an instance, so
+swapping single-chip ⟷ mesh is a one-line config change with
+bit-identical results.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+
+from .config import CAMConfig
+from .functional import CAMState
+from .perf import ArchSpecifics, PerfReport
+from .results import SearchResult
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Store-once / search-many CAM simulation, any topology.
+
+    ``write`` and ``query`` are the user-facing pipeline;
+    ``segment_queries`` / ``search_shard`` are the shard-local pieces a
+    distributed driver may call inside a shard_map body; ``plan`` /
+    ``arch_specifics`` / ``eval_perf`` are the hardware-prediction side
+    (``plan`` makes ``eval_perf`` usable before any data is written).
+    """
+    config: CAMConfig
+
+    def write(self, stored: jax.Array,
+              key: Optional[jax.Array] = None) -> CAMState: ...
+
+    def query(self, state: CAMState, queries: jax.Array,
+              key: Optional[jax.Array] = None) -> SearchResult: ...
+
+    def segment_queries(self, state: CAMState,
+                        queries: jax.Array) -> jax.Array: ...
+
+    def search_shard(self, grid: jax.Array, qseg: jax.Array, **kw
+                     ) -> Tuple[Optional[jax.Array], jax.Array]: ...
+
+    def plan(self, entries: int, dims: int) -> ArchSpecifics: ...
+
+    def arch_specifics(self) -> ArchSpecifics: ...
+
+    def eval_perf(self, **kw) -> PerfReport: ...
+
+
+def make_backend(config: CAMConfig) -> Backend:
+    """Instantiate the backend ``config.sim.backend`` names.
+
+    Everything the backend needs (kernels, mesh size, query split, C2C
+    fold) is read from the config's ``sim`` section.
+    """
+    from .functional import FunctionalSimulator
+    from .sharded import ShardedCAMSimulator
+    if config.sim.backend == "functional":
+        return FunctionalSimulator(config)
+    if config.sim.backend == "sharded":
+        return ShardedCAMSimulator(config)
+    raise ValueError(f"unknown sim.backend {config.sim.backend!r}")

@@ -1,77 +1,115 @@
-"""CAMASim facade (paper Fig. 1a): write / query APIs + performance report.
+"""CAMASim facade (paper Fig. 1a): ONE config-driven entry point that runs
+functional simulation and hardware prediction from a single description of
+the design space.
 
-    sim = CAMASim(config)
+    sim = CAMASim(config)                # config.sim picks the backend
+    sim = CAMASim.from_json("exp.json")  # the whole experiment from a file
     state = sim.write(stored)            # (K, N)
-    idx, mask = sim.query(state, q)      # (Q, N) -> (Q, k), (Q, K')
-    perf = sim.eval_perf(n_queries=Q)    # latency / energy / area / EDP
+    res = sim.query(state, q)            # SearchResult; unpacks (idx, mask)
+    perf = sim.eval_perf(n_queries=Q)    # PerfReport (latency/energy/area)
+
+The backend (single-chip ``FunctionalSimulator`` vs mesh-sharded
+``ShardedCAMSimulator``) is chosen by ``config.sim.backend`` — a one-line
+config change with bit-identical search results.  ``plan(entries, dims)``
+derives the architecture from shapes alone, so ``eval_perf`` works before
+(or without) writing any data — pure-model design-space sweeps never
+fabricate stores just to bill area.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple, Union
+from typing import Optional, Union
 
 import jax
-import jax.numpy as jnp
 
+from .backend import Backend, make_backend
 from .config import CAMConfig
-from .functional import CAMState, FunctionalSimulator
-from .perf import (ArchSpecifics, MeshSpec, estimate_arch, perf_report)
+from .functional import CAMState, FunctionalSimulator, resolve_sim_overrides
+from .perf import ArchSpecifics, MeshSpec, PerfReport
+from .results import SearchResult
 
 
 class CAMASim:
-    def __init__(self, config: CAMConfig, use_kernel: bool = False,
-                 c2c_query_tile: int = 1, c2c_fold: str = "grid"):
+    """Config-driven facade over one `Backend`.
+
+    The ``use_kernel`` / ``c2c_query_tile`` / ``c2c_fold`` kwargs are
+    deprecated overrides for the ``config.sim`` fields of the same names
+    (kept for one release; they emit a DeprecationWarning).
+    """
+
+    def __init__(self, config: CAMConfig,
+                 use_kernel: Optional[bool] = None,
+                 c2c_query_tile: Optional[int] = None,
+                 c2c_fold: Optional[str] = None):
+        config = resolve_sim_overrides(config, use_kernel=use_kernel,
+                                       c2c_query_tile=c2c_query_tile,
+                                       c2c_fold=c2c_fold)
         config.validate()
         self.config = config
-        # c2c_fold plumbs through to the functional simulator so the facade
-        # can serve as the bit-exact single-device reference for
-        # ShardedCAMSimulator (which always draws C2C noise per bank)
-        self.functional = FunctionalSimulator(config, use_kernel=use_kernel,
-                                              c2c_query_tile=c2c_query_tile,
-                                              c2c_fold=c2c_fold)
-        self._arch: Optional[ArchSpecifics] = None
-        self._KN: Optional[Tuple[int, int]] = None
+        self.backend: Backend = make_backend(config)
+
+    # -------------------------------------------------------------- io
+    @classmethod
+    def from_json(cls, path) -> "CAMASim":
+        """Reconstruct the entire experiment from one JSON config file
+        (or, like ``CAMConfig.from_json``, from a raw JSON string)."""
+        text = str(path)
+        if not text.lstrip().startswith("{"):
+            with open(path) as f:
+                text = f.read()
+        return cls(CAMConfig.from_json(text))
+
+    @property
+    def functional(self) -> FunctionalSimulator:
+        """The underlying single-chip simulator (deprecated attribute,
+        kept for one release): the backend itself on the functional
+        backend, the sharded backend's shard-local reference otherwise."""
+        if isinstance(self.backend, FunctionalSimulator):
+            return self.backend
+        return self.backend.sim
 
     # ------------------------------------------------------------ write
     def write(self, stored: jax.Array,
               key: Optional[jax.Array] = None) -> CAMState:
-        self._KN = tuple(stored.shape[:2])   # ACAM ranges carry a 3rd dim
-        self._arch = estimate_arch(self.config, *self._KN)
-        return self.functional.write(stored, key)
+        return self.backend.write(stored, key)
 
     # ------------------------------------------------------------ query
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None):
-        return self.functional.query(state, queries, key)
+              key: Optional[jax.Array] = None) -> SearchResult:
+        return self.backend.query(state, queries, key)
 
     # ----------------------------------------------------------- perf
+    def plan(self, entries: int, dims: int) -> ArchSpecifics:
+        """Estimator-only planning: compute ``ArchSpecifics`` from the
+        store SHAPE alone, so ``eval_perf`` works before ``write``."""
+        return self.backend.plan(entries, dims)
+
     def arch_specifics(self) -> ArchSpecifics:
-        if self._arch is None:
-            raise RuntimeError("call write() before querying arch specifics")
-        return self._arch
+        return self.backend.arch_specifics()
 
     def eval_perf(self, n_queries: int = 1, include_write: bool = False,
                   ops_per_query: int = 1,
                   clock_hz: Optional[float] = None,
                   mesh: Optional[Union[int, MeshSpec]] = None,
-                  queries_per_batch: int = 1) -> dict:
-        """Hardware performance prediction for the written store.
+                  queries_per_batch: int = 1) -> PerfReport:
+        """Hardware performance prediction for the written (or planned)
+        store, as a ``PerfReport`` (historical dict keys preserved).
 
         ``clock_hz``: system clock — each search cycle is quantized to
         max(combinational search latency, one clock period).
 
-        ``mesh``: device count or ``perf.MeshSpec`` — when given, predict
-        for the sharded topology ``ShardedCAMSimulator`` executes (per-
-        device hierarchy + cross-device merge over chip-to-chip links,
-        amortized over ``queries_per_batch``); ``mesh=1`` reproduces the
-        single-chip prediction exactly."""
-        return perf_report(self.config, self.arch_specifics(), mesh=mesh,
-                           n_queries=n_queries, include_write=include_write,
-                           ops_per_query=ops_per_query, clock_hz=clock_hz,
-                           queries_per_batch=queries_per_batch)
+        ``mesh``: device count or ``perf.MeshSpec`` — overrides the
+        topology to predict for.  Default: the backend's own topology
+        (single chip on the functional backend, the bank-axis size on the
+        sharded one); ``mesh=1`` reproduces the single-chip prediction
+        exactly."""
+        return self.backend.eval_perf(
+            n_queries=n_queries, include_write=include_write,
+            ops_per_query=ops_per_query, clock_hz=clock_hz, mesh=mesh,
+            queries_per_batch=queries_per_batch)
 
     # ------------------------------------------------------- convenience
     def search(self, stored: jax.Array, queries: jax.Array,
-               key: Optional[jax.Array] = None):
+               key: Optional[jax.Array] = None) -> SearchResult:
         """One-shot write+query (store-once-search-many still preferred)."""
         kw, kq = (jax.random.split(key) if key is not None
                   else (None, None))

@@ -1,9 +1,12 @@
-"""CAMASim 4-level configuration (paper Table III).
+"""CAMASim configuration (paper Table III + execution).
 
 The design space of a CAM-based accelerator is described by four nested
 configs — application, architecture, circuit, device — mirroring Table III of
-the paper.  Configs are plain frozen dataclasses so they can be used as jit
-static arguments, hashed, and serialized to/from JSON.
+the paper, plus a fifth ``sim`` section describing how the experiment is
+*executed* (backend, kernels, mesh split, serving batch) so a single JSON
+file specifies the entire experiment and ``CAMASim.from_json(path)`` can
+reconstruct it.  Configs are plain frozen dataclasses so they can be used
+as jit static arguments, hashed, and serialized to/from JSON.
 """
 from __future__ import annotations
 
@@ -23,6 +26,8 @@ V_MERGE = ("gather", "comparator")
 DEVICES = ("cmos", "fefet", "reram", "skyrmion")
 VARIATION_TYPES = ("none", "d2d", "c2c", "both")
 VARIATION_SPECS = ("stat", "exper")
+BACKENDS = ("functional", "sharded")
+C2C_FOLDS = ("grid", "bank")
 
 
 def _check(value, allowed, name):
@@ -103,12 +108,50 @@ class DeviceConfig:
 
 
 @dataclass(frozen=True)
+class SimConfig:
+    """Execution-level choices: how the experiment runs, not what it is.
+
+    ``backend`` picks the simulator ``CAMASim`` dispatches to; the other
+    fields are the knobs that used to be scattered constructor kwargs on
+    ``CAMASim`` / ``FunctionalSimulator`` / ``ShardedCAMSimulator`` /
+    ``CAMSearchServer``, so one JSON file specifies the full experiment.
+    """
+    backend: str = "functional"    # functional (single chip) / sharded (mesh)
+    use_kernel: bool = False       # fused Pallas search kernels
+    devices: int = 0               # sharded: bank-axis size (0 = all local)
+    query_shards: int = 1          # sharded: optional query-axis split
+    c2c_query_tile: int = 1        # queries per C2C noise draw (search cycle)
+    c2c_fold: str = "grid"         # C2C RNG fold: grid / bank (shard-invariant)
+    serve_batch: int = 32          # CAMSearchServer micro-batch ceiling
+
+    def __post_init__(self):
+        _check(self.backend, BACKENDS, "backend")
+        if self.c2c_fold not in C2C_FOLDS:
+            raise ValueError("c2c_fold must be 'grid' or 'bank'")
+        if self.c2c_query_tile < 1:
+            raise ValueError("c2c_query_tile must be >= 1")
+        if self.devices < 0:
+            raise ValueError("devices must be >= 0 (0 = all local devices)")
+        if self.query_shards < 1:
+            raise ValueError("query_shards must be >= 1")
+        if self.serve_batch < 1:
+            raise ValueError("serve_batch must be >= 1")
+
+
+_SECTIONS = {
+    "app": "AppConfig", "arch": "ArchConfig", "circuit": "CircuitConfig",
+    "device": "DeviceConfig", "sim": "SimConfig",
+}
+
+
+@dataclass(frozen=True)
 class CAMConfig:
-    """Full 4-level CAMASim configuration."""
+    """Full CAMASim configuration: 4 design levels + execution."""
     app: AppConfig = field(default_factory=AppConfig)
     arch: ArchConfig = field(default_factory=ArchConfig)
     circuit: CircuitConfig = field(default_factory=CircuitConfig)
     device: DeviceConfig = field(default_factory=DeviceConfig)
+    sim: SimConfig = field(default_factory=SimConfig)
 
     # ------------------------------------------------------------------ io
     def to_dict(self) -> dict:
@@ -119,14 +162,18 @@ class CAMConfig:
 
     @classmethod
     def from_dict(cls, d: dict) -> "CAMConfig":
-        dev = dict(d.get("device", {}))
+        # unknown keys are dropped in EVERY section (not just circuit), so
+        # configs serialized by newer versions still load
+        dev = known_fields(DeviceConfig, d.get("device", {}))
         if dev.get("exper_table") is not None:
             dev["exper_table"] = tuple(dev["exper_table"])
         return cls(
-            app=AppConfig(**d.get("app", {})),
-            arch=ArchConfig(**d.get("arch", {})),
-            circuit=CircuitConfig(**dev_free(d.get("circuit", {}))),
+            app=AppConfig(**known_fields(AppConfig, d.get("app", {}))),
+            arch=ArchConfig(**known_fields(ArchConfig, d.get("arch", {}))),
+            circuit=CircuitConfig(
+                **known_fields(CircuitConfig, d.get("circuit", {}))),
             device=DeviceConfig(**dev),
+            sim=SimConfig(**known_fields(SimConfig, d.get("sim", {}))),
         )
 
     @classmethod
@@ -141,7 +188,7 @@ class CAMConfig:
         circuit config.
         """
         out = {}
-        for name in ("app", "arch", "circuit", "device"):
+        for name in _SECTIONS:
             cur = getattr(self, name)
             if name in sections:
                 val = sections[name]
@@ -169,7 +216,14 @@ class CAMConfig:
             raise ValueError("TCAM stores 1 bit (+don't-care) per cell")
 
 
-def dev_free(d: dict) -> dict:
-    """Drop keys that are not CircuitConfig fields (forward compat)."""
-    keep = {f.name for f in dataclasses.fields(CircuitConfig)}
+def known_fields(section_cls, d: dict) -> dict:
+    """Drop keys that are not fields of ``section_cls`` (forward compat:
+    configs serialized by newer versions must still load)."""
+    keep = {f.name for f in dataclasses.fields(section_cls)}
     return {k: v for k, v in d.items() if k in keep}
+
+
+def dev_free(d: dict) -> dict:
+    """Deprecated alias: circuit-section unknown-key filtering (the
+    asymmetric pre-``known_fields`` form, kept for one release)."""
+    return known_fields(CircuitConfig, d)

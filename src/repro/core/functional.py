@@ -25,6 +25,7 @@ grid construction and search across the tile.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from typing import Optional, Tuple
@@ -34,6 +35,24 @@ import jax.numpy as jnp
 
 from . import mapping, merge, quantize, subarray, variation
 from .config import CAMConfig
+from .results import SearchResult
+
+
+def resolve_sim_overrides(config: CAMConfig, **overrides) -> CAMConfig:
+    """Fold deprecated constructor kwargs into ``config.sim``.
+
+    ``None`` means "not given" (take the config value); anything else is a
+    legacy override — honored for one release with a DeprecationWarning,
+    validated by ``SimConfig`` itself.
+    """
+    given = {k: v for k, v in overrides.items() if v is not None}
+    if not given:
+        return config
+    warnings.warn(
+        f"constructor kwargs {sorted(given)} are deprecated; set them in "
+        "the config's sim section (SimConfig) instead",
+        DeprecationWarning, stacklevel=3)
+    return config.replace(sim=given)
 
 
 @dataclass
@@ -56,24 +75,57 @@ jax.tree_util.register_pytree_node(
 
 
 class FunctionalSimulator:
-    """Automated in-memory search simulation (accuracy path of CAMASim)."""
+    """Automated in-memory search simulation (accuracy path of CAMASim).
 
-    def __init__(self, config: CAMConfig, use_kernel: bool = False,
-                 c2c_query_tile: int = 1, c2c_fold: str = "grid"):
+    Execution knobs come from ``config.sim`` (use_kernel, c2c_query_tile,
+    c2c_fold); the constructor kwargs of the same names are deprecated
+    overrides kept for one release.
+    """
+
+    def __init__(self, config: CAMConfig,
+                 use_kernel: Optional[bool] = None,
+                 c2c_query_tile: Optional[int] = None,
+                 c2c_fold: Optional[str] = None):
+        config = resolve_sim_overrides(config, use_kernel=use_kernel,
+                                       c2c_query_tile=c2c_query_tile,
+                                       c2c_fold=c2c_fold)
         config.validate()
         self.config = config
-        self.use_kernel = use_kernel
-        if c2c_query_tile < 1:
-            raise ValueError("c2c_query_tile must be >= 1")
-        if c2c_fold not in ("grid", "bank"):
-            raise ValueError("c2c_fold must be 'grid' or 'bank'")
-        self.c2c_query_tile = c2c_query_tile
+        self.use_kernel = config.sim.use_kernel
+        self.c2c_query_tile = config.sim.c2c_query_tile
         # 'grid': one normal draw over the whole (nv, nh, R, C) grid per
         # cycle (the historical single-device draw).  'bank': one draw per
         # nv bank from fold_in(cycle_key, bank index) — bit-identical no
         # matter how the nv axis is split across devices, so the sharded
         # simulator (core.sharded) always runs its reference in this mode.
-        self.c2c_fold = c2c_fold
+        self.c2c_fold = config.sim.c2c_fold
+        self._arch = None          # perf.ArchSpecifics, set by write()/plan()
+
+    # ------------------------------------------------------------- perf
+    def plan(self, entries: int, dims: int):
+        """Estimator-only planning: derive ``ArchSpecifics`` from shapes
+        alone so ``eval_perf`` works *before* (or without) ``write``."""
+        from .perf import estimate_arch
+        self._arch = estimate_arch(self.config, entries, dims)
+        return self._arch
+
+    def arch_specifics(self):
+        if self._arch is None:
+            raise RuntimeError(
+                "call write() or plan() before querying arch specifics")
+        return self._arch
+
+    def eval_perf(self, n_queries: int = 1, include_write: bool = False,
+                  ops_per_query: int = 1,
+                  clock_hz: Optional[float] = None,
+                  mesh=None, queries_per_batch: int = 1):
+        """Hardware performance prediction for the written (or planned)
+        store; see ``perf.perf_report`` for the report shape."""
+        from .perf import perf_report
+        return perf_report(self.config, self.arch_specifics(), mesh=mesh,
+                           n_queries=n_queries, include_write=include_write,
+                           ops_per_query=ops_per_query, clock_hz=clock_hz,
+                           queries_per_batch=queries_per_batch)
 
     # ------------------------------------------------------------- write
     def write(self, stored: jax.Array, key: Optional[jax.Array] = None
@@ -98,6 +150,7 @@ class FunctionalSimulator:
                 "distance='range' requires a (K, N, 2) range store "
                 f"(got shape {tuple(stored.shape)})")
         K, N = stored.shape[:2]
+        self.plan(K, N)            # record arch specifics for eval_perf
         spec = mapping.grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols)
         return self._write_jit(stored, spec,
                                key if key is not None
@@ -119,20 +172,21 @@ class FunctionalSimulator:
 
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None
-              ) -> Tuple[jax.Array, jax.Array]:
+              key: Optional[jax.Array] = None) -> SearchResult:
         """Query simulation.
 
         queries: (Q, N) application-domain query batch.
-        Returns (indices (Q, k), mask (Q, padded_K)); indices padded with -1.
+        Returns a ``SearchResult`` (indices (Q, k) padded with -1, mask
+        (Q, padded_K)); it unpacks as the historical ``(idx, mask)`` tuple.
         """
         if queries.ndim == 1:
             idx, mask = self.query(state, queries[None],
                                    key)
-            return idx[0], mask[0]
-        return self._query_jit(state, queries,
-                               key if key is not None
-                               else jax.random.PRNGKey(1))
+            return SearchResult(idx[0], mask[0])
+        idx, mask = self._query_jit(state, queries,
+                                    key if key is not None
+                                    else jax.random.PRNGKey(1))
+        return SearchResult(idx, mask)
 
     @partial(jax.jit, static_argnums=(0,))
     def _query_jit(self, state: CAMState, queries, key):

@@ -1,5 +1,5 @@
 from .devices import CellModel, get_cell_model, register_cell_model
-from .estimator import (ArchSpecifics, PerfResult, estimate_arch,
+from .estimator import (ArchSpecifics, PerfReport, PerfResult, estimate_arch,
                         perf_report, predict_search, predict_search_sharded,
                         predict_write, sharded_merge_bytes)
 from .interconnect import (MESH_LINKS, MeshLink, MeshSpec, get_mesh_link,
@@ -8,7 +8,8 @@ from .peripherals import PeripheralBill, estimate_merge_peripherals
 
 __all__ = [
     "CellModel", "get_cell_model", "register_cell_model",
-    "ArchSpecifics", "PerfResult", "estimate_arch", "predict_search",
+    "ArchSpecifics", "PerfReport", "PerfResult", "estimate_arch",
+    "predict_search",
     "predict_search_sharded", "predict_write", "perf_report",
     "sharded_merge_bytes", "MeshLink", "MeshSpec", "MESH_LINKS",
     "get_mesh_link", "mesh_all_gather",

@@ -69,6 +69,41 @@ class PerfResult:
         return self.edp * 1e-3
 
 
+class PerfReport(dict):
+    """The ``eval_perf`` report: the historical dict, key-for-key (a dict
+    subclass, so every BENCH consumer and ``perf['latency_ns']`` call site
+    is untouched), plus typed accessors and ``to_dict()``.
+    """
+
+    @property
+    def search(self) -> PerfResult:
+        return self["search"]
+
+    @property
+    def write(self) -> Optional[PerfResult]:
+        return self.get("write")
+
+    @property
+    def latency_ns(self) -> float:
+        return self["latency_ns"]
+
+    @property
+    def energy_pj(self) -> float:
+        return self["energy_pj"]
+
+    @property
+    def area_um2(self) -> float:
+        return self["area_um2"]
+
+    @property
+    def edp_pj_ns(self) -> float:
+        return self["edp_pj_ns"]
+
+    def to_dict(self) -> dict:
+        """The plain-dict view (exact same keys and values)."""
+        return dict(self)
+
+
 def estimate_arch(config: CAMConfig, K: int, N: int) -> ArchSpecifics:
     """Stage 1: architecture specifics estimation.
 
@@ -269,9 +304,10 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
                 mesh: Optional[Union[int, "interconnect.MeshSpec"]] = None,
                 n_queries: int = 1, include_write: bool = False,
                 ops_per_query: int = 1, clock_hz: Optional[float] = None,
-                queries_per_batch: int = 1) -> dict:
-    """The ``eval_perf`` dict shared by ``CAMASim`` (mesh=None: single
-    chip) and ``ShardedCAMSimulator`` (mesh = its bank-axis size).
+                queries_per_batch: int = 1) -> "PerfReport":
+    """The ``eval_perf`` report shared by ``CAMASim`` (mesh=None: single
+    chip) and ``ShardedCAMSimulator`` (mesh = its bank-axis size) — a
+    ``PerfReport`` (dict subclass; historical keys preserved verbatim).
 
     ``clock_hz``: system clock — each search cycle is quantized to
     max(combinational search latency, one clock period)."""
@@ -307,7 +343,7 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
         w = predict_write(config, arch)
         out["write"] = w
         out["energy_pj"] += w.energy_pj
-    return out
+    return PerfReport(out)
 
 
 def predict_write(config: CAMConfig, arch: ArchSpecifics) -> PerfResult:

@@ -1,0 +1,58 @@
+"""Typed search results.
+
+``SearchResult`` replaces the bare ``(indices, mask)`` tuples the
+simulators used to return.  It still *unpacks* like that tuple
+(``idx, mask = sim.query(...)``) so every existing call site keeps
+working, but carries names, an optional distance tensor, and ``topk``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+
+
+@dataclass
+class SearchResult:
+    """Result of one CAM search batch.
+
+    indices: (Q, k) matched row indices, -1 padded (or (k,) for a single
+        query).
+    mask: (Q, padded_K) application-level match lines.
+    dist: optional (Q, padded_K) merged distances, when the merge path
+        produced them (None on match-line-only merges).
+    """
+    indices: jax.Array
+    mask: jax.Array
+    dist: Optional[jax.Array] = None
+
+    # ------------------------------------------------- tuple compatibility
+    def __iter__(self) -> Iterator[jax.Array]:
+        return iter((self.indices, self.mask))
+
+    def __len__(self) -> int:
+        return 2
+
+    def __getitem__(self, i):
+        return (self.indices, self.mask)[i]
+
+    # ------------------------------------------------------------ helpers
+    def topk(self, k: int) -> jax.Array:
+        """First k matched indices per query (-1 padded)."""
+        if k < 0:
+            raise ValueError("k must be >= 0")
+        return self.indices[..., :k]
+
+    @property
+    def n_queries(self) -> int:
+        return self.indices.shape[0] if self.indices.ndim > 1 else 1
+
+
+# A pytree so jax.block_until_ready / device transfers / jit boundaries
+# treat a result like the tuple it replaces.
+jax.tree_util.register_pytree_node(
+    SearchResult,
+    lambda r: ((r.indices, r.mask, r.dist), None),
+    lambda _, leaves: SearchResult(*leaves),
+)

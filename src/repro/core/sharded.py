@@ -38,7 +38,7 @@ the true padded_K.
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +47,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.launch.mesh import compat_shard_map, make_cam_mesh
 from . import merge, variation
 from .config import CAMConfig
-from .functional import CAMState, FunctionalSimulator
-from .perf import ArchSpecifics, MeshLink, MeshSpec, estimate_arch, perf_report
+from .functional import (CAMState, FunctionalSimulator,
+                         resolve_sim_overrides)
+from .perf import ArchSpecifics, MeshLink, MeshSpec, perf_report
+from .results import SearchResult
 
 
 class ShardedCAMSimulator:
@@ -58,21 +60,34 @@ class ShardedCAMSimulator:
     the mesh, ``query`` runs the shard_map search + cross-device merge.
 
     ``mesh``: a mesh with a ``bank_axis`` axis (see
-    ``launch.mesh.make_cam_mesh``); defaults to all local devices on
-    'bank'.  ``query_axis``: optional mesh axis that additionally splits
+    ``launch.mesh.make_cam_mesh``); when omitted it is derived from
+    ``config.sim`` (``devices`` banks x ``query_shards``; 0 devices = all
+    local).  ``query_axis``: optional mesh axis that additionally splits
     the query batch (Q must be a multiple of its size; with C2C noise, a
     multiple of ``query_shards * c2c_query_tile`` so cycle tiles align
-    with shard boundaries).
+    with shard boundaries); defaults to 'query' when
+    ``config.sim.query_shards > 1``.  The ``use_kernel`` /
+    ``c2c_query_tile`` kwargs are deprecated overrides for the
+    ``config.sim`` fields of the same names.
     """
 
     def __init__(self, config: CAMConfig, mesh: Optional[Mesh] = None, *,
                  bank_axis: str = "bank", query_axis: Optional[str] = None,
-                 use_kernel: bool = False, c2c_query_tile: int = 1):
-        self.sim = FunctionalSimulator(config, use_kernel=use_kernel,
-                                       c2c_query_tile=c2c_query_tile,
-                                       c2c_fold="bank")
+                 use_kernel: Optional[bool] = None,
+                 c2c_query_tile: Optional[int] = None):
+        config = resolve_sim_overrides(config, use_kernel=use_kernel,
+                                       c2c_query_tile=c2c_query_tile)
+        # the inner reference simulator always draws C2C noise per bank
+        # (the shard-invariant fold), whatever the config says
+        self.sim = FunctionalSimulator(
+            config.replace(sim=dict(c2c_fold="bank")))
         self.config = config
-        self.mesh = mesh if mesh is not None else make_cam_mesh()
+        if mesh is None:
+            scfg = config.sim
+            mesh = make_cam_mesh(scfg.devices or None, scfg.query_shards)
+            if query_axis is None and scfg.query_shards > 1:
+                query_axis = "query"
+        self.mesh = mesh
         sizes = dict(zip(self.mesh.axis_names, self.mesh.axis_sizes))
         if bank_axis not in sizes:
             raise ValueError(f"mesh has no {bank_axis!r} axis: "
@@ -84,13 +99,11 @@ class ShardedCAMSimulator:
                              f"{self.mesh.axis_names}")
         self.query_axis = query_axis
         self.n_query = sizes[query_axis] if query_axis else 1
-        self._arch: Optional[ArchSpecifics] = None
 
     # ------------------------------------------------------------- write
     def write(self, stored: jax.Array, key: Optional[jax.Array] = None
               ) -> CAMState:
         """Write simulation + mesh placement of the resulting state."""
-        self._arch = estimate_arch(self.config, *stored.shape[:2])
         return self.shard_state(self.sim.write(stored, key))
 
     def shard_state(self, state: CAMState) -> CAMState:
@@ -118,43 +131,58 @@ class ShardedCAMSimulator:
             row_valid=jax.device_put(row_valid, sh["row_valid"]))
 
     # ------------------------------------------------------------- perf
+    def plan(self, entries: int, dims: int) -> ArchSpecifics:
+        """Estimator-only planning: derive ``ArchSpecifics`` from shapes
+        alone so ``eval_perf`` works before (or without) ``write``."""
+        return self.sim.plan(entries, dims)
+
     def arch_specifics(self) -> ArchSpecifics:
-        if self._arch is None:
-            raise RuntimeError("call write() before querying arch specifics")
-        return self._arch
+        return self.sim.arch_specifics()
 
     def eval_perf(self, n_queries: int = 1, include_write: bool = False,
                   ops_per_query: int = 1,
                   clock_hz: Optional[float] = None,
                   link: Union[str, MeshLink] = "on_package",
-                  queries_per_batch: int = 1) -> dict:
+                  queries_per_batch: int = 1,
+                  mesh: Optional[Union[int, MeshSpec]] = None):
         """Mesh-level hardware performance prediction for the written
         store: per-device hierarchy rollup + cross-device merge over
         chip-to-chip ``link``s, for the topology this simulator executes
-        (its bank-axis size).
+        (its bank-axis size; pass ``mesh`` to predict a different one).
 
         ``queries_per_batch`` amortizes the merge collective over a query
         batch (the serving batch size); defaults to 1.  A 1-bank mesh
         reproduces ``CAMASim.eval_perf`` exactly."""
+        if mesh is None:
+            mesh = MeshSpec(self.n_banks, link)
         return perf_report(
             self.config, self.arch_specifics(),
-            mesh=MeshSpec(self.n_banks, link), n_queries=n_queries,
+            mesh=mesh, n_queries=n_queries,
             include_write=include_write, ops_per_query=ops_per_query,
             clock_hz=clock_hz, queries_per_batch=queries_per_batch)
 
+    # --------------------------------------------------- shard-local pieces
+    # Backend-protocol delegation: the same shard-local entry points the
+    # functional simulator exposes, on the shared reference simulator.
+    def segment_queries(self, state: CAMState, queries: jax.Array
+                        ) -> jax.Array:
+        return self.sim.segment_queries(state, queries)
+
+    def search_shard(self, grid, qseg, **kw):
+        return self.sim.search_shard(grid, qseg, **kw)
+
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None
-              ) -> Tuple[jax.Array, jax.Array]:
+              key: Optional[jax.Array] = None) -> SearchResult:
         """Query simulation across the mesh.
 
         queries: (Q, N) application-domain batch (or a single (N,) query).
-        Returns (indices (Q, k), mask (Q, padded_K)), bit-identical to
-        ``FunctionalSimulator(..., c2c_fold='bank').query``.
+        Returns a ``SearchResult`` (unpacks as ``(indices, mask)``),
+        bit-identical to ``FunctionalSimulator(..., c2c_fold='bank')``.
         """
         if queries.ndim == 1:
             idx, mask = self.query(state, queries[None], key)
-            return idx[0], mask[0]
+            return SearchResult(idx[0], mask[0])
         Q = queries.shape[0]
         if self.n_query > 1:
             tile = (min(self.sim.c2c_query_tile, Q)
@@ -164,9 +192,10 @@ class ShardedCAMSimulator:
                 raise ValueError(
                     f"Q={Q} must be a multiple of query_shards*c2c_tile="
                     f"{self.n_query}*{tile} for query-axis sharding")
-        return self._query_jit(state, queries,
-                               key if key is not None
-                               else jax.random.PRNGKey(1))
+        idx, mask = self._query_jit(state, queries,
+                                    key if key is not None
+                                    else jax.random.PRNGKey(1))
+        return SearchResult(idx, mask)
 
     @partial(jax.jit, static_argnums=(0,))
     def _query_jit(self, state: CAMState, queries, key):

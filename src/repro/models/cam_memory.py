@@ -21,10 +21,13 @@ from repro.core.functional import CAMState
 class CAMMemory:
     """Store (key, label) pairs; classify queries by best-match vote."""
     config: CAMConfig
-    use_kernel: bool = False
+    use_kernel: Optional[bool] = None   # deprecated: set config.sim.use_kernel
 
     def __post_init__(self):
-        self.sim = CAMASim(self.config, use_kernel=self.use_kernel)
+        if self.use_kernel is not None:
+            self.config = self.config.replace(
+                sim=dict(use_kernel=self.use_kernel))
+        self.sim = CAMASim(self.config)
         self.state: Optional[CAMState] = None
         self.labels: Optional[jax.Array] = None
 

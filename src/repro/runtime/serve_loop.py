@@ -135,22 +135,37 @@ class SearchRequest:
 class CAMSearchServer:
     """Micro-batching CAM search server (store once, serve many).
 
-    ``sim`` is a ``FunctionalSimulator`` or ``ShardedCAMSimulator`` (any
-    object with ``query(state, queries, key)``); ``state`` its written —
-    and, for the sharded simulator, mesh-placed — store.  Requests are
-    answered in submission order in batches of exactly ``batch`` queries
-    (short tails are zero-padded, results discarded), so every step hits
-    the same compiled search and, on the sharded path, the query-shard
-    divisibility contract holds by construction.  Per-batch C2C keys are
-    folded from ``key`` by step index, matching the simulator's one-draw-
-    per-search-cycle model.
+    ``sim`` is a ``CAMASim`` facade, ``FunctionalSimulator``, or
+    ``ShardedCAMSimulator`` (any object with ``query(state, queries,
+    key)``); ``state`` its written — and, for the sharded backend,
+    mesh-placed — store.  Requests are answered in submission order in
+    groups of up to ``batch`` queries; ``batch`` defaults to the
+    simulator config's ``sim.serve_batch``.  Per-batch C2C keys are
+    folded from ``key`` by step index, matching the simulator's
+    one-draw-per-search-cycle model.
+
+    ``autoscale=False`` (default) pads every step to exactly ``batch``
+    queries, so each step hits one compiled search shape.  With
+    ``autoscale=True`` the padded width is instead picked per step from
+    the fixed power-of-two ladder {1, 2, 4, ..., batch} by queue depth —
+    a mostly-idle server stops streaming the full serve_batch through the
+    grid for a 1-request tail, at the cost of at most log2(batch)+1
+    compiled shapes.  Request grouping and the fold_in(key, step) key
+    schedule are identical to fixed-batch serving, so (absent C2C noise,
+    whose per-cycle draw count is the padded width) answers are bit-exact
+    either way.
     """
     sim: Any
     state: Any
-    batch: int = 32
+    batch: Optional[int] = None
     key: Optional[jax.Array] = None
+    autoscale: bool = False
 
     def __post_init__(self):
+        if self.batch is None:
+            cfg = getattr(self.sim, "config", None)
+            self.batch = getattr(getattr(cfg, "sim", None),
+                                 "serve_batch", 32)
         if self.batch < 1:
             raise ValueError("batch must be >= 1")
         if self.key is None:
@@ -167,6 +182,25 @@ class CAMSearchServer:
         self.queue.append(req)
         return req
 
+    def _padded_width(self, n_reqs: int) -> int:
+        """Step width: ``batch`` fixed, or the smallest ladder rung that
+        fits the step's requests AND the sharded query-axis divisibility
+        contract (padded width % (query_shards * c2c_tile) == 0)."""
+        if not self.autoscale:
+            return self.batch
+        rung = 1
+        while rung < n_reqs:
+            rung <<= 1
+        backend = getattr(self.sim, "backend", self.sim)
+        mult = getattr(backend, "n_query", 1)
+        if mult > 1:
+            inner = getattr(backend, "sim", backend)
+            if inner.config.device.variation in ("c2c", "both"):
+                mult *= inner.c2c_query_tile
+        while rung < self.batch and rung % mult:
+            rung <<= 1
+        return self.batch if rung > self.batch or rung % mult else rung
+
     def step(self) -> int:
         """Serve one query batch; returns #requests answered."""
         if not self.queue:
@@ -174,7 +208,7 @@ class CAMSearchServer:
         reqs = self.queue[: self.batch]
         del self.queue[: len(reqs)]
         qs = np.stack([r.query for r in reqs]).astype(np.float32)
-        pad = self.batch - len(reqs)
+        pad = self._padded_width(len(reqs)) - len(reqs)
         if pad:
             qs = np.concatenate(
                 [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])

@@ -39,6 +39,32 @@ def test_long_context_retrieval_example_runs():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("config", ["functional.json", "sharded.json"])
+def test_camasim_run_cli_executes_checked_in_configs(config):
+    """The camasim-run entry point drives a checked-in JSON config end to
+    end (functional sim + perf report as JSON on stdout); the sharded
+    config runs on a forced 2-host-device mesh."""
+    import json
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    if config == "sharded.json":
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    else:
+        env.pop("XLA_FLAGS", None)
+    cfg_path = os.path.join(_ROOT, "examples", "configs", config)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.cli", cfg_path, "--queries", "4"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    report = json.loads(proc.stdout)
+    assert report["latency_ns"] > 0 and report["area_um2"] > 0
+    assert set(report) >= {"arch", "search", "latency_ns", "energy_pj",
+                           "area_um2", "edp_pj_ns"}
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("args", [(), ("--kernel",)])
 def test_acam_decision_tree_example_runs(args):
     """X-TIME-style decision-tree inference, on both the jnp broadcast

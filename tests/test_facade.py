@@ -1,0 +1,255 @@
+"""The config-driven CAMASim facade: one JSON config drives the whole
+experiment through either backend.
+
+Guarantees:
+  * full five-section config round-trip: CAMConfig -> JSON file ->
+    ``CAMASim.from_json`` -> identical compiled search results and
+    identical ``eval_perf`` report vs constructing the backend directly
+    (both backends; the multi-device matrix reruns through the facade in
+    test_sharded_search's subprocess sweep);
+  * ``from_dict`` drops unknown keys in EVERY section (forward compat —
+    regression for the circuit-only asymmetry);
+  * the deprecated constructor kwargs still work for one release and warn;
+  * ``plan`` makes ``eval_perf`` usable before ``write`` (estimator-only
+    design sweeps) and agrees with the write-derived prediction;
+  * ``SearchResult`` / ``PerfReport`` keep the historical tuple/dict
+    behavior bit-for-bit while adding the typed surface.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AppConfig, ArchConfig, Backend, CAMASim, CAMConfig,
+                        CircuitConfig, DeviceConfig, FunctionalSimulator,
+                        PerfReport, SearchResult, ShardedCAMSimulator,
+                        SimConfig, make_backend)
+from repro.core.results import SearchResult as ResultsSearchResult
+
+KEY = jax.random.PRNGKey(0)
+
+PERF_KEYS = ("arch", "search", "latency_ns", "energy_pj", "area_um2",
+             "edp_pj_ns")
+
+
+def _cfg(**sim):
+    return CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet", variation="d2d",
+                            variation_std=0.3),
+        sim=SimConfig(**sim))
+
+
+def _data(K=37, N=12, Q=9):
+    k1, k2 = jax.random.split(KEY)
+    return (jax.random.uniform(k1, (K, N)),
+            jax.random.uniform(k2, (Q, N)))
+
+
+# ---------------------------------------------------------------------------
+# config round-trip through a JSON file, both backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["functional", "sharded"])
+def test_json_roundtrip_drives_identical_experiment(tmp_path, backend):
+    cfg = _cfg(backend=backend, c2c_fold="bank", serve_batch=7)
+    path = tmp_path / "exp.json"
+    path.write_text(cfg.to_json(indent=1))
+
+    sim = CAMASim.from_json(path)
+    assert sim.config == cfg                 # five sections survive
+    if backend == "functional":
+        direct = FunctionalSimulator(cfg)
+        assert isinstance(sim.backend, FunctionalSimulator)
+    else:
+        direct = ShardedCAMSimulator(cfg)    # devices=0: all local
+        assert isinstance(sim.backend, ShardedCAMSimulator)
+
+    stored, queries = _data()
+    wkey, qkey = jax.random.split(jax.random.PRNGKey(3))
+    ia, ma = sim.query(sim.write(stored, wkey), queries, key=qkey)
+    ib, mb = direct.query(direct.write(stored, wkey), queries, key=qkey)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+
+    # ...and the same perf report, key for key
+    pa, pb = sim.eval_perf(n_queries=9), direct.eval_perf(n_queries=9)
+    assert set(pa.keys()) == set(pb.keys())
+    for k in ("latency_ns", "energy_pj", "area_um2", "edp_pj_ns", "arch"):
+        assert pa[k] == pb[k], k
+
+
+def test_facade_backend_swap_is_bit_identical_single_device():
+    """backend='functional' vs 'sharded' on a 1-device mesh: the one-line
+    config change must not move a single bit (c2c bank fold on both)."""
+    stored, queries = _data()
+    qkey = jax.random.PRNGKey(11)
+    res = {}
+    for backend in ("functional", "sharded"):
+        sim = CAMASim(_cfg(backend=backend, c2c_fold="bank"))
+        res[backend] = sim.query(sim.write(stored), queries, key=qkey)
+    np.testing.assert_array_equal(np.asarray(res["functional"].indices),
+                                  np.asarray(res["sharded"].indices))
+    np.testing.assert_array_equal(np.asarray(res["functional"].mask),
+                                  np.asarray(res["sharded"].mask))
+
+
+# ---------------------------------------------------------------------------
+# forward compat: unknown keys dropped in every section
+# ---------------------------------------------------------------------------
+def test_from_dict_drops_unknown_keys_in_all_sections():
+    d = _cfg().to_dict()
+    for section in ("app", "arch", "circuit", "device", "sim"):
+        d[section]["from_the_future"] = 123
+    cfg = CAMConfig.from_dict(d)
+    assert cfg == _cfg()
+
+
+def test_from_dict_missing_sim_section_defaults():
+    """Configs serialized BEFORE the sim section existed still load."""
+    d = _cfg().to_dict()
+    del d["sim"]
+    cfg = CAMConfig.from_dict(d)
+    assert cfg.sim == SimConfig()
+
+
+def test_sim_config_validation():
+    with pytest.raises(ValueError):
+        SimConfig(backend="quantum")
+    with pytest.raises(ValueError):
+        SimConfig(c2c_fold="nope")
+    with pytest.raises(ValueError):
+        SimConfig(c2c_query_tile=0)
+    with pytest.raises(ValueError):
+        SimConfig(serve_batch=0)
+    with pytest.raises(ValueError):
+        SimConfig(devices=-1)
+
+
+# ---------------------------------------------------------------------------
+# deprecated constructor kwargs: one release of warning + override
+# ---------------------------------------------------------------------------
+def test_deprecated_kwargs_warn_and_override():
+    cfg = _cfg()
+    with pytest.warns(DeprecationWarning):
+        sim = CAMASim(cfg, use_kernel=True)
+    assert sim.config.sim.use_kernel is True
+    assert sim.functional.use_kernel is True
+
+    with pytest.warns(DeprecationWarning):
+        f = FunctionalSimulator(cfg, c2c_query_tile=4, c2c_fold="bank")
+    assert f.c2c_query_tile == 4 and f.c2c_fold == "bank"
+
+    with pytest.warns(DeprecationWarning):
+        s = ShardedCAMSimulator(cfg, use_kernel=True)
+    assert s.sim.use_kernel is True
+
+    # invalid override values still fail loudly (via SimConfig validation)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):
+            CAMASim(cfg, c2c_fold="nope")
+
+
+def test_config_driven_construction_does_not_warn(recwarn):
+    cfg = _cfg(use_kernel=False, c2c_query_tile=2, c2c_fold="bank")
+    f = FunctionalSimulator(cfg)
+    assert f.c2c_query_tile == 2 and f.c2c_fold == "bank"
+    CAMASim(cfg)
+    ShardedCAMSimulator(cfg)
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# estimator-only planning
+# ---------------------------------------------------------------------------
+def test_plan_matches_write_derived_perf():
+    cfg = _cfg()
+    stored, _ = _data(K=37, N=12)
+
+    planned = CAMASim(cfg)
+    planned.plan(37, 12)                    # shapes only, no data
+    written = CAMASim(cfg)
+    written.write(stored)
+
+    pa, pb = planned.eval_perf(n_queries=5), written.eval_perf(n_queries=5)
+    assert pa == pb                          # identical report dicts
+    assert planned.arch_specifics().describe() == \
+        written.arch_specifics().describe()
+
+
+def test_eval_perf_before_plan_or_write_raises():
+    sim = CAMASim(_cfg())
+    with pytest.raises(RuntimeError):
+        sim.eval_perf()
+    sharded = CAMASim(_cfg(backend="sharded"))
+    with pytest.raises(RuntimeError):
+        sharded.eval_perf()
+    sharded.plan(37, 12)
+    assert sharded.eval_perf()["latency_ns"] > 0
+
+
+# ---------------------------------------------------------------------------
+# typed results / typed report
+# ---------------------------------------------------------------------------
+def test_search_result_tuple_compat_and_topk():
+    cfg = _cfg()
+    sim = CAMASim(cfg)
+    stored, queries = _data()
+    state = sim.write(stored)
+    res = sim.query(state, queries)
+    assert isinstance(res, SearchResult)
+    assert SearchResult is ResultsSearchResult
+
+    idx, mask = res                          # tuple unpacking
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(res.indices))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(res.mask))
+    assert res[0] is res.indices and res[1] is res.mask
+    assert len(res) == 2 and res.dist is None
+    assert res.n_queries == queries.shape[0]
+
+    np.testing.assert_array_equal(np.asarray(res.topk(2)),
+                                  np.asarray(res.indices[:, :2]))
+
+    single = sim.query(state, queries[0])    # (N,) query: 1-D results
+    assert single.indices.ndim == 1 and single.n_queries == 1
+
+    # a pytree (so jax.block_until_ready / jit boundaries accept it)
+    leaves = jax.tree_util.tree_leaves(res)
+    assert len(leaves) == 2
+    jax.block_until_ready(res)
+
+
+def test_perf_report_is_dict_with_typed_surface():
+    sim = CAMASim(_cfg())
+    sim.plan(37, 12)
+    rep = sim.eval_perf(include_write=True)
+    assert isinstance(rep, PerfReport) and isinstance(rep, dict)
+    # the historical dict shape, key for key (BENCH consumers)
+    assert set(rep.keys()) == set(PERF_KEYS) | {"write"}
+    assert rep.to_dict() == dict(rep)
+    assert type(rep.to_dict()) is dict
+    assert rep.latency_ns == rep["latency_ns"]
+    assert rep.search is rep["search"]
+    assert rep.write is rep["write"]
+    assert rep.energy_pj == rep["energy_pj"]
+
+    mesh_rep = sim.eval_perf(mesh=4)
+    assert set(mesh_rep.keys()) == set(PERF_KEYS) | {"mesh"}
+
+
+# ---------------------------------------------------------------------------
+# backend protocol
+# ---------------------------------------------------------------------------
+def test_backends_satisfy_protocol_and_dispatch():
+    f = make_backend(_cfg(backend="functional"))
+    s = make_backend(_cfg(backend="sharded"))
+    assert isinstance(f, FunctionalSimulator) and isinstance(f, Backend)
+    assert isinstance(s, ShardedCAMSimulator) and isinstance(s, Backend)
+    # a config object is not a backend
+    assert not isinstance(_cfg(), Backend)

@@ -283,6 +283,93 @@ def test_cam_search_server_c2c_keys_differ_across_steps():
             np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
 
 
+def test_cam_search_server_reads_serve_batch_from_config_and_facade():
+    """batch=None: the server picks up config.sim.serve_batch, and accepts
+    the CAMASim facade as its simulator."""
+    from repro.core import CAMASim
+    from repro.runtime import CAMSearchServer
+
+    cfg = _cam_server_cfg().replace(sim=dict(serve_batch=4))
+    sim = CAMASim(cfg)
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    srv = CAMSearchServer(sim, state)
+    assert srv.batch == 4
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(5), (9, 16)))
+    for q in queries:
+        srv.submit(q)
+    assert srv.step() == 4                  # one serve_batch-sized step
+    done = srv.run()
+    assert len(done) == 9
+    idx, mask = sim.query(state, jnp.asarray(queries))
+    for i, r in enumerate(done):
+        np.testing.assert_array_equal(r.indices, np.asarray(idx[i]))
+        np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
+
+
+def test_cam_search_server_autoscale_ladder_widths():
+    """The padded width is the smallest power-of-two rung >= the step's
+    requests, capped at batch; fixed-batch always pads to batch."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    auto = CAMSearchServer(sim, state, batch=32, autoscale=True)
+    fixed = CAMSearchServer(sim, state, batch=32)
+    for n, want in ((1, 1), (2, 2), (3, 4), (5, 8), (9, 16), (17, 32),
+                    (32, 32)):
+        assert auto._padded_width(n) == want, n
+        assert fixed._padded_width(n) == 32, n
+
+
+def test_cam_search_server_autoscale_parity_with_fixed_batch():
+    """Same requests, same fold_in(key, step) schedule: the autoscaled
+    server's answers are bit-exact vs fixed-batch serving (the ladder only
+    changes the zero-padding width)."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(6),
+                                            (11, 16)))
+    key = jax.random.PRNGKey(9)
+    fixed = CAMSearchServer(sim, state, batch=8, key=key)
+    auto = CAMSearchServer(sim, state, batch=8, key=key, autoscale=True)
+    for srv in (fixed, auto):
+        for q in queries:
+            srv.submit(q)
+        srv.run()
+    assert fixed._steps == auto._steps == 2   # same request grouping
+    for rf, ra in zip(fixed.finished, auto.finished):
+        assert rf.rid == ra.rid
+        np.testing.assert_array_equal(rf.indices, ra.indices)
+        np.testing.assert_array_equal(rf.mask, ra.mask)
+
+
+def test_cam_search_server_autoscale_c2c_matches_direct_padded_query():
+    """With C2C noise the per-cycle draw count is the padded width, so
+    each autoscaled step must bit-match a direct query of that step's
+    ladder width under the same fold_in(key, step) key."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg("c2c"))
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(7),
+                                            (3, 16)))
+    srv = CAMSearchServer(sim, state, batch=8, autoscale=True)
+    for q in queries:
+        srv.submit(q)
+    assert srv.step() == 3                   # ladder width 4, one step
+    padded = np.concatenate([queries, np.zeros((1, 16), np.float32)])
+    idx, mask = sim.query(state, jnp.asarray(padded),
+                          key=jax.random.fold_in(srv.key, 0))
+    for i, r in enumerate(srv.finished):
+        np.testing.assert_array_equal(r.indices, np.asarray(idx[i]))
+        np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
+
+
 # ---------------------------------------------------------------------------
 # sharding resolver
 # ---------------------------------------------------------------------------

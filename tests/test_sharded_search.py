@@ -37,8 +37,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 os.environ["JAX_PLATFORMS"] = "cpu"
 import zlib
 import jax, jax.numpy as jnp, numpy as np
-from repro.core import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
-                        DeviceConfig, FunctionalSimulator,
+from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
+                        CircuitConfig, DeviceConfig, FunctionalSimulator,
                         ShardedCAMSimulator)
 from repro.launch.mesh import make_cam_mesh
 
@@ -49,11 +49,18 @@ mesh_q = make_cam_mesh(2, 2)
 def check(cfg, K=37, N=12, Q=9, use_kernel=False, query_axis=None,
           c2c_tile=1, tag=""):
     m = mesh_q if query_axis else mesh
-    sim = FunctionalSimulator(cfg, use_kernel=use_kernel, c2c_fold="bank",
-                              c2c_query_tile=c2c_tile)
-    ssim = ShardedCAMSimulator(cfg, m, use_kernel=use_kernel,
-                               query_axis=query_axis,
-                               c2c_query_tile=c2c_tile)
+    # the config-driven facade must be bit-identical to constructing the
+    # backends directly: run the whole matrix a third time through
+    # CAMASim with sim.backend='sharded' (same mesh geometry via config)
+    base_sim = dict(use_kernel=use_kernel, c2c_query_tile=c2c_tile,
+                    c2c_fold="bank")
+    sim = FunctionalSimulator(cfg.replace(sim=base_sim))
+    ssim = ShardedCAMSimulator(cfg.replace(sim=base_sim), m,
+                               query_axis=query_axis)
+    fac = CAMASim(cfg.replace(sim=dict(
+        base_sim, backend="sharded",
+        devices=2 if query_axis else 4,
+        query_shards=2 if query_axis else 1)))
     k1, k2 = jax.random.split(jax.random.PRNGKey(zlib.crc32(tag.encode())))
     stored = jax.random.uniform(k1, (K, N))
     if cfg.circuit.cell_type == "acam":     # 5-D [lo, hi] range grid
@@ -62,8 +69,13 @@ def check(cfg, K=37, N=12, Q=9, use_kernel=False, query_axis=None,
     qkey = jax.random.PRNGKey(7)
     ia, ma = sim.query(sim.write(stored), queries, key=qkey)
     ib, mb = ssim.query(ssim.write(stored), queries, key=qkey)
+    ic, mc = fac.query(fac.write(stored), queries, key=qkey)
     np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib), err_msg=tag)
     np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb), err_msg=tag)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ic),
+                                  err_msg="facade-" + tag)
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mc),
+                                  err_msg="facade-" + tag)
     print("OK", tag)
 
 def cfg_for(match, distance, h_merge, v_merge, sensing, variation="none"):
