@@ -42,6 +42,27 @@ def merge_bench_rows(rows: list, path: pathlib.Path = BENCH_JSON) -> list:
     return merged
 
 
+def check_floors(rows: list) -> None:
+    """Fail loudly when a row records a broken guarantee: any parity bit
+    ``match=False``, or a ``recall=`` that fell below the ``floor=`` the
+    same row declares.  Run in CI so a perf row can't silently regress
+    from "bit-identical"/"recall cleared" to "close enough"."""
+    import re
+    bad = []
+    for r in rows:
+        d = str(r.get("derived", ""))
+        if re.search(r"\bmatch=False\b", d):
+            bad.append(f"{r['name']}: match=False ({d})")
+        m = re.search(r"\brecall=([0-9.]+)", d)
+        f = re.search(r"\bfloor=([0-9.]+)", d)
+        if m and f and float(m.group(1)) < float(f.group(1)):
+            bad.append(f"{r['name']}: recall {m.group(1)} < floor "
+                       f"{f.group(1)} ({d})")
+    if bad:
+        raise RuntimeError("benchmark floor violations:\n  "
+                           + "\n  ".join(bad))
+
+
 def _run_and_collect(fn, rows: list) -> None:
     """Run a benchmark main, echo its stdout, and parse the CSV rows."""
     buf = io.StringIO()
@@ -65,8 +86,8 @@ def main() -> None:
     devices = 4
     if "--devices" in sys.argv:
         devices = int(sys.argv[sys.argv.index("--devices") + 1])
-    from . import (fig4_sweep, fig5_nonidealities, kernel_bench,
-                   serve_bench, sharded_bench, sharded_perf,
+    from . import (cascade_bench, fig4_sweep, fig5_nonidealities,
+                   kernel_bench, serve_bench, sharded_bench, sharded_perf,
                    table4_validation)
 
     rows: list = []
@@ -83,6 +104,7 @@ def main() -> None:
     _run_and_collect(fig4_sweep.main, rows)
     _run_and_collect(fig5_nonidealities.main, rows)
     _run_and_collect(kernel_bench.main, rows)
+    _run_and_collect(lambda: cascade_bench.main(ci=not full), rows)
     _run_and_collect(serve_bench.main, rows)
     if devices > 0:
         _run_and_collect(lambda: sharded_bench.main(devices), rows)
@@ -111,6 +133,7 @@ def main() -> None:
         emit("fig5_full", 0, fig5_nonidealities.check_trends(out))
     emit("total_wall_s", round((time.perf_counter() - t0) * 1e6),
          f"{time.perf_counter() - t0:.1f}s")
+    check_floors(rows)
     merged = merge_bench_rows(rows)
     print(f"bench_json,0,rows={len(merged)}_path={BENCH_JSON.name}")
 

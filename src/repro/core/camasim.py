@@ -90,7 +90,9 @@ class CAMASim:
                   ops_per_query: int = 1,
                   clock_hz: Optional[float] = None,
                   mesh: Optional[Union[int, MeshSpec]] = None,
-                  queries_per_batch: int = 1) -> PerfReport:
+                  queries_per_batch: int = 1,
+                  searched_fraction: Optional[float] = None,
+                  prefilter_bits: Optional[int] = None) -> PerfReport:
         """Hardware performance prediction for the written (or planned)
         store, as a ``PerfReport`` (historical dict keys preserved).
 
@@ -101,11 +103,40 @@ class CAMASim:
         topology to predict for.  Default: the backend's own topology
         (single chip on the functional backend, the bank-axis size on the
         sharded one); ``mesh=1`` reproduces the single-chip prediction
-        exactly."""
+        exactly.
+
+        ``searched_fraction`` / ``prefilter_bits``: search-cascade billing
+        overrides; default to what ``config.sim`` implies (full scan —
+        1.0 / 0 — when the cascade is off)."""
         return self.backend.eval_perf(
             n_queries=n_queries, include_write=include_write,
             ops_per_query=ops_per_query, clock_hz=clock_hz, mesh=mesh,
-            queries_per_batch=queries_per_batch)
+            queries_per_batch=queries_per_batch,
+            searched_fraction=searched_fraction,
+            prefilter_bits=prefilter_bits)
+
+    def sweep_cascade(self, top_p_list, entries: Optional[int] = None,
+                      dims: Optional[int] = None, **perf_kw):
+        """Estimator-only cascade sweep: predicted perf per ``top_p_banks``
+        value, BEFORE any write — the plan()-first recall/latency knob
+        exploration the cascade is for.  ``entries``/``dims`` plan the
+        architecture when none is planned yet; returns
+        ``{top_p: PerfReport}`` (``None`` = full scan, no prefilter)."""
+        if entries is not None:
+            self.plan(entries, dims)
+        arch = self.arch_specifics()
+        nv = arch.spec.nv
+        sig_bits = self.config.sim.signature_bits or arch.spec.N
+        out = {}
+        for p in top_p_list:
+            if p is None:
+                out[p] = self.eval_perf(searched_fraction=1.0,
+                                        prefilter_bits=0, **perf_kw)
+            else:
+                out[p] = self.eval_perf(
+                    searched_fraction=min(1.0, p / max(1, nv)),
+                    prefilter_bits=sig_bits, **perf_kw)
+        return out
 
     # ------------------------------------------------------- convenience
     def search(self, stored: jax.Array, queries: jax.Array,

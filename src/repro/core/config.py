@@ -28,6 +28,7 @@ VARIATION_TYPES = ("none", "d2d", "c2c", "both")
 VARIATION_SPECS = ("stat", "exper")
 BACKENDS = ("functional", "sharded")
 C2C_FOLDS = ("grid", "bank")
+PREFILTERS = ("off", "signature", "ivf")
 
 
 def _check(value, allowed, name):
@@ -123,6 +124,14 @@ class SimConfig:
     c2c_query_tile: int = 1        # queries per C2C noise draw (search cycle)
     c2c_fold: str = "grid"         # C2C RNG fold: grid / bank (shard-invariant)
     serve_batch: int = 32          # CAMSearchServer micro-batch ceiling
+    # Two-stage search cascade (sublinear search): 'signature' scores each
+    # nv-bank with a bit-packed Hamming prefilter before the exact kernel;
+    # 'ivf' additionally reorders rows at write time so similar entries
+    # colocate in the same bank (returned indices are unchanged — the
+    # placement permutation is tracked in the state).
+    prefilter: str = "off"         # off / signature / ivf
+    top_p_banks: Optional[int] = None  # banks searched per batch (None = all)
+    signature_bits: int = 0        # stage-1 signature width (0 = one per dim)
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "backend")
@@ -136,6 +145,17 @@ class SimConfig:
             raise ValueError("query_shards must be >= 1")
         if self.serve_batch < 1:
             raise ValueError("serve_batch must be >= 1")
+        _check(self.prefilter, PREFILTERS, "prefilter")
+        if self.top_p_banks is not None and self.top_p_banks < 1:
+            raise ValueError("top_p_banks must be >= 1 (or None = all banks)")
+        if self.signature_bits < 0:
+            raise ValueError("signature_bits must be >= 0 (0 = one per dim)")
+
+    def cascade_enabled(self) -> bool:
+        """Both stages configured: a prefilter is selected AND a bank
+        budget is set (``top_p_banks=None`` disables the cascade even when
+        signatures/placement are derived at write time)."""
+        return self.prefilter != "off" and self.top_p_banks is not None
 
 
 _SECTIONS = {
@@ -214,6 +234,15 @@ class CAMConfig:
             raise ValueError("BCAM stores 1 bit per cell")
         if self.circuit.cell_type == "tcam" and self.app.data_bits > 1:
             raise ValueError("TCAM stores 1 bit (+don't-care) per cell")
+        if (self.sim.cascade_enabled() and self.sim.backend == "functional"
+                and self.device.variation in ("c2c", "both")
+                and self.sim.c2c_fold == "grid"):
+            # the grid fold draws ONE normal over the whole (nv, nh, R, C)
+            # grid per cycle; that draw cannot be restricted to a gathered
+            # bank subset, so routed searches need the per-bank fold
+            raise ValueError(
+                "the search cascade with C2C variation requires "
+                "sim.c2c_fold='bank' (per-bank RNG fold)")
 
 
 def known_fields(section_cls, d: dict) -> dict:

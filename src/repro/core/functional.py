@@ -33,7 +33,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import mapping, merge, quantize, subarray, variation
+from . import mapping, merge, prefilter, quantize, subarray, variation
 from .config import CAMConfig
 from .results import SearchResult
 
@@ -57,20 +57,33 @@ def resolve_sim_overrides(config: CAMConfig, **overrides) -> CAMConfig:
 
 @dataclass
 class CAMState:
-    """State produced by write simulation (a pytree)."""
+    """State produced by write simulation (a pytree).
+
+    The last three fields exist only when the search cascade is configured
+    (``sim.prefilter != 'off'``): bit-packed per-row signatures for the
+    stage-1 bank prefilter, their binarization threshold, and — for the
+    'ivf' prefilter — the clustered placement permutation
+    (``placed[i] = orig[perm[i]]``) that the query path inverts so returned
+    indices always refer to the caller's original row order.
+    """
     grid: jax.Array          # (nv, nh, R, C) noisy stored codes
     lo: jax.Array            # quantization range (shared with queries)
     hi: jax.Array
     spec: mapping.GridSpec   # static partition spec
     col_valid: jax.Array     # (nh, C)
     row_valid: jax.Array     # (nv, R)
+    sigs: Optional[jax.Array] = None      # (nv, R, W) uint32 signatures
+    sig_thr: Optional[jax.Array] = None   # scalar binarization threshold
+    perm: Optional[jax.Array] = None      # (padded_K,) placement perm
 
 
 jax.tree_util.register_pytree_node(
     CAMState,
-    lambda s: ((s.grid, s.lo, s.hi, s.col_valid, s.row_valid), s.spec),
+    lambda s: ((s.grid, s.lo, s.hi, s.col_valid, s.row_valid, s.sigs,
+                s.sig_thr, s.perm), s.spec),
     lambda spec, leaves: CAMState(leaves[0], leaves[1], leaves[2], spec,
-                                  leaves[3], leaves[4]),
+                                  leaves[3], leaves[4], leaves[5],
+                                  leaves[6], leaves[7]),
 )
 
 
@@ -118,14 +131,20 @@ class FunctionalSimulator:
     def eval_perf(self, n_queries: int = 1, include_write: bool = False,
                   ops_per_query: int = 1,
                   clock_hz: Optional[float] = None,
-                  mesh=None, queries_per_batch: int = 1):
+                  mesh=None, queries_per_batch: int = 1,
+                  searched_fraction: Optional[float] = None,
+                  prefilter_bits: Optional[int] = None):
         """Hardware performance prediction for the written (or planned)
-        store; see ``perf.perf_report`` for the report shape."""
+        store; see ``perf.perf_report`` for the report shape.  The cascade
+        knobs default to what ``config.sim`` implies (``cascade_billing``);
+        pass them explicitly to sweep the routing budget pre-write."""
         from .perf import perf_report
         return perf_report(self.config, self.arch_specifics(), mesh=mesh,
                            n_queries=n_queries, include_write=include_write,
                            ops_per_query=ops_per_query, clock_hz=clock_hz,
-                           queries_per_batch=queries_per_batch)
+                           queries_per_batch=queries_per_batch,
+                           searched_fraction=searched_fraction,
+                           prefilter_bits=prefilter_bits)
 
     # ------------------------------------------------------------- write
     def write(self, stored: jax.Array, key: Optional[jax.Array] = None
@@ -164,11 +183,29 @@ class FunctionalSimulator:
         else:
             codes, lo, hi = quantize.quantize_for_cell(
                 stored, cfg.circuit.cell_type, cfg.app.data_bits)
+        sigs = sig_thr = perm = None
+        if cfg.sim.prefilter != "off":
+            cvals = prefilter.signature_values(codes)
+            if cfg.sim.prefilter == "ivf":
+                # clustered placement: reorder rows so similar entries
+                # colocate in the same nv bank; the query path maps
+                # indices back through perm so callers never see it
+                perm = mapping.placement_perm(cvals, spec)
+                codes = jnp.take(codes, perm[:spec.K], axis=0)
+                cvals = jnp.take(cvals, perm[:spec.K], axis=0)
+            # signatures come from the clean placed codes, BEFORE the D2D
+            # programming noise below: stage 1 models a separate 1-bit
+            # TCAM slab programmed from the same source data
+            sig_thr = prefilter.signature_threshold(
+                cvals, cfg.circuit.cell_type, cfg.app.data_bits)
+            sigs = prefilter.row_signatures(cvals, sig_thr, spec,
+                                            cfg.sim.signature_bits)
         grid = mapping.partition_stored(codes, spec)
         grid = variation.apply_d2d(grid, cfg.device, cfg.app.data_bits, key)
         return CAMState(grid=grid, lo=lo, hi=hi, spec=spec,
                         col_valid=mapping.col_valid_mask(spec),
-                        row_valid=mapping.row_valid_mask(spec))
+                        row_valid=mapping.row_valid_mask(spec),
+                        sigs=sigs, sig_thr=sig_thr, perm=perm)
 
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,
@@ -190,9 +227,17 @@ class FunctionalSimulator:
 
     @partial(jax.jit, static_argnums=(0,))
     def _query_jit(self, state: CAMState, queries, key):
+        idx, mask = self._query_inner(state, queries, key)
+        return self._to_original(state, idx, mask)
+
+    def _query_inner(self, state: CAMState, queries, key):
         cfg = self.config
         bits = cfg.app.data_bits
-        qseg = self.segment_queries(state, queries)          # (Q, nh, C)
+        qcodes = self.query_codes(state, queries)            # (Q, N)
+        qseg = mapping.partition_query(qcodes, state.spec)   # (Q, nh, C)
+
+        if cfg.sim.cascade_enabled() and state.sigs is not None:
+            return self._query_cascade(state, qcodes, qseg, key)
 
         if cfg.device.variation not in ("c2c", "both"):
             # store once, search many: one fused batched pass
@@ -247,19 +292,77 @@ class FunctionalSimulator:
         return merge.match_k(cfg.app.match_type, cfg.app.match_param,
                              padded_K)
 
-    def segment_queries(self, state: CAMState, queries: jax.Array
-                        ) -> jax.Array:
-        """Quantize (shared scale) + partition: (Q, N) -> (Q, nh, C)."""
+    def query_codes(self, state: CAMState, queries: jax.Array) -> jax.Array:
+        """Quantize with the store's shared scale: (Q, N) code-domain."""
         cfg = self.config
         qcodes, _, _ = quantize.quantize_for_cell(
             queries, cfg.circuit.cell_type, cfg.app.data_bits,
             state.lo, state.hi)
-        return mapping.partition_query(qcodes, state.spec)
+        return qcodes
+
+    def segment_queries(self, state: CAMState, queries: jax.Array
+                        ) -> jax.Array:
+        """Quantize (shared scale) + partition: (Q, N) -> (Q, nh, C)."""
+        return mapping.partition_query(self.query_codes(state, queries),
+                                       state.spec)
+
+    # --------------------------------------------------- cascade (stage 1)
+    def route_banks(self, state: CAMState, qcodes: jax.Array,
+                    p: Optional[int] = None) -> jax.Array:
+        """Stage-1 routing: (Q, N) query codes -> (p,) sorted bank ids."""
+        cfg = self.config
+        qsig = prefilter.query_signatures(qcodes, state.sig_thr, state.spec,
+                                          cfg.sim.signature_bits)
+        scores = prefilter.bank_scores(state.sigs, qsig, state.row_valid,
+                                       use_kernel=self.use_kernel)
+        if p is None:
+            p = min(cfg.sim.top_p_banks, state.spec.nv)
+        return prefilter.select_banks(scores, p)
+
+    def _query_cascade(self, state: CAMState, qcodes, qseg, key):
+        """Two-stage search: route to top-p banks, exact-search only the
+        gathered (p, nh, R, C) sub-grid, merge against original bank ids.
+
+        With ``top_p_banks >= nv`` the selection is ``arange(nv)``, the
+        gather is the identity, and the result is bit-identical to the
+        full scan (a parity test asserts this per cell/merge combo)."""
+        cfg = self.config
+        spec = state.spec
+        bank_ids = self.route_banks(state, qcodes)
+        sub_grid = jnp.take(state.grid, bank_ids, axis=0)
+        sub_rv = jnp.take(state.row_valid, bank_ids, axis=0)
+        # C2C noise (if any) folds per ORIGINAL bank id, so the surviving
+        # banks see exactly the noise they would in a full scan
+        dist, match = self.search_shard(
+            sub_grid, qseg, col_valid=state.col_valid, row_valid=sub_rv,
+            key=key, bank_ids=bank_ids)
+        return merge.merge_selected(
+            dist, match, bank_ids, nv_total=spec.nv,
+            match_type=cfg.app.match_type,
+            h_merge=cfg.arch.h_merge,
+            v_merge=cfg.arch.v_merge,
+            match_param=self.match_k(spec.padded_K),
+            sensing_limit=cfg.circuit.sensing_limit,
+            threshold=float(cfg.app.match_param)
+            if cfg.app.match_type == "threshold" else 0.0)
+
+    def _to_original(self, state: CAMState, idx, mask):
+        """Map placed-order results back to the caller's row order.
+
+        ``placed[i] = orig[perm[i]]``, so a placed index maps through a
+        gather and the placed mask scatters onto original positions."""
+        if state.perm is None:
+            return idx, mask
+        safe = jnp.take(state.perm, jnp.maximum(idx, 0))
+        idx = jnp.where(idx >= 0, safe, -1)
+        mask = jnp.zeros_like(mask).at[..., state.perm].set(mask)
+        return idx, mask
 
     def search_shard(self, grid: jax.Array, qseg: jax.Array, *,
                      col_valid: jax.Array, row_valid: jax.Array,
                      key: Optional[jax.Array] = None, v_offset=0,
-                     cycle_keys: Optional[jax.Array] = None
+                     cycle_keys: Optional[jax.Array] = None,
+                     bank_ids: Optional[jax.Array] = None
                      ) -> Tuple[Optional[jax.Array], jax.Array]:
         """Shard-local search over a pre-split grid.
 
@@ -270,6 +373,9 @@ class FunctionalSimulator:
         split of the nv axis draws bit-identical noise.  ``cycle_keys``
         overrides the per-cycle key derivation for query-sharded batches
         (the caller splits the global key and slices this shard's cycles).
+        ``bank_ids`` names the global bank each grid slot holds when the
+        shard is a *gathered* subset (the cascade's top-p banks) rather
+        than a contiguous slice — C2C noise then folds by those ids.
 
         Returns ``(dist, match)``, each (Q, nv_local, nh, R); ``dist`` is
         None when the merge consumes match lines only.
@@ -302,7 +408,8 @@ class FunctionalSimulator:
         if cycle_keys is None:
             cycle_keys = variation.split_for_queries(key, n_tiles)
         noisy = variation.apply_c2c_banked(grid, cfg.device, bits,
-                                           cycle_keys, v_offset)
+                                           cycle_keys, v_offset,
+                                           bank_ids=bank_ids)
         dist, match = jax.vmap(run)(noisy, qt)
         match = match.reshape(n_tiles * tile, *match.shape[2:])[:Q]
         if dist is not None:

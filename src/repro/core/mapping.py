@@ -83,3 +83,63 @@ def row_valid_mask(spec: GridSpec) -> jax.Array:
 def global_row_index(spec: GridSpec) -> jax.Array:
     """(nv, R) global entry index of each subarray row."""
     return jnp.arange(spec.padded_K).reshape(spec.nv, spec.R)
+
+
+# ---------------------------------------------------------------------------
+# IVF-style clustered placement (search-cascade stage 1)
+# ---------------------------------------------------------------------------
+def cluster_permutation(values: jax.Array, nv: int, *, n_clusters: int = 0,
+                        iters: int = 4, chunk: int = 65536) -> jax.Array:
+    """Clustered row placement: k-means over the code rows, stable-sorted
+    by cluster id, so similar entries land in contiguous row ranges — i.e.
+    the same nv-bank after ``partition_stored``.  The bank prefilter can
+    then prune whole banks without losing a query's near neighbours.
+
+    values (K, D) code-domain rows (ACAM stores pass range midpoints).
+    Deterministic (strided centroid init, fixed Lloyd iteration count) and
+    jit-friendly; assignment is chunked over ``chunk``-row blocks so the
+    (chunk, n_clusters) distance block — not (K, n_clusters) — bounds
+    memory at millions of rows.
+
+    Returns ``perm`` (K,) int32 with ``placed[i] = orig[perm[i]]``; the
+    stable sort keeps original order within a cluster, so ``nv`` clusters
+    of equal size reproduce identity placement on pre-sorted data.
+    """
+    K, D = values.shape
+    nc = max(1, min(n_clusters or min(nv, 128), K))
+    x = values.astype(jnp.float32)
+    stride = max(1, K // nc)
+    cent = x[::stride][:nc]
+    nc = cent.shape[0]
+
+    def assign(c):
+        cn = jnp.sum(c * c, axis=-1)
+
+        def one(block):
+            # argmin ||b - c||^2 = argmin (||c||^2 - 2 b.c) — ||b||^2 is
+            # constant per row and cannot change the argmin
+            d = cn[None, :] - 2.0 * block @ c.T
+            return jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+        if K <= chunk:
+            return one(x)
+        pad = (-K) % chunk
+        xb = jnp.pad(x, ((0, pad), (0, 0))).reshape(-1, chunk, D)
+        return jax.lax.map(one, xb).reshape(-1)[:K]
+
+    a = assign(cent)
+    for _ in range(iters):
+        sums = jnp.zeros((nc, D), jnp.float32).at[a].add(x)
+        counts = jnp.zeros((nc, 1), jnp.float32).at[a].add(1.0)
+        cent = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cent)
+        a = assign(cent)
+    return jnp.argsort(a, stable=True).astype(jnp.int32)
+
+
+def placement_perm(values: jax.Array, spec: GridSpec) -> jax.Array:
+    """(padded_K,) placement permutation: clustered on the real rows,
+    identity on the padding rows (which stay at the end, so
+    ``row_valid_mask`` is unchanged).  ``placed[i] = orig[perm[i]]``."""
+    perm = cluster_permutation(values, spec.nv)
+    return jnp.concatenate(
+        [perm, jnp.arange(spec.K, spec.padded_K, dtype=jnp.int32)])

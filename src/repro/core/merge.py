@@ -324,6 +324,77 @@ def merge(dist: jax.Array, match: jax.Array, *, match_type: str,
     raise ValueError(f"unknown match_type {match_type!r}")
 
 
+# --------------------------------------------------------------------------
+# Selected-bank merge (search-cascade stage 2): the fused kernel ran only on
+# a gathered (p, nh, R, C) sub-grid; these helpers merge that subset back
+# against the ORIGINAL bank ids so results keep the full-store coordinate
+# frame.  With ``bank_ids = arange(nv)`` (i.e. p = nv, sorted ascending)
+# every helper degenerates bit-for-bit to its full-scan counterpart: the
+# gather is the identity, the scatter writes every position exactly once,
+# and the top-k sees the same flat tensor in the same order.
+# --------------------------------------------------------------------------
+def scatter_match_rows(row: jax.Array, bank_ids: jax.Array,
+                       nv_total: int) -> jax.Array:
+    """(..., p, R) selected-bank 0/1 rows -> (..., nv_total*R) global mask.
+
+    Unselected banks read as unmatched — exactly what the cascade asserts
+    (their stage-1 bound exceeded every selected bank's)."""
+    p, R = row.shape[-2:]
+    cols = (bank_ids[:, None] * R + jnp.arange(R)).reshape(-1)
+    flat = row.reshape(*row.shape[:-2], p * R)
+    out = jnp.zeros((*row.shape[:-2], nv_total * R), row.dtype)
+    return out.at[..., cols].set(flat)
+
+
+def selected_topk(values: jax.Array, k: int, *, largest: bool,
+                  bank_ids: jax.Array, bank_offset=0
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """``local_topk_candidates`` over a gathered (..., p, R) bank subset.
+
+    Returned indices are GLOBAL rows: the flat position maps back through
+    ``bank_ids`` (plus ``bank_offset`` banks on sharded grids, where the
+    ids are shard-local).  ``bank_ids`` must be sorted ascending so stable
+    top-k tie-breaking matches the full-scan comparator."""
+    p, R = values.shape[-2:]
+    flat = values.reshape(*values.shape[:-2], -1)
+    kl = max(1, min(k, flat.shape[-1]))
+    sign = 1.0 if largest else -1.0
+    v, idx = jax.lax.top_k(sign * flat, kl)
+    bank = jnp.take(bank_ids, idx // R) + bank_offset
+    return sign * v, bank * R + idx % R
+
+
+def merge_selected(dist: jax.Array, match: jax.Array, bank_ids: jax.Array, *,
+                   nv_total: int, match_type: str, h_merge: str,
+                   v_merge: str, match_param: int, sensing_limit: float = 0.0,
+                   threshold: float = 0.0) -> Tuple[jax.Array, jax.Array]:
+    """``merge`` for selected-bank results (..., p, nh, R) against a
+    ``nv_total``-bank store.  Same (indices, mask) contract: indices are
+    global rows of the FULL store; the mask spans all nv_total*R rows."""
+    k = max(1, match_param)
+
+    if match_type in ("exact", "threshold"):
+        if v_merge != "gather":
+            raise ValueError(f"{match_type} match uses gather v-merge")
+        row = h_reduce_match(dist, match, match_type=match_type,
+                             h_merge=h_merge, sensing_limit=sensing_limit,
+                             threshold=threshold)
+        mask = scatter_match_rows(row, bank_ids, nv_total)
+        return first_k_indices(mask, k), mask
+
+    if match_type == "best":
+        if v_merge != "comparator":
+            raise ValueError("best match requires comparator v-merge")
+        values, largest = h_reduce_best(dist, match, h_merge=h_merge)
+        vals, idx = selected_topk(values, k, largest=largest,
+                                  bank_ids=bank_ids)
+        vals, idx = pad_topk(vals, idx, k, largest=largest)
+        K = nv_total * match.shape[-1]
+        return finalize_topk(vals, idx, largest=largest, K=K)
+
+    raise ValueError(f"unknown match_type {match_type!r}")
+
+
 def put_topk_mask(mask: jax.Array, idx: jax.Array) -> jax.Array:
     """Scatter 1.0 at top-k indices (ignoring -1 padding)."""
     safe = jnp.maximum(idx, 0)

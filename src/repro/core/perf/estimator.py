@@ -145,13 +145,68 @@ def estimate_arch(config: CAMConfig, K: int, N: int) -> ArchSpecifics:
     return a
 
 
+def predict_prefilter(config: CAMConfig, arch: ArchSpecifics,
+                      sig_bits: int) -> PerfResult:
+    """Stage-1 prefilter slab prediction (search cascade).
+
+    The bank prefilter is a separate 1-bit TCAM slab holding one
+    ``sig_bits``-wide signature per stored row (one R-row subarray column
+    group per bank, ``ceil(sig_bits / C)`` segments).  All signature
+    subarrays search in parallel; the Hamming bank scores reduce inside
+    the slab, so no extra merge hierarchy is billed.
+    """
+    cfg = config
+    try:
+        cell = get_cell_model(cfg.device.device, "tcam", 1)
+    except KeyError:
+        # device without a 1-bit TCAM entry: fall back to the configured
+        # cell so the slab is still billed (conservatively)
+        cell = get_cell_model(cfg.device.device, cfg.circuit.cell_type,
+                              cfg.app.data_bits)
+    R, C = cfg.circuit.rows, cfg.circuit.cols
+    Cs = max(1, min(C, sig_bits))
+    n_sub = arch.spec.nv * math.ceil(sig_bits / Cs)
+    t = cell.search_latency(R, Cs)
+    e = cell.search_energy_pj(R, Cs) * n_sub
+    a = cell.area_um2(R, Cs) * n_sub
+    return PerfResult(latency_ns=t, energy_pj=e, area_um2=a,
+                      breakdown={"prefilter": {"latency_ns": t,
+                                               "energy_pj": e,
+                                               "area_um2": a}})
+
+
+def cascade_billing(config: CAMConfig,
+                    arch: ArchSpecifics) -> "tuple[float, int]":
+    """(searched_fraction, prefilter_bits) the configured cascade implies.
+
+    ``(1.0, 0)`` when the cascade is off — the values under which
+    ``predict_search`` is bitwise identical to the full-scan prediction
+    (the Table IV anchor).
+    """
+    sim = config.sim
+    if not sim.cascade_enabled():
+        return 1.0, 0
+    spec = arch.spec
+    frac = min(1.0, sim.top_p_banks / max(1, spec.nv))
+    return frac, sim.signature_bits or spec.N
+
+
 def predict_search(config: CAMConfig, arch: ArchSpecifics,
-                   ops_per_query: int = 1) -> PerfResult:
+                   ops_per_query: int = 1, *,
+                   searched_fraction: float = 1.0,
+                   prefilter_bits: int = 0) -> PerfResult:
     """Stage 2: hierarchical performance prediction for one query.
 
     ``ops_per_query`` models applications whose logical operation issues
     multiple sequential CAM search cycles (e.g. the DRL sampling routine
     [4] — see benchmarks/table4_validation.py).
+
+    ``searched_fraction`` bills the search cascade: only that fraction of
+    the banks fires per query, scaling search ENERGY (latency and area are
+    unchanged — the whole store still exists and the critical path is the
+    slowest surviving bank).  ``prefilter_bits > 0`` additionally bills
+    the stage-1 signature slab (``predict_prefilter``) in series.  The
+    defaults (1.0, 0) are bitwise the full-scan prediction.
     """
     cfg = config
     cell = get_cell_model(cfg.device.device, cfg.circuit.cell_type,
@@ -188,6 +243,18 @@ def predict_search(config: CAMConfig, arch: ArchSpecifics,
             "energy_pj": e_p + ic["energy_pj"] * n_here,
             "area_um2": a_p + ic["area_um2"] * n_here}
         child_area = child_area * lvl.n_children + a_p / max(1, n_here)
+
+    if searched_fraction != 1.0:
+        f = max(0.0, min(1.0, searched_fraction))
+        e *= f
+        for lvl_b in breakdown.values():
+            lvl_b["energy_pj"] *= f
+    if prefilter_bits > 0:
+        pre = predict_prefilter(cfg, arch, prefilter_bits)
+        t += pre.latency_ns
+        e += pre.energy_pj
+        area += pre.area_um2
+        breakdown["prefilter"] = pre.breakdown["prefilter"]
 
     return PerfResult(latency_ns=t * ops_per_query,
                       energy_pj=e * ops_per_query,
@@ -238,7 +305,9 @@ def sharded_merge_bytes(config: CAMConfig, arch: ArchSpecifics,
 def predict_search_sharded(config: CAMConfig, arch: ArchSpecifics,
                            mesh: Union[int, "interconnect.MeshSpec"], *,
                            queries_per_batch: int = 1,
-                           ops_per_query: int = 1) -> PerfResult:
+                           ops_per_query: int = 1,
+                           searched_fraction: float = 1.0,
+                           prefilter_bits: int = 0) -> PerfResult:
     """Mesh-level performance prediction: per-device hierarchy rollup plus
     the cross-device merge, exactly as ``ShardedCAMSimulator`` executes it.
 
@@ -264,7 +333,12 @@ def predict_search_sharded(config: CAMConfig, arch: ArchSpecifics,
     # merely numerically close
     local_arch = arch if d == 1 else estimate_arch(
         cfg, math.ceil(spec.nv / d) * spec.R, spec.N)
-    local = predict_search(cfg, local_arch, ops_per_query=1)
+    # the cascade knobs bill per device: each device searches the same
+    # FRACTION of its local banks (p_loc/nv_loc == top_p/nv up to the
+    # ceil) and holds its own shard of the signature slab
+    local = predict_search(cfg, local_arch, ops_per_query=1,
+                           searched_fraction=searched_fraction,
+                           prefilter_bits=prefilter_bits)
 
     Q = max(1, queries_per_batch)
     link = mesh.link_model
@@ -304,18 +378,35 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
                 mesh: Optional[Union[int, "interconnect.MeshSpec"]] = None,
                 n_queries: int = 1, include_write: bool = False,
                 ops_per_query: int = 1, clock_hz: Optional[float] = None,
-                queries_per_batch: int = 1) -> "PerfReport":
+                queries_per_batch: int = 1,
+                searched_fraction: Optional[float] = None,
+                prefilter_bits: Optional[int] = None) -> "PerfReport":
     """The ``eval_perf`` report shared by ``CAMASim`` (mesh=None: single
     chip) and ``ShardedCAMSimulator`` (mesh = its bank-axis size) — a
     ``PerfReport`` (dict subclass; historical keys preserved verbatim).
 
     ``clock_hz``: system clock — each search cycle is quantized to
-    max(combinational search latency, one clock period)."""
+    max(combinational search latency, one clock period).
+
+    ``searched_fraction`` / ``prefilter_bits`` default to whatever the
+    config's search cascade implies (``cascade_billing``) — i.e. (1.0, 0),
+    the exact full-scan prediction, when the cascade is off; pass them
+    explicitly to sweep recall/latency trade-offs before any write."""
+    if searched_fraction is None or prefilter_bits is None:
+        f, b = cascade_billing(config, arch)
+        if searched_fraction is None:
+            searched_fraction = f
+        if prefilter_bits is None:
+            prefilter_bits = b
     if mesh is None:
-        search = predict_search(config, arch, ops_per_query=1)
+        search = predict_search(config, arch, ops_per_query=1,
+                                searched_fraction=searched_fraction,
+                                prefilter_bits=prefilter_bits)
     else:
         search = predict_search_sharded(
-            config, arch, mesh, queries_per_batch=queries_per_batch)
+            config, arch, mesh, queries_per_batch=queries_per_batch,
+            searched_fraction=searched_fraction,
+            prefilter_bits=prefilter_bits)
     cycle = search.latency_ns
     if clock_hz is not None:
         cycle = max(cycle, 1e9 / clock_hz)

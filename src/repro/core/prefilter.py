@@ -1,0 +1,129 @@
+"""Stage-1 bank prefilter for the two-stage search cascade.
+
+Every stored row gets a bit-packed *signature* derived from its clean code
+(before D2D programming noise) by thresholding a strided subset of its
+dimensions; signatures for a bank's R rows pack into an (R, W) uint32 block.
+At query time the same thresholding produces a (Q, W) query signature and a
+batched XOR+popcount (``ops.hamming_packed``) scores every bank as the
+minimum row Hamming distance; only the ``top_p_banks`` best-scoring banks
+see the exact fused kernel.
+
+Scores are *margin-normalized* per query (each query's best bank is shifted
+to margin 0) before the per-batch min-reduction so that one easy query
+cannot drown out another query's only good bank.  Selected bank ids are
+returned sorted ascending; with ``p = nv`` the selection is therefore
+``arange(nv)`` exactly, which is what makes the p=nv cascade bit-identical
+to the full scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+from .mapping import GridSpec
+
+# Sentinel score for invalid (padding) rows: larger than any real Hamming
+# distance (signatures are at most a few thousand bits wide) while leaving
+# int32 headroom for the margin subtraction.
+_INVALID_SCORE = 1 << 24
+
+
+def signature_positions(N: int, signature_bits: int) -> jax.Array:
+    """Static column subset sampled into the signature.
+
+    ``signature_bits=0`` (or >= N) uses every dimension — one signature bit
+    per stored dim; otherwise a strided subset keeps the packed width at
+    ``ceil(signature_bits / 32)`` words.
+    """
+    if signature_bits <= 0 or signature_bits >= N:
+        return jnp.arange(N)
+    return jnp.arange(signature_bits) * N // signature_bits
+
+
+def signature_values(codes: jax.Array) -> jax.Array:
+    """(K, N) point codes pass through; (K, N, 2) ACAM [lo, hi] ranges
+    collapse to their midpoints."""
+    if codes.ndim == 3:
+        return (codes[..., 0] + codes[..., 1]) * 0.5
+    return codes
+
+
+def signature_threshold(values: jax.Array, cell_type: str,
+                        data_bits: int) -> jax.Array:
+    """Scalar binarization threshold in the quantized code domain.
+
+    Binary cells store 0/1 so 0.5 splits them; MCAM codes live in
+    [0, 2^bits - 1] so the level midpoint splits them; ACAM passes raw
+    values through quantization, so fall back to the data mean.
+    """
+    if cell_type in ("bcam", "tcam"):
+        return jnp.float32(0.5)
+    if cell_type == "mcam":
+        return jnp.float32(((1 << data_bits) - 1) / 2.0)
+    return jnp.mean(values.astype(jnp.float32))
+
+
+def _binarize_pack(values: jax.Array, thr: jax.Array,
+                   positions: jax.Array) -> jax.Array:
+    """(..., N) values -> (..., W) uint32 packed sign bits at ``positions``."""
+    sel = jnp.take(values, positions, axis=-1)
+    bits = (sel > thr).astype(jnp.int32)
+    return kops.pack_bits(bits)
+
+
+def row_signatures(values: jax.Array, thr: jax.Array, spec: GridSpec,
+                   signature_bits: int) -> jax.Array:
+    """(K, N) placed code values -> (nv, R, W) uint32 bank signatures.
+
+    Padding rows pack to all-zero words; they are excluded from scoring via
+    ``row_valid`` in ``bank_scores`` rather than by their signature.
+    """
+    pos = signature_positions(spec.N, signature_bits)
+    packed = _binarize_pack(values, thr, pos)           # (K, W)
+    W = packed.shape[-1]
+    packed = jnp.pad(packed, ((0, spec.padded_K - spec.K), (0, 0)))
+    return packed.reshape(spec.nv, spec.R, W)
+
+
+def query_signatures(qcodes: jax.Array, thr: jax.Array, spec: GridSpec,
+                     signature_bits: int) -> jax.Array:
+    """(Q, N) quantized query codes -> (Q, W) uint32 query signatures."""
+    pos = signature_positions(spec.N, signature_bits)
+    return _binarize_pack(qcodes, thr, pos)
+
+
+def bank_scores(sigs: jax.Array, qsig: jax.Array, row_valid: jax.Array, *,
+                use_kernel: bool = True) -> jax.Array:
+    """(nv, R, W) signatures x (Q, W) queries -> (Q, nv) int32 bank scores.
+
+    A bank's score is the minimum signature Hamming distance over its valid
+    rows — the bank-level lower bound the router prunes on.  Banks with no
+    valid rows score ``_INVALID_SCORE``.
+    """
+    nv, R, W = sigs.shape
+    flat = sigs.reshape(nv * R, W)
+    if use_kernel:
+        d = kops.hamming_packed(flat, qsig, n_valid_bits=32 * W)
+    else:
+        x = jnp.bitwise_xor(flat[None, :, :], qsig[:, None, :])
+        d = jnp.sum(jax.lax.population_count(x), axis=-1, dtype=jnp.int32)
+    d = d.reshape(-1, nv, R)
+    d = jnp.where(row_valid[None] > 0, d, _INVALID_SCORE)
+    return jnp.min(d, axis=-1)
+
+
+def select_banks(scores: jax.Array, p: int) -> jax.Array:
+    """(Q, nv) batch scores -> (p,) sorted ascending bank ids.
+
+    Per-query margin normalization (subtract each query's best bank score)
+    then a min-reduction across the batch: a bank survives if it is within
+    the batch's tightest margin anywhere.  Every query's argmin bank has
+    margin 0, so each query's best bank is always selected (up to ties
+    beyond ``p``).  Sorted ascending so ``p = nv`` yields ``arange(nv)``.
+    """
+    margin = scores - jnp.min(scores, axis=-1, keepdims=True)
+    batch = jnp.min(margin, axis=0)                     # (nv,)
+    _, ids = jax.lax.top_k(-batch, p)
+    return jnp.sort(ids).astype(jnp.int32)

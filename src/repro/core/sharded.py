@@ -45,7 +45,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch.mesh import compat_shard_map, make_cam_mesh
-from . import merge, variation
+from . import merge, prefilter, variation
 from .config import CAMConfig
 from .functional import (CAMState, FunctionalSimulator,
                          resolve_sim_overrides)
@@ -116,11 +116,13 @@ class ShardedCAMSimulator:
         from repro.runtime.sharding import cam_state_shardings
         nv = state.grid.shape[0]
         pad = (-nv) % self.n_banks
-        grid, row_valid = state.grid, state.row_valid
+        grid, row_valid, sigs = state.grid, state.row_valid, state.sigs
         if pad:
             grid = jnp.pad(grid,
                            ((0, pad),) + ((0, 0),) * (grid.ndim - 1))
             row_valid = jnp.pad(row_valid, ((0, pad), (0, 0)))
+            if sigs is not None:
+                sigs = jnp.pad(sigs, ((0, pad), (0, 0), (0, 0)))
         sh = cam_state_shardings(self.mesh, grid.ndim)
         return CAMState(
             grid=jax.device_put(grid, sh["grid"]),
@@ -128,7 +130,13 @@ class ShardedCAMSimulator:
             hi=jax.device_put(state.hi, sh["hi"]),
             spec=state.spec,
             col_valid=jax.device_put(state.col_valid, sh["col_valid"]),
-            row_valid=jax.device_put(row_valid, sh["row_valid"]))
+            row_valid=jax.device_put(row_valid, sh["row_valid"]),
+            sigs=(jax.device_put(sigs, sh["sigs"])
+                  if sigs is not None else None),
+            sig_thr=(jax.device_put(state.sig_thr, sh["sig_thr"])
+                     if state.sig_thr is not None else None),
+            perm=(jax.device_put(state.perm, sh["perm"])
+                  if state.perm is not None else None))
 
     # ------------------------------------------------------------- perf
     def plan(self, entries: int, dims: int) -> ArchSpecifics:
@@ -144,7 +152,9 @@ class ShardedCAMSimulator:
                   clock_hz: Optional[float] = None,
                   link: Union[str, MeshLink] = "on_package",
                   queries_per_batch: int = 1,
-                  mesh: Optional[Union[int, MeshSpec]] = None):
+                  mesh: Optional[Union[int, MeshSpec]] = None,
+                  searched_fraction: Optional[float] = None,
+                  prefilter_bits: Optional[int] = None):
         """Mesh-level hardware performance prediction for the written
         store: per-device hierarchy rollup + cross-device merge over
         chip-to-chip ``link``s, for the topology this simulator executes
@@ -159,7 +169,9 @@ class ShardedCAMSimulator:
             self.config, self.arch_specifics(),
             mesh=mesh, n_queries=n_queries,
             include_write=include_write, ops_per_query=ops_per_query,
-            clock_hz=clock_hz, queries_per_batch=queries_per_batch)
+            clock_hz=clock_hz, queries_per_batch=queries_per_batch,
+            searched_fraction=searched_fraction,
+            prefilter_bits=prefilter_bits)
 
     # --------------------------------------------------- shard-local pieces
     # Backend-protocol delegation: the same shard-local entry points the
@@ -199,12 +211,21 @@ class ShardedCAMSimulator:
 
     @partial(jax.jit, static_argnums=(0,))
     def _query_jit(self, state: CAMState, queries, key):
+        cfg = self.config
+        qcodes = self.sim.query_codes(state, queries)        # (Q, N)
         qseg = self.sim.segment_queries(state, queries)      # (Q, nh, C)
-        idx, mask = self._sharded_search(state, qseg, key)
-        return idx, mask[..., :state.spec.padded_K]
+        qsig = None
+        if cfg.sim.cascade_enabled() and state.sigs is not None:
+            # stage-1 query signatures are cheap and replicated-friendly:
+            # computed once outside the shard_map, sharded like the batch
+            qsig = prefilter.query_signatures(
+                qcodes, state.sig_thr, state.spec, cfg.sim.signature_bits)
+        idx, mask = self._sharded_search(state, qseg, qsig, key)
+        return self.sim._to_original(state, idx,
+                                     mask[..., :state.spec.padded_K])
 
     # -------------------------------------------------------- shard_map
-    def _sharded_search(self, state: CAMState, qseg, key):
+    def _sharded_search(self, state: CAMState, qseg, qsig, key):
         cfg = self.config
         ba, qa = self.bank_axis, self.query_axis
         nv_pad, R = state.grid.shape[0], state.grid.shape[2]
@@ -218,26 +239,60 @@ class ShardedCAMSimulator:
         tile = min(self.sim.c2c_query_tile, Q) if use_c2c else 1
         n_tiles = -(-Q // tile) if use_c2c else 0
 
-        def body(grid, row_valid, col_valid, qseg_l, key):
-            b_idx = jax.lax.axis_index(ba)
-            cycle_keys = None
-            if use_c2c:
-                # the cycle keys are a function of the GLOBAL tile index:
-                # split once for all tiles, slice this query shard's range
-                gkeys = variation.split_for_queries(key, n_tiles)
-                if self.n_query > 1:
-                    tiles_loc = n_tiles // self.n_query
-                    q_idx = jax.lax.axis_index(qa)
-                    cycle_keys = jax.lax.dynamic_slice_in_dim(
-                        gkeys, q_idx * tiles_loc, tiles_loc)
-                else:
-                    cycle_keys = gkeys
-            dist, match = self.sim.search_shard(
-                grid, qseg_l, col_valid=col_valid, row_valid=row_valid,
-                key=key, v_offset=b_idx * nv_loc, cycle_keys=cycle_keys)
-            return self._combine(dist, match, b_idx, nv_loc, R, K_pad, k)
+        def cycle_keys_for(key):
+            if not use_c2c:
+                return None
+            # the cycle keys are a function of the GLOBAL tile index:
+            # split once for all tiles, slice this query shard's range
+            gkeys = variation.split_for_queries(key, n_tiles)
+            if self.n_query > 1:
+                tiles_loc = n_tiles // self.n_query
+                q_idx = jax.lax.axis_index(qa)
+                return jax.lax.dynamic_slice_in_dim(
+                    gkeys, q_idx * tiles_loc, tiles_loc)
+            return gkeys
 
         q_spec = P(qa) if self.n_query > 1 else P()
+
+        if qsig is not None:
+            # per-device routing: each device prunes its OWN nv_loc banks
+            # down to p_loc; the global budget splits evenly across the
+            # bank axis, so top_p_banks >= nv gives p_loc = nv_loc (full
+            # local scan) and the cascade degenerates to the exact path
+            p_loc = min(nv_loc,
+                        -(-min(cfg.sim.top_p_banks, state.spec.nv)
+                          // self.n_banks))
+
+            def body(grid, row_valid, sigs, col_valid, qseg_l, qsig_l, key):
+                b_idx = jax.lax.axis_index(ba)
+                scores = prefilter.bank_scores(
+                    sigs, qsig_l, row_valid, use_kernel=self.sim.use_kernel)
+                local_ids = prefilter.select_banks(scores, p_loc)
+                sub_grid = jnp.take(grid, local_ids, axis=0)
+                sub_rv = jnp.take(row_valid, local_ids, axis=0)
+                # C2C noise folds by GLOBAL bank id of each selected bank
+                dist, match = self.sim.search_shard(
+                    sub_grid, qseg_l, col_valid=col_valid, row_valid=sub_rv,
+                    key=key, cycle_keys=cycle_keys_for(key),
+                    bank_ids=b_idx * nv_loc + local_ids)
+                return self._combine_selected(dist, match, local_ids,
+                                              b_idx, nv_loc, R, K_pad, k)
+
+            return compat_shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(ba), P(ba), P(ba), P(), q_spec, q_spec, P()),
+                out_specs=(q_spec, q_spec))(
+                state.grid, state.row_valid, state.sigs, state.col_valid,
+                qseg, qsig, key)
+
+        def body(grid, row_valid, col_valid, qseg_l, key):
+            b_idx = jax.lax.axis_index(ba)
+            dist, match = self.sim.search_shard(
+                grid, qseg_l, col_valid=col_valid, row_valid=row_valid,
+                key=key, v_offset=b_idx * nv_loc,
+                cycle_keys=cycle_keys_for(key))
+            return self._combine(dist, match, b_idx, nv_loc, R, K_pad, k)
+
         return compat_shard_map(
             body, mesh=self.mesh,
             in_specs=(P(ba), P(ba), P(), q_spec, P()),
@@ -281,7 +336,13 @@ class ShardedCAMSimulator:
             dist, match, h_merge=cfg.arch.h_merge, dmax=dmax)
         vals, gidx = merge.local_topk_candidates(
             values, k, largest=largest, row_offset=b_idx * nv_loc * R)
-        # comparator tree: gather only the candidate scores + indices
+        return self._comparator_tail(vals, gidx, k, K_pad, largest)
+
+    def _comparator_tail(self, vals, gidx, k: int, K_pad: int,
+                         largest: bool):
+        """Cross-device comparator tree: gather only the candidate scores
+        + global indices, stable re-rank, finalize."""
+        ba = self.bank_axis
         av = jax.lax.all_gather(vals, ba)            # (n_banks, Q, k_l)
         ai = jax.lax.all_gather(gidx, ba)
         av = jnp.moveaxis(av, 0, -2).reshape(*vals.shape[:-1], -1)
@@ -289,3 +350,47 @@ class ShardedCAMSimulator:
         best_v, best_i = merge.rerank_candidates(av, ai, k, largest=largest)
         return merge.finalize_topk(best_v, best_i, largest=largest,
                                    K=K_pad)
+
+    def _combine_selected(self, dist, match, local_ids, b_idx, nv_loc: int,
+                          R: int, K_pad: int, k: int):
+        """``_combine`` for this device's routed (p_loc, nh, R) bank
+        subset: scatter/offset results back into the device's full
+        (nv_loc, R) coordinate frame, then the SAME cross-device merge as
+        the full scan (the collective payload shapes are unchanged, so
+        ``merge.shard_merge_payload`` still models them).  With
+        ``p_loc = nv_loc`` and sorted ids this is bit-identical to
+        ``_combine``.
+        """
+        cfg = self.config
+        ba = self.bank_axis
+        thr = (float(cfg.app.match_param)
+               if cfg.app.match_type == "threshold" else 0.0)
+
+        if cfg.app.match_type in ("exact", "threshold"):
+            if cfg.arch.v_merge != "gather":
+                raise ValueError(
+                    f"{cfg.app.match_type} match uses gather v-merge")
+            row = merge.h_reduce_match(
+                dist, match, match_type=cfg.app.match_type,
+                h_merge=cfg.arch.h_merge,
+                sensing_limit=cfg.circuit.sensing_limit, threshold=thr)
+            # unselected local banks read as unmatched in the gathered rows
+            full = merge.scatter_match_rows(row, local_ids, nv_loc)
+            rows = full.reshape(*full.shape[:-1], nv_loc, R)
+            rows = jax.lax.all_gather(rows, ba, axis=1, tiled=True)
+            mask = merge.v_merge_gather(rows)               # (Q, K_pad)
+            return merge.first_k_indices(mask, k), mask
+
+        if cfg.app.match_type != "best":
+            raise ValueError(f"unknown match_type {cfg.app.match_type!r}")
+        if cfg.arch.v_merge != "comparator":
+            raise ValueError("best match requires comparator v-merge")
+        dmax = None
+        if cfg.arch.h_merge == "voting":
+            dmax = jax.lax.pmax(merge.voting_dmax(dist), ba)
+        values, largest = merge.h_reduce_best(
+            dist, match, h_merge=cfg.arch.h_merge, dmax=dmax)
+        vals, gidx = merge.selected_topk(
+            values, k, largest=largest, bank_ids=local_ids,
+            bank_offset=b_idx * nv_loc)
+        return self._comparator_tail(vals, gidx, k, K_pad, largest)

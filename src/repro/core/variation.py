@@ -102,8 +102,8 @@ def apply_c2c_batched(codes: jax.Array, cfg: DeviceConfig, bits: int,
 
 
 def apply_c2c_banked(codes: jax.Array, cfg: DeviceConfig, bits: int,
-                     keys: jax.Array, v_offset: jax.Array | int = 0
-                     ) -> jax.Array:
+                     keys: jax.Array, v_offset: jax.Array | int = 0,
+                     bank_ids: Optional[jax.Array] = None) -> jax.Array:
     """C2C noise with a per-bank RNG fold (the multi-device draw).
 
     The noise for bank ``v`` of cycle ``t`` is drawn from
@@ -114,12 +114,18 @@ def apply_c2c_banked(codes: jax.Array, cfg: DeviceConfig, bits: int,
     split-invariance (one (nv, nh, R, C) normal draw cannot be sliced into
     per-shard draws), which is why the sharded simulator uses this fold.
 
+    ``bank_ids`` overrides the contiguous ``v_offset + arange(nv)`` fold
+    ids for *gathered* (non-contiguous) bank subsets — the search cascade
+    passes the selected banks' ORIGINAL ids so each surviving bank draws
+    exactly the noise it would in a full scan.
+
     codes (nv, nh, R, C[, 2]); keys (T, 2) -> (T, *codes.shape).
     """
     if cfg.variation not in ("c2c", "both"):
         return jnp.broadcast_to(codes, (keys.shape[0], *codes.shape))
     nv = codes.shape[0]
-    bank_ids = jnp.arange(nv) + v_offset
+    if bank_ids is None:
+        bank_ids = jnp.arange(nv) + v_offset
 
     def one_bank(key: jax.Array, v: jax.Array, bank: jax.Array) -> jax.Array:
         sigma = _sigma_for(bank, cfg, bits)

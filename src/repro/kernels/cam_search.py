@@ -73,12 +73,42 @@ materializes a (Qt, R, C) block in registers on the VPU.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 _INF = float("inf")
+
+# Conservative per-step VMEM budget for the default Q-tile derivation: well
+# under the ~16 MiB physical budget so double-buffered pipelines and the
+# (Qt, R, C) register blocks of the VPU distances still fit.
+VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+# Interpret-mode grids pay per-step dispatch overhead; below this batch size
+# the identical jnp tile math wins (BENCH: kernel_acam_range_q1 at 0.18x).
+SMALL_Q_CROSSOVER = 4
+
+
+def default_q_tile(rows: int, cols: int, planes: int = 1, *,
+                   budget_bytes: int = VMEM_BUDGET_BYTES) -> int:
+    """Default fused-kernel Q-tile from the VMEM working-set formula.
+
+    The module docstring's per-step working set is
+    4·(planes·R·C + Qt·C + C + Qt·R) bytes (f32), and past the point where
+    the (Qt, C) query tile / (Qt, R) output tile approach the stored tile
+    in size the kernel stops being stored-stream-bound — so the tile is
+    sized to the stored planes (``stream``), clamped to what the budget
+    allows (``cap``), floored at 8 (sublane granularity) and capped at 256,
+    then rounded down to a power of two for friendly grid divisions.
+    ``planes`` is 1 for point-code grids, 2 for ACAM [lo, hi] grids.
+    """
+    words = budget_bytes // 4
+    stream = (planes * rows * cols) // (rows + cols)
+    cap = (words - planes * rows * cols - cols) // (rows + cols)
+    qt = min(max(stream, 8), max(cap, 1), 256)
+    return max(1, 1 << (int(qt).bit_length() - 1))
 
 
 def _dist_block(stored, q, valid, distance: str):
@@ -168,17 +198,21 @@ def _batched_kernel(stored_ref, query_ref, valid_ref, out_ref, *,
                    static_argnames=("distance", "q_tile", "interpret"))
 def cam_search_batched_pallas(stored: jax.Array, queries: jax.Array,
                               col_valid: jax.Array, *,
-                              distance: str = "l2", q_tile: int = 32,
+                              distance: str = "l2",
+                              q_tile: Optional[int] = None,
                               interpret: bool = False) -> jax.Array:
     """stored (nv, nh, R, C), queries (Q, nh, C), col_valid (nh, C)
     -> dist (Q, nv, nh, R).
 
     The stored grid is streamed from HBM once for the whole query batch
     (Q-tile axis innermost; see module docstring for the block layout).
+    ``q_tile=None`` derives the tile from ``default_q_tile(R, C)``.
     """
     nv, nh, R, C = stored.shape
     Q = queries.shape[0]
     assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
+    if q_tile is None:
+        q_tile = default_q_tile(R, C)
     qt = max(1, min(q_tile, Q))
     pad = (-Q) % qt
     if pad:
@@ -243,16 +277,19 @@ def _fused_kernel(stored_ref, query_ref, valid_ref, rowv_ref, *out_refs,
 
 def _fused_driver(kernel_body, stored_planes, queries: jax.Array,
                   col_valid: jax.Array, row_valid: jax.Array, *,
-                  q_tile: int, want_dist: bool, interpret: bool):
+                  q_tile: Optional[int], want_dist: bool, interpret: bool):
     """Shared scaffolding for the fused batched kernels: Q-tile clamp/pad,
     the (nv, nh, Q/Qt) grid with the Q-tile axis innermost, BlockSpecs
     (one (1, 1, R, C) resident spec per stored plane), pallas_call, and
     the [:Q] unpad.  ``stored_planes`` is (stored,) for point-code grids
-    and (lo, hi) for ACAM range grids."""
+    and (lo, hi) for ACAM range grids.  ``q_tile=None`` derives the tile
+    from the VMEM working-set formula (``default_q_tile``)."""
     nv, nh, R, C = stored_planes[0].shape
     Q = queries.shape[0]
     assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
     assert row_valid.shape == (nv, R), (row_valid.shape, (nv, R))
+    if q_tile is None:
+        q_tile = default_q_tile(R, C, len(stored_planes))
     qt = max(1, min(q_tile, Q))
     pad = (-Q) % qt
     if pad:
@@ -288,7 +325,8 @@ def cam_search_fused_pallas(stored: jax.Array, queries: jax.Array,
                             col_valid: jax.Array, row_valid: jax.Array, *,
                             distance: str = "l2", sensing: str = "best",
                             sensing_limit: float = 0.0,
-                            threshold: float = 0.0, q_tile: int = 32,
+                            threshold: float = 0.0,
+                            q_tile: Optional[int] = None,
                             want_dist: bool = True,
                             interpret: bool = False):
     """Batched search + in-kernel sense amplifier.
@@ -342,7 +380,8 @@ def cam_range_fused_pallas(stored_lo: jax.Array, stored_hi: jax.Array,
                            queries: jax.Array, col_valid: jax.Array,
                            row_valid: jax.Array, *, sensing: str = "exact",
                            sensing_limit: float = 0.0,
-                           threshold: float = 0.0, q_tile: int = 32,
+                           threshold: float = 0.0,
+                           q_tile: Optional[int] = None,
                            want_dist: bool = True,
                            interpret: bool = False):
     """Batched ACAM range search + in-kernel sense amplifier.
@@ -368,3 +407,51 @@ def cam_range_fused_pallas(stored_lo: jax.Array, stored_hi: jax.Array,
     return _fused_driver(body, (stored_lo, stored_hi), queries, col_valid,
                          row_valid, q_tile=q_tile, want_dist=want_dist,
                          interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# jnp twin of the fused kernels (small-batch interpret-mode dispatch target)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("distance", "sensing", "sensing_limit",
+                                    "threshold", "want_dist"))
+def cam_fused_reference(stored_planes, queries: jax.Array,
+                        col_valid: jax.Array, row_valid: jax.Array, *,
+                        distance: str, sensing: str,
+                        sensing_limit: float = 0.0, threshold: float = 0.0,
+                        want_dist: bool = True):
+    """Pure-jnp twin of ``cam_search_fused_pallas`` / ``cam_range_fused_
+    pallas``, built from the SAME per-tile functions the kernel bodies call
+    (``_dist_block_batched`` / ``_range_block_batched`` / ``_sense_block``)
+    vmapped over the (nv, nh) grid — so its results are the kernels', by
+    construction.  ``ops._fused_call`` dispatches here for interpret-mode
+    batches below ``SMALL_Q_CROSSOVER``, where per-grid-step emulation
+    overhead dominates (BENCH: kernel_acam_range_q1 ran at 0.18x of jnp).
+
+    ``stored_planes``: (stored,) point grids or (lo, hi) for
+    ``distance='range'``, each (nv, nh, R, C); same outputs as the kernels.
+    """
+    planes = tuple(p.astype(jnp.float32) for p in stored_planes)
+    n_planes = len(planes)
+    q = queries.astype(jnp.float32)
+    cv = col_valid.astype(jnp.float32)
+    rv = row_valid.astype(jnp.float32)
+
+    def tile(tile_planes, qseg, valid, rowv):
+        if distance == "range":
+            d = _range_block_batched(tile_planes[0], tile_planes[1], qseg,
+                                     valid)
+        else:
+            d = _dist_block_batched(tile_planes[0], qseg, valid, distance)
+        d = jnp.where(rowv[None, :] > 0, d, _INF)
+        m = _sense_block(d, rowv, sensing, float(sensing_limit),
+                         float(threshold))
+        return d, m
+
+    per_seg = jax.vmap(tile, in_axes=((0,) * n_planes, 1, 0, None),
+                       out_axes=(1, 1))                  # over nh
+    per_bank = jax.vmap(lambda tp, rowv: per_seg(tp, q, cv, rowv),
+                        in_axes=((0,) * n_planes, 0),
+                        out_axes=(1, 1))                 # over nv
+    d, m = per_bank(planes, rv)                          # (Q, nv, nh, R)
+    return (d, m) if want_dist else m

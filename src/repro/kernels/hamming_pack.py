@@ -23,10 +23,13 @@ query batch; the (q_tile, tile_r, W) XOR + popcount runs on the VPU.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .cam_search import default_q_tile
 
 
 def _kernel(stored_ref, query_ref, out_ref):
@@ -70,14 +73,21 @@ def _batched_kernel(stored_ref, query_ref, out_ref):
                    static_argnames=("tile_r", "q_tile", "interpret"))
 def hamming_packed_batched_pallas(stored_packed: jax.Array,
                                   queries_packed: jax.Array, *,
-                                  tile_r: int = 256, q_tile: int = 8,
+                                  tile_r: int = 256,
+                                  q_tile: Optional[int] = None,
                                   interpret: bool = False) -> jax.Array:
-    """stored (R, W) uint32, queries (Q, W) uint32 -> dist (Q, R) int32."""
+    """stored (R, W) uint32, queries (Q, W) uint32 -> dist (Q, R) int32.
+
+    ``q_tile=None`` derives the tile from the same VMEM working-set helper
+    the float kernels use (``cam_search.default_q_tile`` on the row tile;
+    the historical hardcoded 8 was inconsistent with the float default)."""
     R, W = stored_packed.shape
     Q = queries_packed.shape[0]
     assert queries_packed.shape == (Q, W), (queries_packed.shape, (Q, W))
     tile_r = min(tile_r, R)
     assert R % tile_r == 0, (R, tile_r)
+    if q_tile is None:
+        q_tile = default_q_tile(tile_r, W)
     qt = max(1, min(q_tile, Q))
     pad = (-Q) % qt
     if pad:

@@ -15,8 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .cam_search import (cam_range_fused_pallas, cam_search_batched_pallas,
-                         cam_search_fused_pallas, cam_search_pallas)
+from .cam_search import (SMALL_Q_CROSSOVER, cam_fused_reference,
+                         cam_range_fused_pallas, cam_search_batched_pallas,
+                         cam_search_fused_pallas, cam_search_pallas,
+                         default_q_tile)
 from .cam_topk import cam_topk_pallas
 from .hamming_pack import hamming_packed_batched_pallas, hamming_packed_pallas
 
@@ -30,7 +32,7 @@ def _interpret() -> bool:
 # --------------------------------------------------------------------------
 def cam_search(stored: jax.Array, query: jax.Array, *, distance: str = "l2",
                col_valid: Optional[jax.Array] = None,
-               q_tile: int = 32,
+               q_tile: Optional[int] = None,
                interpret: Optional[bool] = None) -> jax.Array:
     """stored (nv, nh, R, C); query (..., nh, C) -> dist (..., nv, nh, R).
 
@@ -75,18 +77,31 @@ def cam_search_vmap(stored: jax.Array, query: jax.Array, *,
 def _fused_call(stored: jax.Array, queries: jax.Array,
                 col_valid: jax.Array, row_valid: jax.Array, *,
                 distance: str, sensing: str, sensing_limit: float,
-                threshold: float, q_tile: int, want_dist: bool,
+                threshold: float, q_tile: Optional[int], want_dist: bool,
                 interpret: bool):
     """Shape-dispatched fused kernel call (shared with the sharded wrapper).
 
     5-D stored grids are ACAM [lo, hi] ranges and require
     ``distance='range'``; the trailing dim is split into two dense (R, C)
     planes before ``pallas_call`` (see ``cam_range_fused_pallas``).
+
+    Interpret-mode batches below ``SMALL_Q_CROSSOVER`` route to
+    ``cam_fused_reference`` — the jnp twin built from the same tile
+    functions — because emulated per-grid-step dispatch dominates tiny
+    batches (BENCH: q1 kernel at 0.18x of jnp).  On a real TPU backend the
+    kernels handle every batch size.
     """
     if (stored.ndim == 5) != (distance == "range"):
         raise ValueError(
             f"distance='range' needs a 5-D [lo, hi] grid and vice versa; "
             f"got distance={distance!r} with stored.ndim={stored.ndim}")
+    if interpret and queries.shape[0] < SMALL_Q_CROSSOVER:
+        planes = ((stored[..., 0], stored[..., 1]) if stored.ndim == 5
+                  else (stored,))
+        return cam_fused_reference(
+            planes, queries, col_valid, row_valid, distance=distance,
+            sensing=sensing, sensing_limit=float(sensing_limit),
+            threshold=float(threshold), want_dist=want_dist)
     if stored.ndim == 5:
         return cam_range_fused_pallas(
             stored[..., 0], stored[..., 1], queries, col_valid, row_valid,
@@ -105,7 +120,7 @@ def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
                      threshold: float = 0.0,
                      col_valid: Optional[jax.Array] = None,
                      row_valid: Optional[jax.Array] = None,
-                     q_tile: int = 32, want_dist: bool = True,
+                     q_tile: Optional[int] = None, want_dist: bool = True,
                      interpret: Optional[bool] = None):
     """Batched search with the sense-and-reduce epilogue fused in-kernel.
 
@@ -134,7 +149,8 @@ def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
                              threshold: float = 0.0,
                              col_valid: Optional[jax.Array] = None,
                              row_valid: Optional[jax.Array] = None,
-                             q_tile: int = 32, want_dist: bool = True,
+                             q_tile: Optional[int] = None,
+                             want_dist: bool = True,
                              interpret: Optional[bool] = None):
     """``cam_search_fused`` with the stored grid's nv axis sharded over
     ``bank_axis`` of ``mesh``: each device streams only its local
@@ -237,10 +253,13 @@ def pack_bits(bits: jax.Array,
 
 
 def hamming_packed(stored_packed: jax.Array, query_packed: jax.Array, *,
-                   n_valid_bits: int, tile_r: int = 256, q_tile: int = 8,
+                   n_valid_bits: int, tile_r: int = 256,
+                   q_tile: Optional[int] = None,
                    interpret: Optional[bool] = None) -> jax.Array:
     """stored (R, W) uint32, query (W,) or (Q, W) uint32 -> dist (R,) or
-    (Q, R).  Batched queries share each resident stored tile."""
+    (Q, R).  Batched queries share each resident stored tile; the default
+    Q-tile comes from the same VMEM working-set helper as the float
+    kernels (``cam_search.default_q_tile``)."""
     itp = _interpret() if interpret is None else interpret
     R, W = stored_packed.shape
     tr = tile_r

@@ -221,6 +221,12 @@ def cam_state_shardings(mesh: Mesh, grid_ndim: int = 4,
         "col_valid": NamedSharding(mesh, PartitionSpec()),
         "lo": NamedSharding(mesh, PartitionSpec()),
         "hi": NamedSharding(mesh, PartitionSpec()),
+        # search-cascade fields: bank signatures shard with their banks;
+        # the scalar threshold and the (padded_K,) placement permutation
+        # replicate (the perm is consumed on the host-side result path)
+        "sigs": NamedSharding(mesh, gspec),
+        "sig_thr": NamedSharding(mesh, PartitionSpec()),
+        "perm": NamedSharding(mesh, PartitionSpec()),
     }
 
 

@@ -1,0 +1,362 @@
+"""Search cascade (bank prefilter + IVF routing): correctness battery.
+
+Guarantee layers:
+  * bit-identity: ``top_p_banks = nv`` (and ``prefilter='off'``) reproduce
+    the full scan bit-for-bit across match types, kernel on/off, and the
+    C2C bank fold — the cascade's disabled/degenerate modes cost nothing
+    in fidelity;
+  * permutation correctness: IVF clustered placement returns indices and
+    masks in the caller's ORIGINAL row order (ties aside, asserted with a
+    tie-free fp store);
+  * routing properties: bank selections are nested in ``top_p_banks``
+    (hypothesis), so recall is monotone; every query's best-scoring bank
+    is always selected;
+  * dispatch/tiling satellites: interpret-mode batches below
+    ``SMALL_Q_CROSSOVER`` take the jnp reference path (and match the
+    kernel path bitwise); ``default_q_tile`` reproduces the historical
+    float (32) and hamming (8) defaults from the VMEM working-set formula;
+  * estimator: ``searched_fraction=1.0 / prefilter_bits=0`` is bitwise
+    the full-scan prediction; energy scales with the fraction; cascade
+    configs auto-bill through ``cascade_billing``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import merge, prefilter
+from repro.core.camasim import CAMASim
+from repro.core.config import CAMConfig
+from repro.core.mapping import cluster_permutation, grid_spec, placement_perm
+from repro.core.perf import (cascade_billing, estimate_arch, perf_report,
+                             predict_search, predict_search_sharded)
+from repro.kernels import ops as kops
+from repro.kernels.cam_search import SMALL_Q_CROSSOVER, default_q_tile
+
+
+def _cfg(app=None, arch=None, circuit=None, device=None, sim=None):
+    d = dict(
+        app=dict(distance="l2", match_type="best", match_param=3,
+                 data_bits=4),
+        arch=dict(h_merge="adder", v_merge="comparator"),
+        circuit=dict(rows=8, cols=8, cell_type="mcam", sensing="best"),
+        device=dict(device="fefet", variation="none"),
+        sim=dict(use_kernel=True))
+    for k, v in (("app", app), ("arch", arch), ("circuit", circuit),
+                 ("device", device), ("sim", sim)):
+        if v:
+            d[k].update(v)
+    return CAMConfig.from_dict(d)
+
+
+def _data(K=100, N=12, Q=9, seed=0):
+    rng = np.random.default_rng(seed)
+    stored = rng.normal(size=(K, N)).astype(np.float32)
+    q = stored[rng.integers(0, K, Q)] + 0.01 * rng.normal(
+        size=(Q, N)).astype(np.float32)
+    return jnp.asarray(stored), jnp.asarray(q)
+
+
+def _run(cfg, stored, queries, wkey=0, qkey=1):
+    sim = CAMASim(cfg)
+    state = sim.write(stored, jax.random.PRNGKey(wkey))
+    idx, mask = sim.query(state, queries, jax.random.PRNGKey(qkey))
+    return np.asarray(idx), np.asarray(mask), state
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of the degenerate cascade
+# ---------------------------------------------------------------------------
+_COMBOS = [
+    dict(app=dict(match_type="exact", distance="hamming", match_param=2),
+         arch=dict(h_merge="and", v_merge="gather"),
+         circuit=dict(sensing="exact", sensing_limit=0.5)),
+    dict(app=dict(match_type="best", distance="l2"),
+         arch=dict(h_merge="adder", v_merge="comparator")),
+    dict(app=dict(match_type="best", distance="l2"),
+         arch=dict(h_merge="voting", v_merge="comparator")),
+    dict(app=dict(match_type="threshold", distance="l1", match_param=6),
+         arch=dict(h_merge="adder", v_merge="gather"),
+         circuit=dict(sensing="threshold")),
+]
+
+
+@pytest.mark.parametrize("combo", range(len(_COMBOS)))
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_top_p_nv_bit_identical(combo, use_kernel):
+    c = _COMBOS[combo]
+    stored, q = _data()
+    base = _cfg(app=c.get("app"), arch=c.get("arch"),
+                circuit=c.get("circuit"), sim=dict(use_kernel=use_kernel))
+    i0, m0, st0 = _run(base, stored, q)
+    nv = st0.spec.nv
+    cas = base.replace(sim=dict(prefilter="signature", top_p_banks=nv))
+    i1, m1, _ = _run(cas, stored, q)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(m0, m1)
+
+
+def test_top_p_nv_bit_identical_c2c_bank_fold():
+    stored, q = _data()
+    base = _cfg(device=dict(variation="both", variation_std=0.1),
+                sim=dict(c2c_fold="bank"))
+    i0, m0, st0 = _run(base, stored, q)
+    cas = base.replace(sim=dict(prefilter="signature",
+                                top_p_banks=st0.spec.nv))
+    i1, m1, _ = _run(cas, stored, q)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(m0, m1)
+
+
+def test_cascade_c2c_grid_fold_rejected():
+    cfg = _cfg(device=dict(variation="c2c", variation_std=0.1),
+               sim=dict(prefilter="signature", top_p_banks=2,
+                        c2c_fold="grid"))
+    with pytest.raises(ValueError, match="c2c_fold"):
+        CAMASim(cfg)
+
+
+def test_ivf_top_p_nv_equals_top_p_none():
+    """Same clustered placement either way: the bank budget alone must not
+    change results when it covers every bank."""
+    stored, q = _data()
+    full = _cfg(sim=dict(prefilter="ivf", signature_bits=8))
+    i0, m0, st0 = _run(full, stored, q)
+    assert st0.perm is not None
+    cas = full.replace(sim=dict(top_p_banks=st0.spec.nv))
+    i1, m1, _ = _run(cas, stored, q)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(m0, m1)
+
+
+def test_ivf_placement_returns_original_indices():
+    """Tie-free fp store: clustered placement must be invisible to the
+    caller — identical indices AND mask to the unclustered store."""
+    stored, q = _data(K=80, N=10, Q=7, seed=3)
+    base = _cfg(app=dict(data_bits=0))    # fp: no quantization ties
+    i0, m0, _ = _run(base, stored, q)
+    ivf = base.replace(sim=dict(prefilter="ivf"))
+    i1, m1, st1 = _run(ivf, stored, q)
+    perm = np.asarray(st1.perm)
+    assert sorted(perm.tolist()) == list(range(st1.spec.padded_K))
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(m0, m1)
+
+
+# ---------------------------------------------------------------------------
+# routing properties
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10 ** 6), st.integers(2, 10), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_select_banks_nested_in_p(seed, nv, q):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.integers(0, 50, size=(q, nv)), jnp.int32)
+    sel = [set(np.asarray(prefilter.select_banks(scores, p)).tolist())
+           for p in range(1, nv + 1)]
+    for a, b in zip(sel, sel[1:]):
+        assert a <= b, (a, b)
+    assert sel[-1] == set(range(nv))
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_select_banks_covers_every_querys_argmin(seed):
+    rng = np.random.default_rng(seed)
+    q, nv = 5, 9
+    scores = jnp.asarray(rng.integers(0, 50, size=(q, nv)), jnp.int32)
+    p = len(set(np.asarray(scores).argmin(-1).tolist()))
+    sel = set(np.asarray(prefilter.select_banks(scores, p + 2)).tolist())
+    for qi in range(q):
+        row = np.asarray(scores)[qi]
+        assert int(row.argmin()) in sel or \
+            any(row[b] == row.min() for b in sel)
+
+
+def test_recall_monotone_in_top_p():
+    stored, q = _data(K=200, N=16, Q=6, seed=5)
+    base = _cfg()
+    i0, _, st0 = _run(base, stored, q)
+    truth = [set(r[r >= 0].tolist()) for r in i0]
+    last = -1.0
+    for p in (1, 2, 4, st0.spec.nv):
+        cas = base.replace(sim=dict(prefilter="ivf", top_p_banks=p))
+        i1, _, _ = _run(cas, stored, q)
+        rec = np.mean([len(set(r[r >= 0].tolist()) & t) / max(1, len(t))
+                       for r, t in zip(i1, truth)])
+        assert rec >= last - 1e-9, (p, rec, last)
+        last = rec
+    assert last >= 0.99     # full budget recovers the full scan (mod ties)
+
+
+def test_cluster_permutation_is_permutation():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(57, 6)).astype(np.float32))
+    perm = np.asarray(cluster_permutation(x, nv=5))
+    assert sorted(perm.tolist()) == list(range(57))
+    spec = grid_spec(57, 6, 8, 8)
+    full = np.asarray(placement_perm(x, spec))
+    assert sorted(full.tolist()) == list(range(spec.padded_K))
+    # padding rows stay in place so row_valid_mask still holds
+    np.testing.assert_array_equal(full[57:], np.arange(57, spec.padded_K))
+
+
+# ---------------------------------------------------------------------------
+# selected-bank merge helpers degenerate to the full-scan ones
+# ---------------------------------------------------------------------------
+def test_scatter_match_rows_identity_at_p_nv():
+    rng = np.random.default_rng(1)
+    row = jnp.asarray((rng.random((4, 6, 8)) < 0.3).astype(np.float32))
+    out = merge.scatter_match_rows(row, jnp.arange(6), 6)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(merge.v_merge_gather(row)))
+
+
+def test_selected_topk_matches_local_topk_at_arange():
+    rng = np.random.default_rng(2)
+    vals = jnp.asarray(rng.random((3, 5, 8)).astype(np.float32))
+    for largest in (False, True):
+        v0, i0 = merge.local_topk_candidates(vals, 7, largest=largest,
+                                             row_offset=2 * 5 * 8)
+        v1, i1 = merge.selected_topk(vals, 7, largest=largest,
+                                     bank_ids=jnp.arange(5), bank_offset=10)
+        np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+# ---------------------------------------------------------------------------
+# small-Q dispatch + q_tile derivation satellites
+# ---------------------------------------------------------------------------
+def test_small_q_takes_reference_path(monkeypatch):
+    """Interpret-mode batches below the crossover must never enter the
+    Pallas kernels (BENCH: q1 kernel at 0.18x of the jnp path)."""
+    def boom(*a, **k):
+        raise AssertionError("Pallas kernel entered for a small batch")
+    monkeypatch.setattr(kops, "cam_search_fused_pallas", boom)
+    monkeypatch.setattr(kops, "cam_range_fused_pallas", boom)
+    rng = np.random.default_rng(0)
+    stored = jnp.asarray(rng.random((2, 2, 8, 8)).astype(np.float32))
+    small = jnp.asarray(rng.random(
+        (SMALL_Q_CROSSOVER - 1, 2, 8)).astype(np.float32))
+    d, m = kops.cam_search_fused(stored, small, distance="l2",
+                                 sensing="best", interpret=True)
+    assert d.shape == (SMALL_Q_CROSSOVER - 1, 2, 2, 8)
+    big = jnp.asarray(rng.random(
+        (SMALL_Q_CROSSOVER, 2, 8)).astype(np.float32))
+    with pytest.raises(AssertionError, match="small batch"):
+        kops.cam_search_fused(stored, big, distance="l2", sensing="best",
+                              interpret=True)
+
+
+@pytest.mark.parametrize("distance", ["l2", "hamming", "range"])
+def test_small_q_reference_bit_identical_to_kernel(distance):
+    rng = np.random.default_rng(4)
+    if distance == "range":
+        lo = rng.random((2, 2, 8, 8)).astype(np.float32)
+        stored = jnp.asarray(np.stack([lo, lo + 0.3], axis=-1))
+    else:
+        stored = jnp.asarray(rng.random((2, 2, 8, 8)).astype(np.float32))
+    queries = jnp.asarray(rng.random((8, 2, 8)).astype(np.float32))
+    rv = jnp.asarray((rng.random((2, 8)) < 0.8).astype(np.float32))
+    kw = dict(distance=distance, sensing="best", row_valid=rv,
+              interpret=True)
+    dk, mk = kops.cam_search_fused(stored, queries, **kw)     # kernel (Q=8)
+    for qn in range(1, SMALL_Q_CROSSOVER):
+        dr, mr = kops.cam_search_fused(stored, queries[:qn], **kw)
+        np.testing.assert_array_equal(np.asarray(dr), np.asarray(dk[:qn]))
+        np.testing.assert_array_equal(np.asarray(mr), np.asarray(mk[:qn]))
+
+
+def test_default_q_tile_reproduces_historical_defaults():
+    # float fused kernel on a 64x64 subarray: the old hardcoded 32
+    assert default_q_tile(64, 64, 1) == 32
+    # hamming packed kernel, 256-row tile x 2 words: the old hardcoded 8
+    assert default_q_tile(256, 2) == 8
+    # ACAM range kernel (2 planes) streams twice the stored bytes per
+    # step, so a larger query tile amortizes it
+    assert default_q_tile(64, 64, 2) == 64
+    # always a power of two within [1, 256]
+    for r, c in ((8, 8), (128, 64), (512, 512), (1024, 128)):
+        qt = default_q_tile(r, c)
+        assert 1 <= qt <= 256 and (qt & (qt - 1)) == 0, (r, c, qt)
+
+
+# ---------------------------------------------------------------------------
+# estimator billing
+# ---------------------------------------------------------------------------
+def test_fraction_one_is_bitwise_full_scan():
+    cfg = _cfg()
+    arch = estimate_arch(cfg, 4096, 64)
+    a = predict_search(cfg, arch)
+    b = predict_search(cfg, arch, searched_fraction=1.0, prefilter_bits=0)
+    assert (a.latency_ns, a.energy_pj, a.area_um2) == \
+        (b.latency_ns, b.energy_pj, b.area_um2)
+    s = predict_search_sharded(cfg, arch, 1, searched_fraction=1.0,
+                               prefilter_bits=0)
+    assert (s.latency_ns, s.energy_pj, s.area_um2) == \
+        (a.latency_ns, a.energy_pj, a.area_um2)
+
+
+def test_fraction_scales_search_energy_not_latency():
+    cfg = _cfg()
+    arch = estimate_arch(cfg, 4096, 64)
+    full = predict_search(cfg, arch)
+    half = predict_search(cfg, arch, searched_fraction=0.5)
+    assert half.energy_pj == pytest.approx(full.energy_pj * 0.5, rel=1e-12)
+    assert half.latency_ns == full.latency_ns
+    assert half.area_um2 == full.area_um2
+
+
+def test_prefilter_slab_billed_in_series():
+    cfg = _cfg()
+    arch = estimate_arch(cfg, 4096, 64)
+    full = predict_search(cfg, arch)
+    cas = predict_search(cfg, arch, searched_fraction=0.25,
+                         prefilter_bits=64)
+    assert "prefilter" in cas.breakdown
+    pre = cas.breakdown["prefilter"]
+    assert cas.latency_ns == pytest.approx(
+        full.latency_ns + pre["latency_ns"], rel=1e-12)
+    assert cas.energy_pj == pytest.approx(
+        full.energy_pj * 0.25 + pre["energy_pj"], rel=1e-12)
+    assert cas.area_um2 > full.area_um2
+
+
+def test_cascade_billing_from_config():
+    cfg = _cfg()
+    arch = estimate_arch(cfg, 4096, 64)
+    assert cascade_billing(cfg, arch) == (1.0, 0)
+    nv = arch.spec.nv
+    cas = cfg.replace(sim=dict(prefilter="ivf", top_p_banks=max(1, nv // 4),
+                               signature_bits=16))
+    f, b = cascade_billing(cas, arch)
+    assert f == pytest.approx(max(1, nv // 4) / nv) and b == 16
+    # derived but disabled: prefilter set, no budget -> full-scan billing
+    derived = cfg.replace(sim=dict(prefilter="ivf"))
+    assert cascade_billing(derived, arch) == (1.0, 0)
+    # perf_report auto-derives: cascade config bills less search energy
+    pf = perf_report(cfg, arch)
+    pc = perf_report(cas, arch)
+    assert pc["search"].breakdown["subarray"]["energy_pj"] < \
+        pf["search"].breakdown["subarray"]["energy_pj"]
+    assert "prefilter" in pc["search"].breakdown
+
+
+def test_eval_perf_cascade_knobs_via_facade():
+    stored, q = _data()
+    cfg = _cfg(sim=dict(prefilter="signature", top_p_banks=2))
+    sim = CAMASim(cfg)
+    sim.plan(4096, 64)
+    auto = sim.eval_perf()
+    assert "prefilter" in auto["search"].breakdown
+    full = sim.eval_perf(searched_fraction=1.0, prefilter_bits=0)
+    ref = CAMASim(_cfg())
+    ref.plan(4096, 64)
+    base = ref.eval_perf()
+    assert full["energy_pj"] == base["energy_pj"]
+    assert full["latency_ns"] == base["latency_ns"]
+    sweep = sim.sweep_cascade([None, 1, 2], entries=4096, dims=64)
+    assert sweep[1]["energy_pj"] < sweep[2]["energy_pj"] \
+        < sweep[None]["energy_pj"] + sweep[2]["search"].breakdown[
+            "prefilter"]["energy_pj"] + 1e9  # sanity ordering on fractions
+    assert sweep[1]["energy_pj"] < sweep[None]["energy_pj"]

@@ -153,6 +153,42 @@ big_k = CAMConfig(
     device=DeviceConfig(device="fefet"))
 check(big_k, tag="bigk-best")
 n += 1
+
+# search cascade: signature prefilter with top_p_banks = nv must be
+# bit-identical to prefilter=off on BOTH backends (per-device routing with
+# p_loc = nv_loc degenerates to the full scan), incl. the C2C bank fold
+# and the kernel path
+def check_cascade(cfg, use_kernel=False, c2c_tile=1, tag=""):
+    base_sim = dict(use_kernel=use_kernel, c2c_query_tile=c2c_tile,
+                    c2c_fold="bank")
+    K, N, Q = 37, 12, 9
+    k1, k2 = jax.random.split(jax.random.PRNGKey(zlib.crc32(tag.encode())))
+    stored = jax.random.uniform(k1, (K, N))
+    queries = jax.random.uniform(k2, (Q, N))
+    qkey = jax.random.PRNGKey(7)
+    ref = FunctionalSimulator(cfg.replace(sim=base_sim))
+    st = ref.write(stored)
+    ia, ma = ref.query(st, queries, key=qkey)
+    cas = dict(base_sim, prefilter="signature", top_p_banks=st.spec.nv)
+    for mk, sim_kw in (("func", {}),
+                       ("shard", dict(backend="sharded", devices=4))):
+        c = CAMASim(cfg.replace(sim=dict(cas, **sim_kw)))
+        ib, mb = c.query(c.write(stored), queries, key=qkey)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib),
+                                      err_msg=f"cascade-{mk}-{tag}")
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb),
+                                      err_msg=f"cascade-{mk}-{tag}")
+    print("OK cascade", tag)
+
+check_cascade(cfg_for("exact", "hamming", "and", "gather", "exact"),
+              use_kernel=True, tag="exact-kernel")
+check_cascade(cfg_for("best", "l2", "adder", "comparator", "best"),
+              use_kernel=True, tag="best-kernel")
+check_cascade(cfg_for("best", "l2", "voting", "comparator", "best"),
+              tag="voting")
+check_cascade(cfg_for("threshold", "l1", "adder", "gather", "threshold",
+                      "c2c"), c2c_tile=2, tag="threshold-c2c")
+n += 4
 print(f"PARITY_OK {n}")
 '''
 
@@ -169,7 +205,7 @@ def _run_subprocess(script: str, timeout: int = 900):
 @pytest.mark.multidevice
 def test_sharded_parity_4_devices():
     proc = _run_subprocess(_PARITY_SCRIPT)
-    assert proc.returncode == 0 and "PARITY_OK 27" in proc.stdout, \
+    assert proc.returncode == 0 and "PARITY_OK 31" in proc.stdout, \
         (proc.stdout[-2000:], proc.stderr[-4000:])
 
 
