@@ -44,20 +44,29 @@ def merge_bench_rows(rows: list, path: pathlib.Path = BENCH_JSON) -> list:
 
 def check_floors(rows: list) -> None:
     """Fail loudly when a row records a broken guarantee: any parity bit
-    ``match=False``, or a ``recall=`` that fell below the ``floor=`` the
-    same row declares.  Run in CI so a perf row can't silently regress
-    from "bit-identical"/"recall cleared" to "close enough"."""
+    ``match=False``, a ``recall=`` that fell below the ``floor=`` the
+    same row declares, or a serve-loop ``p99_us=`` tail latency that blew
+    through the row's ``floor_p99_us=`` ceiling.  Run in CI so a perf row
+    can't silently regress from "bit-identical"/"recall cleared"/"SLO
+    met" to "close enough"."""
     import re
     bad = []
     for r in rows:
         d = str(r.get("derived", ""))
         if re.search(r"\bmatch=False\b", d):
             bad.append(f"{r['name']}: match=False ({d})")
-        m = re.search(r"\brecall=([0-9.]+)", d)
-        f = re.search(r"\bfloor=([0-9.]+)", d)
+        # fields are '_'-separated key=value runs, so \b can't anchor the
+        # key starts (the '_' before a key is itself a word character)
+        m = re.search(r"(?:^|_)recall=([0-9.]+)", d)
+        f = re.search(r"(?:^|_)floor=([0-9.]+)", d)
         if m and f and float(m.group(1)) < float(f.group(1)):
             bad.append(f"{r['name']}: recall {m.group(1)} < floor "
                        f"{f.group(1)} ({d})")
+        p = re.search(r"(?<!floor_)p99_us=([0-9.]+)", d)
+        pf = re.search(r"floor_p99_us=([0-9.]+)", d)
+        if p and pf and float(p.group(1)) > float(pf.group(1)):
+            bad.append(f"{r['name']}: p99 {p.group(1)}us > floor "
+                       f"{pf.group(1)}us ({d})")
     if bad:
         raise RuntimeError("benchmark floor violations:\n  "
                            + "\n  ".join(bad))
@@ -105,7 +114,7 @@ def main() -> None:
     _run_and_collect(fig5_nonidealities.main, rows)
     _run_and_collect(kernel_bench.main, rows)
     _run_and_collect(lambda: cascade_bench.main(ci=not full), rows)
-    _run_and_collect(serve_bench.main, rows)
+    _run_and_collect(lambda: serve_bench.main(backend="both"), rows)
     if devices > 0:
         _run_and_collect(lambda: sharded_bench.main(devices), rows)
 

@@ -1,22 +1,38 @@
-"""Serve-loop tail latency: query-axis autoscaling vs fixed-batch padding.
+"""Serve-loop benchmarks: tail autoscaling, SLO latency percentiles,
+streaming insert throughput.
 
-``CAMSearchServer`` pads every step to one compiled batch shape.  For a
-mostly-idle server that means a 1-request tail still streams the full
-``serve_batch``-wide query block through the grid.  With
-``autoscale=True`` the padded width comes from the power-of-two ladder
-{1, ..., serve_batch} by queue depth, so the tail step shrinks to width
-1.  This benchmark measures that tail step (one resident request) both
-ways and asserts the answers stayed bit-identical.
+Three measurements over ``CAMSearchServer`` against a resident store:
 
-    PYTHONPATH=src python -m benchmarks.serve_bench
+* ``serve_autoscale_tail`` — a 1-request tail step with query-axis
+  autoscaling vs fixed-batch padding (bit-identical answers asserted).
+* ``serve_engine_p50p99_<backend>`` — a mixed stream of SLO-tagged
+  searches and mutations through the continuous-batching loop;
+  per-request submit→finish p50/p99 (microseconds) per SLO tag, with a
+  ``floor_p99_us=`` ceiling ``check_floors`` enforces in CI and a
+  ``match`` bit proving the whole interleaved trace replays
+  bit-identically on a second server (determinism + routing parity).
+* ``serve_inserts_<backend>`` — measured single-row streaming insert
+  rate next to the estimator's ``perf_report()['inserts_per_s']``.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--backend B]
+
+``--backend`` is ``functional`` (default), ``sharded``, or ``both``.
 """
 from __future__ import annotations
 
+import sys
 import time
 
-K, N = 4096, 128          # resident store
+K, N = 4096, 128          # resident store (autoscale-tail measurement)
 SERVE_BATCH = 64          # fixed-batch padding width
 REPS = 7
+
+ENGINE_K, ENGINE_N = 2048, 64      # serve-engine stream measurement
+ENGINE_BATCH = 16
+# generous CI ceiling: p99 request latency through the serve loop (the
+# loop adds queueing on top of one jitted batched search, so this is a
+# regression tripwire, not a performance claim)
+FLOOR_P99_US = 2_000_000
 
 
 def _tail_step_time(srv, query, reps: int = REPS) -> float:
@@ -34,9 +50,8 @@ def _tail_step_time(srv, query, reps: int = REPS) -> float:
     return ts[len(ts) // 2]
 
 
-def main() -> None:
+def _autoscale_tail_row() -> None:
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
@@ -71,5 +86,111 @@ def main() -> None:
           f"batch={SERVE_BATCH}_rows={K}_match={ok}")
 
 
+def _engine_cfg(backend: str):
+    from repro.core import CAMConfig
+    return CAMConfig.from_dict(dict(
+        app=dict(distance="l2", match_type="best", match_param=3,
+                 data_bits=3),
+        arch=dict(h_merge="adder", v_merge="comparator"),
+        circuit=dict(rows=64, cols=64, cell_type="mcam", sensing="best"),
+        device=dict(device="fefet"),
+        sim=dict(backend=backend, serve_batch=ENGINE_BATCH,
+                 serve_queue=4096, capacity=ENGINE_K + 512,
+                 d2d_fold="row", prefilter="signature", top_p_banks=8)))
+
+
+def _drive_stream(srv, queries, extra) -> None:
+    """Interleaved SLO-tagged searches + mutations (4 searches : 1 mut)."""
+    import numpy as np
+    mut = 0
+    for i, q in enumerate(queries):
+        srv.submit(q, slo="interactive" if i % 2 else "batch")
+        if i % 4 == 3:
+            if mut % 2 == 0:
+                srv.submit_insert(extra[mut % len(extra)][None])
+            else:
+                srv.submit_delete(np.asarray([(7 * mut) % ENGINE_K]))
+            mut += 1
+        if i % ENGINE_BATCH == ENGINE_BATCH - 1:
+            srv.step()
+    srv.run()
+
+
+def _serve_engine_rows(backend: str) -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import CAMASim
+    from repro.runtime import CAMSearchServer
+
+    sim = CAMASim(_engine_cfg(backend))
+    stored = jax.random.uniform(jax.random.PRNGKey(0), (ENGINE_K, ENGINE_N))
+    stored = stored.at[0].set(0.0).at[1].set(1.0)   # pin the quant scale
+    wkey = jax.random.PRNGKey(5)
+    queries = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(1), (96, ENGINE_N)))
+    extra = np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(2), (16, ENGINE_N)))
+
+    def fresh_server():
+        return CAMSearchServer(sim, sim.write(jnp.asarray(stored), wkey),
+                               key=jax.random.PRNGKey(9))
+
+    warm = fresh_server()                    # warm every jit shape first
+    _drive_stream(warm, queries[:32], extra)
+
+    srv = fresh_server()
+    _drive_stream(srv, queries, extra)
+    stats = srv.latency_stats()
+
+    # determinism/parity bit: the identical stream on a second server
+    # replays bit-identically (covers mutation keys AND pad routing)
+    rep = fresh_server()
+    _drive_stream(rep, queries, extra)
+    ok = len(srv.finished) == len(rep.finished) and all(
+        a.rid == b.rid
+        and (not hasattr(a, "query")
+             or (np.array_equal(a.indices, b.indices)
+                 and np.array_equal(a.mask, b.mask)))
+        for a, b in zip(srv.finished, rep.finished))
+
+    s = stats.get("interactive", {"p50_us": 0.0, "p99_us": 0.0, "n": 0})
+    m = stats.get("mutation", {"p50_us": 0.0, "p99_us": 0.0, "n": 0})
+    print(f"serve_engine_p50p99_{backend},{s['p50_us']:.0f},"
+          f"p99_us={s['p99_us']:.0f}_floor_p99_us={FLOOR_P99_US}_"
+          f"batch_p50_us={stats['batch']['p50_us']:.0f}_"
+          f"mut_p50_us={m['p50_us']:.0f}_mut_p99_us={m['p99_us']:.0f}_"
+          f"n={len(srv.finished)}_batch={ENGINE_BATCH}_rows={ENGINE_K}_"
+          f"match={ok}")
+
+    # streaming single-row insert rate vs the estimator's figure
+    ins_srv = fresh_server()
+    ins_srv.submit_insert(extra[0][None]); ins_srv.step()   # warm
+    t0 = time.perf_counter()
+    n_ins = 12
+    for i in range(n_ins):
+        ins_srv.submit_insert(extra[(1 + i) % len(extra)][None])
+        ins_srv.step()
+    dt = time.perf_counter() - t0
+    measured = n_ins / dt
+    est = sim.eval_perf()["inserts_per_s"]
+    ok_ins = measured > 0 and est > 0
+    print(f"serve_inserts_{backend},{dt / n_ins * 1e6:.0f},"
+          f"inserts_per_s={measured:.0f}_est_inserts_per_s={est:.0f}_"
+          f"rows={ENGINE_K}_match={ok_ins}")
+
+
+def main(backend: str = "functional", tail: bool = True) -> None:
+    if tail:
+        _autoscale_tail_row()
+    for b in (("functional", "sharded") if backend == "both"
+              else (backend,)):
+        _serve_engine_rows(b)
+
+
 if __name__ == "__main__":
-    main()
+    be = "functional"
+    if "--backend" in sys.argv:
+        be = sys.argv[sys.argv.index("--backend") + 1]
+    main(backend=be, tail="--no-tail" not in sys.argv)

@@ -70,6 +70,27 @@ def main() -> None:
                                         entries=200, dims=256).items():
         print(f"top_p={p}: {rep.energy_pj:.2f} pJ")
 
+    # 5. streaming mutable store: reserve capacity head-room, then edit
+    # the resident state online — insert/delete/update/compact — instead
+    # of re-writing the whole grid (sim.d2d_fold="row" makes the
+    # programming noise per-SLOT, so an insert is bit-identical to the
+    # row having been in the fresh write).  examples/configs/serve.json
+    # is this config as a file; CAMSearchServer serves and mutates the
+    # same store with continuous batching + SLO latency stats.
+    from repro.runtime import CAMSearchServer
+
+    serve = CAMASim(config.replace(sim=dict(capacity=256, d2d_fold="row",
+                                            serve_batch=8, serve_queue=64)))
+    state = serve.write(stored, key=jax.random.PRNGKey(1))
+    srv = CAMSearchServer(serve, state)
+    ins = srv.submit_insert(jax.random.uniform(key, (2, 256)))  # new rows
+    hit = srv.submit(stored[17])            # sees the inserts (order!)
+    srv.submit_delete([42])                 # row 42 never matches again
+    srv.run()
+    print(f"inserted ids  : {ins.ids}")     # [200, 201]
+    print(f"still found 17: {hit.indices[0] == 17}")
+    print(f"latency stats : {srv.latency_stats()}")
+
 
 if __name__ == "__main__":
     main()

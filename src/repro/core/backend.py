@@ -36,7 +36,24 @@ class Backend(Protocol):
               key: Optional[jax.Array] = None) -> CAMState: ...
 
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None) -> SearchResult: ...
+              key: Optional[jax.Array] = None,
+              valid_count: Optional[int] = None) -> SearchResult: ...
+
+    # mutable-store contract: online edits of the resident state (the
+    # serve engine's insert/delete/update requests route here), plus an
+    # explicit compaction that is bit-identical to a fresh write of the
+    # live rows
+    def insert(self, state: CAMState, rows: jax.Array,
+               key: Optional[jax.Array] = None
+               ) -> Tuple[CAMState, jax.Array]: ...
+
+    def delete(self, state: CAMState, ids) -> CAMState: ...
+
+    def update(self, state: CAMState, ids, rows: jax.Array,
+               key: Optional[jax.Array] = None) -> CAMState: ...
+
+    def compact(self, state: CAMState,
+                key: Optional[jax.Array] = None) -> CAMState: ...
 
     def segment_queries(self, state: CAMState,
                         queries: jax.Array) -> jax.Array: ...

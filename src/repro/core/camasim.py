@@ -72,10 +72,35 @@ class CAMASim:
               key: Optional[jax.Array] = None) -> CAMState:
         return self.backend.write(stored, key)
 
+    # -------------------------------------------------------- mutations
+    def insert(self, state: CAMState, rows: jax.Array,
+               key: Optional[jax.Array] = None):
+        """Program ``rows`` into free slots of the resident store; returns
+        ``(new_state, ids)`` (see ``FunctionalSimulator.insert``)."""
+        return self.backend.insert(state, rows, key)
+
+    def delete(self, state: CAMState, ids) -> CAMState:
+        """Invalidate live rows ``ids``; their slots return to the free
+        list and they never match again."""
+        return self.backend.delete(state, ids)
+
+    def update(self, state: CAMState, ids, rows: jax.Array,
+               key: Optional[jax.Array] = None) -> CAMState:
+        """Re-program live rows ``ids`` in place with new data."""
+        return self.backend.update(state, ids, rows, key)
+
+    def compact(self, state: CAMState,
+                key: Optional[jax.Array] = None) -> CAMState:
+        """Re-place the live rows as a fresh store (bit-identical to a
+        fresh ``write`` of them); row ids renumber 0..K_live-1."""
+        return self.backend.compact(state, key)
+
     # ------------------------------------------------------------ query
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None) -> SearchResult:
-        return self.backend.query(state, queries, key)
+              key: Optional[jax.Array] = None,
+              valid_count: Optional[int] = None) -> SearchResult:
+        return self.backend.query(state, queries, key,
+                                  valid_count=valid_count)
 
     # ----------------------------------------------------------- perf
     def plan(self, entries: int, dims: int) -> ArchSpecifics:

@@ -28,6 +28,7 @@ VARIATION_TYPES = ("none", "d2d", "c2c", "both")
 VARIATION_SPECS = ("stat", "exper")
 BACKENDS = ("functional", "sharded")
 C2C_FOLDS = ("grid", "bank")
+D2D_FOLDS = ("grid", "row")
 PREFILTERS = ("off", "signature", "ivf")
 
 
@@ -123,7 +124,14 @@ class SimConfig:
     query_shards: int = 1          # sharded: optional query-axis split
     c2c_query_tile: int = 1        # queries per C2C noise draw (search cycle)
     c2c_fold: str = "grid"         # C2C RNG fold: grid / bank (shard-invariant)
+    d2d_fold: str = "grid"         # D2D RNG fold: grid / row (insert-invariant)
+    capacity: int = 0              # row head-room: grid sized for
+                                   # max(K, capacity) rows so inserts have
+                                   # free slots (0 = exactly K)
     serve_batch: int = 32          # CAMSearchServer micro-batch ceiling
+    serve_queue: int = 0           # CAMSearchServer admission bound
+                                   # (submits beyond it raise QueueFull;
+                                   # 0 = unbounded)
     # Two-stage search cascade (sublinear search): 'signature' scores each
     # nv-bank with a bit-packed Hamming prefilter before the exact kernel;
     # 'ivf' additionally reorders rows at write time so similar entries
@@ -137,6 +145,12 @@ class SimConfig:
         _check(self.backend, BACKENDS, "backend")
         if self.c2c_fold not in C2C_FOLDS:
             raise ValueError("c2c_fold must be 'grid' or 'bank'")
+        if self.d2d_fold not in D2D_FOLDS:
+            raise ValueError("d2d_fold must be 'grid' or 'row'")
+        if self.capacity < 0:
+            raise ValueError("capacity must be >= 0 (0 = no head-room)")
+        if self.serve_queue < 0:
+            raise ValueError("serve_queue must be >= 0 (0 = unbounded)")
         if self.c2c_query_tile < 1:
             raise ValueError("c2c_query_tile must be >= 1")
         if self.devices < 0:

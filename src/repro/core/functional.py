@@ -32,6 +32,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import mapping, merge, prefilter, quantize, subarray, variation
 from .config import CAMConfig
@@ -75,15 +76,21 @@ class CAMState:
     sigs: Optional[jax.Array] = None      # (nv, R, W) uint32 signatures
     sig_thr: Optional[jax.Array] = None   # scalar binarization threshold
     perm: Optional[jax.Array] = None      # (padded_K,) placement perm
+    codes: Optional[jax.Array] = None     # (nv, nh, R, C[, 2]) CLEAN placed
+                                          # codes (pre-D2D) — the mutable
+                                          # store's source of truth, so
+                                          # ``compact`` can re-place live
+                                          # rows bit-identically to a
+                                          # fresh write
 
 
 jax.tree_util.register_pytree_node(
     CAMState,
     lambda s: ((s.grid, s.lo, s.hi, s.col_valid, s.row_valid, s.sigs,
-                s.sig_thr, s.perm), s.spec),
+                s.sig_thr, s.perm, s.codes), s.spec),
     lambda spec, leaves: CAMState(leaves[0], leaves[1], leaves[2], spec,
                                   leaves[3], leaves[4], leaves[5],
-                                  leaves[6], leaves[7]),
+                                  leaves[6], leaves[7], leaves[8]),
 )
 
 
@@ -170,7 +177,8 @@ class FunctionalSimulator:
                 f"(got shape {tuple(stored.shape)})")
         K, N = stored.shape[:2]
         self.plan(K, N)            # record arch specifics for eval_perf
-        spec = mapping.grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols)
+        spec = mapping.grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols,
+                                 cfg.sim.capacity)
         return self._write_jit(stored, spec,
                                key if key is not None
                                else jax.random.PRNGKey(0))
@@ -183,6 +191,14 @@ class FunctionalSimulator:
         else:
             codes, lo, hi = quantize.quantize_for_cell(
                 stored, cfg.circuit.cell_type, cfg.app.data_bits)
+        return self._place_codes(codes, lo, hi, spec, key)
+
+    def _place_codes(self, codes, lo, hi, spec, key):
+        """Place already-quantized code rows: prefilter signatures /
+        clustered permutation, partition, D2D programming noise.  Shared
+        by ``write`` (fresh data) and ``compact`` (the live rows' resident
+        clean codes with the store's frozen scale)."""
+        cfg = self.config
         sigs = sig_thr = perm = None
         if cfg.sim.prefilter != "off":
             cvals = prefilter.signature_values(codes)
@@ -200,21 +216,230 @@ class FunctionalSimulator:
                 cvals, cfg.circuit.cell_type, cfg.app.data_bits)
             sigs = prefilter.row_signatures(cvals, sig_thr, spec,
                                             cfg.sim.signature_bits)
-        grid = mapping.partition_stored(codes, spec)
-        grid = variation.apply_d2d(grid, cfg.device, cfg.app.data_bits, key)
+        clean = mapping.partition_stored(codes, spec)
+        if cfg.sim.d2d_fold == "row":
+            grid = variation.apply_d2d_rowfold(clean, cfg.device,
+                                               cfg.app.data_bits, key)
+        else:
+            grid = variation.apply_d2d(clean, cfg.device, cfg.app.data_bits,
+                                       key)
         return CAMState(grid=grid, lo=lo, hi=hi, spec=spec,
                         col_valid=mapping.col_valid_mask(spec),
                         row_valid=mapping.row_valid_mask(spec),
-                        sigs=sigs, sig_thr=sig_thr, perm=perm)
+                        sigs=sigs, sig_thr=sig_thr, perm=perm, codes=clean)
+
+    # --------------------------------------------------------- mutations
+    # Online edits of the resident store (free-list allocation over the
+    # existing row_valid masks): deletes flip validity bits, inserts claim
+    # free row slots, updates re-program live slots in place.  Grid shape,
+    # signatures block, and placement permutation never change — only the
+    # touched rows' cells/signatures are re-derived — so a sharded store
+    # mutates without a re-shard.
+    def _check_mutable(self):
+        cfg = self.config
+        if (cfg.device.variation in ("d2d", "both")
+                and cfg.sim.d2d_fold != "row"):
+            # the grid-level D2D draw cannot be reproduced for a single
+            # row, so incremental writes could never match a fresh write
+            raise ValueError(
+                "online insert/update with D2D variation requires "
+                "sim.d2d_fold='row' (per-row-slot RNG fold)")
+
+    def _check_rows(self, state: CAMState, rows: jax.Array):
+        cfg = self.config
+        want_range = cfg.app.distance == "range"
+        if want_range and (rows.ndim != 3 or rows.shape[-1] != 2):
+            raise ValueError(
+                "range stores take (M, N, 2) [lo, hi] rows "
+                f"(got shape {tuple(rows.shape)})")
+        if not want_range and rows.ndim != 2:
+            raise ValueError(
+                f"expected (M, N) rows (got shape {tuple(rows.shape)})")
+        if rows.shape[1] != state.spec.N:
+            raise ValueError(
+                f"row width {rows.shape[1]} != stored dims {state.spec.N}")
+
+    def free_slots(self, state: CAMState) -> np.ndarray:
+        """Global row slots currently free (ascending).  Only slots below
+        ``spec.padded_K`` count — a sharded state's all-invalid padding
+        banks are not allocatable capacity."""
+        rv = np.asarray(state.row_valid).reshape(-1)[:state.spec.padded_K]
+        return np.where(rv == 0)[0]
+
+    def _slots_of(self, state: CAMState, ids) -> jax.Array:
+        """Map caller-order row ids to global row slots (inverse of the
+        placement permutation); every id must name a live row."""
+        ids = np.asarray(ids).reshape(-1)
+        padded_K = state.spec.padded_K
+        if ids.size and (ids.min() < 0 or ids.max() >= padded_K):
+            raise ValueError(f"row ids must be in [0, {padded_K})")
+        if state.perm is not None:
+            inv = np.empty(padded_K, np.int64)
+            inv[np.asarray(state.perm)] = np.arange(padded_K)
+            slots = inv[ids]
+        else:
+            slots = ids
+        rv = np.asarray(state.row_valid).reshape(-1)
+        dead = ids[rv[slots] == 0]
+        if dead.size:
+            raise ValueError(f"row ids {dead.tolist()} are not live rows")
+        return jnp.asarray(slots, jnp.int32)
+
+    def insert(self, state: CAMState, rows: jax.Array,
+               key: Optional[jax.Array] = None
+               ) -> Tuple[CAMState, jax.Array]:
+        """Claim free row slots for ``rows`` (M, N[, 2]) and program them.
+
+        Returns ``(new_state, ids)`` where ``ids`` (M,) are the caller-order
+        row indices the inserted rows will report in search results.  With
+        ``sim.d2d_fold='row'`` the programmed cells (noise included) are
+        bit-identical to the slots' rows under a fresh ``write`` with the
+        same key.  Raises when the store lacks free slots — size head-room
+        with ``sim.capacity`` (``perf_report``'s inserts/sec figure prices
+        it)."""
+        rows = jnp.asarray(rows)
+        self._check_mutable()
+        self._check_rows(state, rows)
+        free = self.free_slots(state)
+        if rows.shape[0] > free.size:
+            raise ValueError(
+                f"store full: {rows.shape[0]} inserts but only {free.size} "
+                "free slots — delete rows, compact(), or re-write with a "
+                "larger sim.capacity")
+        slots = jnp.asarray(free[:rows.shape[0]], jnp.int32)
+        new_state = self._write_rows(state, rows, slots,
+                                     key if key is not None
+                                     else jax.random.PRNGKey(0), True)
+        ids = (jnp.take(state.perm, slots) if state.perm is not None
+               else slots)
+        return new_state, ids
+
+    def delete(self, state: CAMState, ids) -> CAMState:
+        """Flip the validity bits of live rows ``ids`` (caller order).
+        Deleted rows never match again (search and the bank prefilter both
+        mask on ``row_valid``) and their slots return to the free list."""
+        slots = self._slots_of(state, ids)
+        v, r = slots // state.spec.R, slots % state.spec.R
+        return CAMState(grid=state.grid, lo=state.lo, hi=state.hi,
+                        spec=state.spec, col_valid=state.col_valid,
+                        row_valid=state.row_valid.at[v, r].set(0.0),
+                        sigs=state.sigs, sig_thr=state.sig_thr,
+                        perm=state.perm, codes=state.codes)
+
+    def update(self, state: CAMState, ids, rows: jax.Array,
+               key: Optional[jax.Array] = None) -> CAMState:
+        """Re-program live rows ``ids`` in place with new ``rows`` data
+        (fresh programming noise from ``key``'s per-slot fold)."""
+        rows = jnp.asarray(rows)
+        self._check_mutable()
+        self._check_rows(state, rows)
+        slots = self._slots_of(state, ids)
+        if slots.shape[0] != rows.shape[0]:
+            raise ValueError(
+                f"{slots.shape[0]} ids but {rows.shape[0]} rows")
+        return self._write_rows(state, rows, slots,
+                                key if key is not None
+                                else jax.random.PRNGKey(0), False)
+
+    @partial(jax.jit, static_argnums=(0, 5))
+    def _write_rows(self, state: CAMState, rows, slots, key, set_valid):
+        """Program ``rows`` (M, N[, 2]) into global slots ``slots`` (M,):
+        quantize with the store's frozen scale, scatter clean codes +
+        per-slot-folded D2D noise, refresh only the touched rows'
+        signatures."""
+        cfg = self.config
+        bits = cfg.app.data_bits
+        spec = state.spec
+        if rows.ndim == 3:          # ACAM ranges: no quantization
+            codes = rows
+        else:
+            codes, _, _ = quantize.quantize_for_cell(
+                rows, cfg.circuit.cell_type, bits, state.lo, state.hi)
+        segs = mapping.partition_rows(codes, spec)       # (M, nh, C[, 2])
+        noisy = variation.apply_d2d_slots(segs, cfg.device, bits, key,
+                                          slots)
+        v, r = slots // spec.R, slots % spec.R
+        grid = state.grid.at[v, :, r].set(noisy)
+        clean = (state.codes.at[v, :, r].set(segs)
+                 if state.codes is not None else None)
+        row_valid = (state.row_valid.at[v, r].set(1.0) if set_valid
+                     else state.row_valid)
+        sigs = state.sigs
+        if sigs is not None:
+            cvals = prefilter.signature_values(codes)
+            sigs = prefilter.update_row_signatures(
+                sigs, cvals, state.sig_thr, spec, cfg.sim.signature_bits,
+                slots)
+        return CAMState(grid=grid, lo=state.lo, hi=state.hi, spec=spec,
+                        col_valid=state.col_valid, row_valid=row_valid,
+                        sigs=sigs, sig_thr=state.sig_thr, perm=state.perm,
+                        codes=clean)
+
+    def compact(self, state: CAMState,
+                key: Optional[jax.Array] = None) -> CAMState:
+        """Re-place the live rows as a fresh store: gather their clean
+        codes in caller order and re-run the full placement pipeline
+        (signature threshold, IVF clustering, partition, D2D noise) with
+        the store's frozen quantization scale.  Bit-identical to a fresh
+        ``write`` of the live rows whenever that write derives the same
+        scale (and the same ``key`` is used); the grid shrinks back to
+        ``grid_spec(K_live, ..., sim.capacity)``.
+
+        After compaction row ids are renumbered 0..K_live-1 in the old
+        caller order (the usual consequence of compacting a free list)."""
+        if state.codes is None:
+            raise ValueError("state has no resident clean codes "
+                             "(written by an older version?) — re-write "
+                             "the store to enable compact()")
+        cfg = self.config
+        spec = state.spec
+        rv = np.asarray(state.row_valid).reshape(-1)[:spec.padded_K]
+        live = np.where(rv > 0)[0]
+        if live.size == 0:
+            raise ValueError("cannot compact an empty store")
+        ids = (np.asarray(state.perm)[live] if state.perm is not None
+               else live)
+        slots = jnp.asarray(live[np.argsort(ids, kind="stable")], jnp.int32)
+        rows = self._gather_code_rows(state, slots)
+        new_spec = mapping.grid_spec(int(live.size), spec.N, spec.R, spec.C,
+                                     cfg.sim.capacity)
+        self.plan(int(live.size), spec.N)
+        return self._place_jit(rows, state.lo, state.hi, new_spec,
+                               key if key is not None
+                               else jax.random.PRNGKey(0))
+
+    @partial(jax.jit, static_argnums=(0,))
+    def _gather_code_rows(self, state: CAMState, slots) -> jax.Array:
+        """Un-partition the clean codes of the given slots: (M, N[, 2])."""
+        spec = state.spec
+        c = state.codes
+        extra = c.shape[4:]
+        rows = jnp.moveaxis(c, 2, 1).reshape(
+            c.shape[0] * spec.R, spec.nh * spec.C, *extra)
+        return jnp.take(rows, slots, axis=0)[:, :spec.N]
+
+    @partial(jax.jit, static_argnums=(0, 4))
+    def _place_jit(self, codes, lo, hi, spec, key):
+        return self._place_codes(codes, lo, hi, spec, key)
 
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None) -> SearchResult:
+              key: Optional[jax.Array] = None,
+              valid_count: Optional[int] = None) -> SearchResult:
         """Query simulation.
 
         queries: (Q, N) application-domain query batch.
         Returns a ``SearchResult`` (indices (Q, k) padded with -1, mask
         (Q, padded_K)); it unpacks as the historical ``(idx, mask)`` tuple.
+
+        ``valid_count`` marks only the first ``valid_count`` batch rows as
+        real queries: the serve loop pads short batches to a fixed width,
+        and the pad rows must not influence the cascade's shared bank
+        routing (``select_banks``).  Passed as a traced scalar so varying
+        counts at one batch width share a single compilation.  ``None``
+        (every row real) is bit-identical to ``valid_count=Q``; non-cascade
+        searches evaluate each row independently, so the knob only affects
+        routed searches.
         """
         if queries.ndim == 1:
             idx, mask = self.query(state, queries[None],
@@ -222,22 +447,26 @@ class FunctionalSimulator:
             return SearchResult(idx[0], mask[0])
         idx, mask = self._query_jit(state, queries,
                                     key if key is not None
-                                    else jax.random.PRNGKey(1))
+                                    else jax.random.PRNGKey(1),
+                                    None if valid_count is None
+                                    else jnp.asarray(valid_count, jnp.int32))
         return SearchResult(idx, mask)
 
     @partial(jax.jit, static_argnums=(0,))
-    def _query_jit(self, state: CAMState, queries, key):
-        idx, mask = self._query_inner(state, queries, key)
+    def _query_jit(self, state: CAMState, queries, key, valid_count=None):
+        idx, mask = self._query_inner(state, queries, key, valid_count)
         return self._to_original(state, idx, mask)
 
-    def _query_inner(self, state: CAMState, queries, key):
+    def _query_inner(self, state: CAMState, queries, key, valid_count=None):
         cfg = self.config
         bits = cfg.app.data_bits
         qcodes = self.query_codes(state, queries)            # (Q, N)
         qseg = mapping.partition_query(qcodes, state.spec)   # (Q, nh, C)
 
         if cfg.sim.cascade_enabled() and state.sigs is not None:
-            return self._query_cascade(state, qcodes, qseg, key)
+            valid = (None if valid_count is None
+                     else jnp.arange(queries.shape[0]) < valid_count)
+            return self._query_cascade(state, qcodes, qseg, key, valid)
 
         if cfg.device.variation not in ("c2c", "both"):
             # store once, search many: one fused batched pass
@@ -308,8 +537,10 @@ class FunctionalSimulator:
 
     # --------------------------------------------------- cascade (stage 1)
     def route_banks(self, state: CAMState, qcodes: jax.Array,
-                    p: Optional[int] = None) -> jax.Array:
-        """Stage-1 routing: (Q, N) query codes -> (p,) sorted bank ids."""
+                    p: Optional[int] = None,
+                    valid: Optional[jax.Array] = None) -> jax.Array:
+        """Stage-1 routing: (Q, N) query codes -> (p,) sorted bank ids.
+        ``valid`` (Q,) bool excludes pad rows from the shared selection."""
         cfg = self.config
         qsig = prefilter.query_signatures(qcodes, state.sig_thr, state.spec,
                                           cfg.sim.signature_bits)
@@ -317,9 +548,10 @@ class FunctionalSimulator:
                                        use_kernel=self.use_kernel)
         if p is None:
             p = min(cfg.sim.top_p_banks, state.spec.nv)
-        return prefilter.select_banks(scores, p)
+        return prefilter.select_banks(scores, p, valid)
 
-    def _query_cascade(self, state: CAMState, qcodes, qseg, key):
+    def _query_cascade(self, state: CAMState, qcodes, qseg, key,
+                       valid: Optional[jax.Array] = None):
         """Two-stage search: route to top-p banks, exact-search only the
         gathered (p, nh, R, C) sub-grid, merge against original bank ids.
 
@@ -328,7 +560,7 @@ class FunctionalSimulator:
         full scan (a parity test asserts this per cell/merge combo)."""
         cfg = self.config
         spec = state.spec
-        bank_ids = self.route_banks(state, qcodes)
+        bank_ids = self.route_banks(state, qcodes, valid=valid)
         sub_grid = jnp.take(state.grid, bank_ids, axis=0)
         sub_rv = jnp.take(state.row_valid, bank_ids, axis=0)
         # C2C noise (if any) folds per ORIGINAL bank id, so the surviving

@@ -42,9 +42,13 @@ class GridSpec:
         return self.nh * self.C
 
 
-def grid_spec(K: int, N: int, R: int, C: int) -> GridSpec:
+def grid_spec(K: int, N: int, R: int, C: int, capacity: int = 0) -> GridSpec:
+    """``capacity`` reserves row head-room: the grid is sized for
+    ``max(K, capacity)`` rows so online inserts find free slots, while
+    ``K`` (and therefore ``row_valid_mask``) still describes the rows
+    actually written."""
     return GridSpec(K=K, N=N, R=R, C=C,
-                    nv=math.ceil(K / R), nh=math.ceil(N / C))
+                    nv=math.ceil(max(K, capacity) / R), nh=math.ceil(N / C))
 
 
 def partition_stored(data: jax.Array, spec: GridSpec) -> jax.Array:
@@ -59,6 +63,17 @@ def partition_stored(data: jax.Array, spec: GridSpec) -> jax.Array:
     x = x.reshape(spec.nv, spec.R, spec.nh, spec.C, *extra)
     perm = (0, 2, 1, 3) + tuple(range(4, 4 + len(extra)))
     return x.transpose(*perm)  # (nv, nh, R, C[, 2])
+
+
+def partition_rows(rows: jax.Array, spec: GridSpec) -> jax.Array:
+    """(M, N[, 2]) -> (M, nh, C[, 2]) row segments (the per-row view of
+    ``partition_stored``, for incremental writes into existing slots)."""
+    M, N = rows.shape[:2]
+    assert N == spec.N, (rows.shape, spec)
+    extra = rows.shape[2:]
+    pad = ((0, 0), (0, spec.padded_N - N)) + ((0, 0),) * len(extra)
+    x = jnp.pad(rows, pad)
+    return x.reshape(M, spec.nh, spec.C, *extra)
 
 
 def partition_query(q: jax.Array, spec: GridSpec) -> jax.Array:

@@ -112,7 +112,8 @@ def estimate_arch(config: CAMConfig, K: int, N: int) -> ArchSpecifics:
     the stored-data size.
     """
     cfg = config
-    spec = grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols)
+    spec = grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols,
+                     cfg.sim.capacity)
     n_sub = spec.n_subarrays
     spa = cfg.arch.subarrays_per_array
     apm = cfg.arch.arrays_per_mat
@@ -434,19 +435,41 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
         w = predict_write(config, arch)
         out["write"] = w
         out["energy_pj"] += w.energy_pj
+    # mutation billing: a streaming insert is a 1-row partial write, so
+    # the sustained insert rate the store admits is one row-programming
+    # latency per insert (additive key — existing report consumers and
+    # the golden Table IV snapshot are unaffected)
+    out["inserts_per_s"] = 1e9 / predict_write(config, arch,
+                                               rows=1).latency_ns
     return PerfReport(out)
 
 
-def predict_write(config: CAMConfig, arch: ArchSpecifics) -> PerfResult:
+def predict_write(config: CAMConfig, arch: ArchSpecifics,
+                  rows: Optional[int] = None) -> PerfResult:
     """Write-path prediction: program all rows (row-parallel across
-    subarrays, row-serial within a subarray)."""
+    subarrays, row-serial within a subarray).
+
+    ``rows`` bills a PARTIAL write of that many rows (an online
+    insert/update batch) instead of the full store: latency is row-serial
+    in min(R, rows) (free slots cluster in the same subarray row range in
+    the worst case), and energy scales the full-store programming energy
+    by the touched-row fraction across the nh horizontal segments each
+    row spans.  ``rows=None`` keeps the historical full-store billing
+    exactly."""
     cfg = config
     cell = get_cell_model(cfg.device.device, cfg.circuit.cell_type,
                           cfg.app.data_bits)
     R, C = cfg.circuit.rows, cfg.circuit.cols
-    rows_eff = min(R, arch.spec.K)  # rows written per subarray (serial)
-    t = cell.write_latency(rows_eff)
-    e = cell.write_energy_pj(R, C) * arch.n_subarrays
+    if rows is None:
+        rows_eff = min(R, arch.spec.K)  # rows written per subarray (serial)
+        t = cell.write_latency(rows_eff)
+        e = cell.write_energy_pj(R, C) * arch.n_subarrays
+    else:
+        if rows < 0:
+            raise ValueError("rows must be >= 0")
+        t = cell.write_latency(min(R, rows))
+        e = (cell.write_energy_pj(R, C) * arch.spec.nh
+             * min(rows, arch.spec.padded_K) / R)
     a = cell.area_um2(R, C) * arch.n_subarrays
     return PerfResult(latency_ns=t, energy_pj=e, area_um2=a,
                       breakdown={"write": {"latency_ns": t, "energy_pj": e,

@@ -114,7 +114,8 @@ def bank_scores(sigs: jax.Array, qsig: jax.Array, row_valid: jax.Array, *,
     return jnp.min(d, axis=-1)
 
 
-def select_banks(scores: jax.Array, p: int) -> jax.Array:
+def select_banks(scores: jax.Array, p: int,
+                 valid: jax.Array | None = None) -> jax.Array:
     """(Q, nv) batch scores -> (p,) sorted ascending bank ids.
 
     Per-query margin normalization (subtract each query's best bank score)
@@ -122,8 +123,29 @@ def select_banks(scores: jax.Array, p: int) -> jax.Array:
     the batch's tightest margin anywhere.  Every query's argmin bank has
     margin 0, so each query's best bank is always selected (up to ties
     beyond ``p``).  Sorted ascending so ``p = nv`` yields ``arange(nv)``.
+
+    ``valid`` (Q,) masks batch rows out of the min-reduction entirely: a
+    serve batch zero-padded to a fixed width must not let its pad queries'
+    best banks claim top-p slots from real queries (a pad's margin-0 bank
+    is as strong a claim as any real query's).  With every row valid the
+    selection is bit-identical to ``valid=None``.
     """
     margin = scores - jnp.min(scores, axis=-1, keepdims=True)
+    if valid is not None:
+        margin = jnp.where(valid[:, None], margin, _INVALID_SCORE)
     batch = jnp.min(margin, axis=0)                     # (nv,)
     _, ids = jax.lax.top_k(-batch, p)
     return jnp.sort(ids).astype(jnp.int32)
+
+
+def update_row_signatures(sigs: jax.Array, values: jax.Array,
+                          thr: jax.Array, spec: GridSpec,
+                          signature_bits: int, slots: jax.Array) -> jax.Array:
+    """Incremental counterpart of ``row_signatures``: re-pack the (M, N)
+    code values landing in global row ``slots`` (M,) and scatter them into
+    the resident (nv, R, W) signature block.  Bit-identical to the slots'
+    rows of a fresh ``row_signatures`` pass with the same threshold."""
+    pos = signature_positions(spec.N, signature_bits)
+    packed = _binarize_pack(values, thr, pos)           # (M, W)
+    v, r = slots // spec.R, slots % spec.R
+    return sigs.at[v, r].set(packed)

@@ -117,12 +117,16 @@ class ShardedCAMSimulator:
         nv = state.grid.shape[0]
         pad = (-nv) % self.n_banks
         grid, row_valid, sigs = state.grid, state.row_valid, state.sigs
+        codes = state.codes
         if pad:
             grid = jnp.pad(grid,
                            ((0, pad),) + ((0, 0),) * (grid.ndim - 1))
             row_valid = jnp.pad(row_valid, ((0, pad), (0, 0)))
             if sigs is not None:
                 sigs = jnp.pad(sigs, ((0, pad), (0, 0), (0, 0)))
+            if codes is not None:
+                codes = jnp.pad(codes,
+                                ((0, pad),) + ((0, 0),) * (codes.ndim - 1))
         sh = cam_state_shardings(self.mesh, grid.ndim)
         return CAMState(
             grid=jax.device_put(grid, sh["grid"]),
@@ -136,7 +140,32 @@ class ShardedCAMSimulator:
             sig_thr=(jax.device_put(state.sig_thr, sh["sig_thr"])
                      if state.sig_thr is not None else None),
             perm=(jax.device_put(state.perm, sh["perm"])
-                  if state.perm is not None else None))
+                  if state.perm is not None else None),
+            codes=(jax.device_put(codes, sh["codes"])
+                   if codes is not None else None))
+
+    # --------------------------------------------------------- mutations
+    # The mutation logic is shape-preserving and bank-local (scatter into
+    # the touched rows' slots), so it is delegated to the inner reference
+    # simulator on the placed arrays and the result is re-placed without a
+    # re-shard (nv is already a bank multiple, so ``shard_state`` only
+    # refreshes device placement).  Free slots never include the all-invalid
+    # padding banks (``free_slots`` stops at ``spec.padded_K``).
+    def insert(self, state: CAMState, rows: jax.Array,
+               key: Optional[jax.Array] = None):
+        new_state, ids = self.sim.insert(state, rows, key)
+        return self.shard_state(new_state), ids
+
+    def delete(self, state: CAMState, ids) -> CAMState:
+        return self.shard_state(self.sim.delete(state, ids))
+
+    def update(self, state: CAMState, ids, rows: jax.Array,
+               key: Optional[jax.Array] = None) -> CAMState:
+        return self.shard_state(self.sim.update(state, ids, rows, key))
+
+    def compact(self, state: CAMState,
+                key: Optional[jax.Array] = None) -> CAMState:
+        return self.shard_state(self.sim.compact(state, key))
 
     # ------------------------------------------------------------- perf
     def plan(self, entries: int, dims: int) -> ArchSpecifics:
@@ -185,12 +214,18 @@ class ShardedCAMSimulator:
 
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,
-              key: Optional[jax.Array] = None) -> SearchResult:
+              key: Optional[jax.Array] = None,
+              valid_count: Optional[int] = None) -> SearchResult:
         """Query simulation across the mesh.
 
         queries: (Q, N) application-domain batch (or a single (N,) query).
         Returns a ``SearchResult`` (unpacks as ``(indices, mask)``),
         bit-identical to ``FunctionalSimulator(..., c2c_fold='bank')``.
+
+        ``valid_count`` marks only the first ``valid_count`` rows as real
+        queries (the serve loop's pad-exclusion knob — see
+        ``FunctionalSimulator.query``); it only affects the cascade's
+        shared bank routing.
         """
         if queries.ndim == 1:
             idx, mask = self.query(state, queries[None], key)
@@ -206,26 +241,34 @@ class ShardedCAMSimulator:
                     f"{self.n_query}*{tile} for query-axis sharding")
         idx, mask = self._query_jit(state, queries,
                                     key if key is not None
-                                    else jax.random.PRNGKey(1))
+                                    else jax.random.PRNGKey(1),
+                                    None if valid_count is None
+                                    else jnp.asarray(valid_count, jnp.int32))
         return SearchResult(idx, mask)
 
     @partial(jax.jit, static_argnums=(0,))
-    def _query_jit(self, state: CAMState, queries, key):
+    def _query_jit(self, state: CAMState, queries, key, valid_count=None):
         cfg = self.config
         qcodes = self.sim.query_codes(state, queries)        # (Q, N)
         qseg = self.sim.segment_queries(state, queries)      # (Q, nh, C)
-        qsig = None
+        qsig = qvalid = None
         if cfg.sim.cascade_enabled() and state.sigs is not None:
             # stage-1 query signatures are cheap and replicated-friendly:
             # computed once outside the shard_map, sharded like the batch
             qsig = prefilter.query_signatures(
                 qcodes, state.sig_thr, state.spec, cfg.sim.signature_bits)
-        idx, mask = self._sharded_search(state, qseg, qsig, key)
+            # the routing valid mask is materialized (all-true when no
+            # count is given) so the shard_map arity stays fixed
+            qvalid = (jnp.ones((queries.shape[0],), bool)
+                      if valid_count is None
+                      else jnp.arange(queries.shape[0]) < valid_count)
+        idx, mask = self._sharded_search(state, qseg, qsig, key, qvalid)
         return self.sim._to_original(state, idx,
                                      mask[..., :state.spec.padded_K])
 
     # -------------------------------------------------------- shard_map
-    def _sharded_search(self, state: CAMState, qseg, qsig, key):
+    def _sharded_search(self, state: CAMState, qseg, qsig, key,
+                        qvalid=None):
         cfg = self.config
         ba, qa = self.bank_axis, self.query_axis
         nv_pad, R = state.grid.shape[0], state.grid.shape[2]
@@ -263,11 +306,12 @@ class ShardedCAMSimulator:
                         -(-min(cfg.sim.top_p_banks, state.spec.nv)
                           // self.n_banks))
 
-            def body(grid, row_valid, sigs, col_valid, qseg_l, qsig_l, key):
+            def body(grid, row_valid, sigs, col_valid, qseg_l, qsig_l,
+                     qvalid_l, key):
                 b_idx = jax.lax.axis_index(ba)
                 scores = prefilter.bank_scores(
                     sigs, qsig_l, row_valid, use_kernel=self.sim.use_kernel)
-                local_ids = prefilter.select_banks(scores, p_loc)
+                local_ids = prefilter.select_banks(scores, p_loc, qvalid_l)
                 sub_grid = jnp.take(grid, local_ids, axis=0)
                 sub_rv = jnp.take(row_valid, local_ids, axis=0)
                 # C2C noise folds by GLOBAL bank id of each selected bank
@@ -280,10 +324,11 @@ class ShardedCAMSimulator:
 
             return compat_shard_map(
                 body, mesh=self.mesh,
-                in_specs=(P(ba), P(ba), P(ba), P(), q_spec, q_spec, P()),
+                in_specs=(P(ba), P(ba), P(ba), P(), q_spec, q_spec, q_spec,
+                          P()),
                 out_specs=(q_spec, q_spec))(
                 state.grid, state.row_valid, state.sigs, state.col_valid,
-                qseg, qsig, key)
+                qseg, qsig, qvalid, key)
 
         def body(grid, row_valid, col_valid, qseg_l, key):
             b_idx = jax.lax.axis_index(ba)

@@ -70,6 +70,57 @@ def apply_d2d(codes: jax.Array, cfg: DeviceConfig, bits: int,
     return _maybe_sort_ranges(noisy, codes.ndim == 5)
 
 
+def _row_noise(row_seg: jax.Array, cfg: DeviceConfig, bits: int,
+               key: jax.Array, slot: jax.Array) -> jax.Array:
+    """Noise for ONE global row slot: drawn from ``fold_in(key, slot)``
+    over the row's (nh, C[, 2]) segment block, independent of every other
+    slot's draw."""
+    sigma = _sigma_for(row_seg, cfg, bits)
+    noise = jax.random.normal(jax.random.fold_in(key, slot), row_seg.shape,
+                              row_seg.dtype)
+    return row_seg + sigma * noise
+
+
+def apply_d2d_rowfold(codes: jax.Array, cfg: DeviceConfig, bits: int,
+                      key: jax.Array) -> jax.Array:
+    """Write-time variation with a per-row-slot RNG fold (the mutable-store
+    draw).
+
+    The noise for global row slot ``s`` (``s = v * R + r``) is drawn from
+    ``fold_in(key, s)``, so an incremental ``insert``/``update`` that
+    re-programs only slot ``s`` with the same base key reproduces the
+    noise a fresh full write would give that slot bit-exactly.  The grid
+    fold of ``apply_d2d`` has no such property (one grid-wide draw cannot
+    be re-drawn for a single row), which is why mutations require
+    ``sim.d2d_fold='row'``.
+    """
+    if cfg.variation not in ("d2d", "both"):
+        return codes
+    nv, nh, R = codes.shape[:3]
+    extra = codes.shape[4:]
+    rows = jnp.moveaxis(codes, 2, 1).reshape(nv * R, nh, codes.shape[3],
+                                             *extra)
+    slots = jnp.arange(nv * R, dtype=jnp.int32)
+    noisy = jax.vmap(lambda s, r: _row_noise(r, cfg, bits, key, s))(slots,
+                                                                    rows)
+    noisy = jnp.moveaxis(noisy.reshape(nv, R, nh, codes.shape[3], *extra),
+                         1, 2)
+    return _maybe_sort_ranges(noisy, codes.ndim == 5)
+
+
+def apply_d2d_slots(row_segs: jax.Array, cfg: DeviceConfig, bits: int,
+                    key: jax.Array, slots: jax.Array) -> jax.Array:
+    """The incremental counterpart of ``apply_d2d_rowfold``: noise for the
+    (M, nh, C[, 2]) row segments landing in global slots ``slots`` (M,),
+    drawn from the same per-slot fold — bit-identical to the slots' rows
+    in a full ``apply_d2d_rowfold`` pass with the same key."""
+    if cfg.variation not in ("d2d", "both"):
+        return row_segs
+    noisy = jax.vmap(lambda s, r: _row_noise(r, cfg, bits, key, s))(
+        slots.astype(jnp.int32), row_segs)
+    return _maybe_sort_ranges(noisy, row_segs.ndim == 4)
+
+
 def apply_c2c(codes: jax.Array, cfg: DeviceConfig, bits: int,
               key: jax.Array) -> jax.Array:
     """Per-query (dynamic) variation; fresh noise every search cycle.

@@ -2,7 +2,8 @@ from . import elastic, fault, serve_loop, sharding, train_loop
 from .sharding import (ShardingRules, cam_query_spec, cam_state_shardings,
                        shard, sharding_ctx, tree_shardings)
 from .train_loop import TrainState, abstract_state, init_state, make_train_step, state_axes
-from .serve_loop import CAMSearchServer, SearchRequest, Server, make_serve_step
+from .serve_loop import (CAMSearchServer, MutationRequest, QueueFull,
+                         SearchRequest, Server, make_serve_step)
 
 __all__ = [
     "sharding", "train_loop", "serve_loop", "fault", "elastic",
@@ -10,5 +11,5 @@ __all__ = [
     "cam_query_spec", "cam_state_shardings",
     "TrainState", "abstract_state", "init_state", "make_train_step",
     "state_axes", "Server", "make_serve_step",
-    "CAMSearchServer", "SearchRequest",
+    "CAMSearchServer", "SearchRequest", "MutationRequest", "QueueFull",
 ]

@@ -14,6 +14,7 @@ cross-device merge, regardless of how many requests rode the batch.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -118,6 +119,10 @@ class Server:
 # ---------------------------------------------------------------------------
 # CAM search serving
 # ---------------------------------------------------------------------------
+class QueueFull(RuntimeError):
+    """Admission control: the server's bounded queue rejected a submit."""
+
+
 @dataclass
 class SearchRequest:
     """One in-memory-search request against the resident CAM store."""
@@ -125,6 +130,9 @@ class SearchRequest:
     query: np.ndarray
     indices: Optional[np.ndarray] = None   # (k,) matched entries, -1 padded
     mask: Optional[np.ndarray] = None      # (padded_K,) match lines
+    slo: str = "default"                   # latency-percentile bucket
+    t_submit: float = 0.0                  # perf_counter seconds
+    t_done: float = 0.0
 
     @property
     def done(self) -> bool:
@@ -132,17 +140,56 @@ class SearchRequest:
 
 
 @dataclass
+class MutationRequest:
+    """One store mutation riding the serve loop's continuous batch.
+
+    ``kind`` is 'insert' / 'delete' / 'update'; consecutive requests of
+    the same kind coalesce into ONE engine call per step.  After an
+    insert completes, ``ids`` holds the caller-order row indices the new
+    rows answer to in search results.
+    """
+    rid: int
+    kind: str
+    rows: Optional[np.ndarray] = None      # insert/update payload
+    ids: Optional[np.ndarray] = None       # delete/update target ids
+    slo: str = "mutation"
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    done: bool = False
+
+
+@dataclass
 class CAMSearchServer:
-    """Micro-batching CAM search server (store once, serve many).
+    """Continuous-batching CAM serve engine (store once, serve *and
+    mutate* many).
 
     ``sim`` is a ``CAMASim`` facade, ``FunctionalSimulator``, or
-    ``ShardedCAMSimulator`` (any object with ``query(state, queries,
-    key)``); ``state`` its written — and, for the sharded backend,
-    mesh-placed — store.  Requests are answered in submission order in
-    groups of up to ``batch`` queries; ``batch`` defaults to the
-    simulator config's ``sim.serve_batch``.  Per-batch C2C keys are
-    folded from ``key`` by step index, matching the simulator's
-    one-draw-per-search-cycle model.
+    ``ShardedCAMSimulator``; ``state`` its written — and, for the sharded
+    backend, mesh-placed — store.  Search requests are answered in
+    submission order in groups of up to ``batch`` queries; ``batch``
+    defaults to the simulator config's ``sim.serve_batch``.  Per-batch
+    C2C keys are folded from ``key`` by search-step index, matching the
+    simulator's one-draw-per-search-cycle model.
+
+    Mutations (``submit_insert`` / ``submit_delete`` / ``submit_update``)
+    ride the same queue: each ``step`` first applies the queue's leading
+    mutation requests (consecutive same-kind requests coalesce into ONE
+    engine call) and then serves one search batch, so a mutation is
+    visible to every search submitted after it.  Mutation programming
+    keys fold from a separate lane (``fold_in(key, 'muta')`` then by
+    mutation-step index), so the search key schedule is untouched by
+    interleaved mutations and the whole trace replays deterministically.
+
+    Admission control: ``max_queue`` bounds the pending queue (default
+    ``sim.serve_queue``; 0 = unbounded) — submits beyond it raise
+    ``QueueFull`` (backpressure).  Malformed requests (wrong query length
+    or non-numeric dtype against the written store) are rejected at
+    submit with a ``ValueError`` and never enter the queue; if a step
+    fails anyway, its popped requests are restored to the queue front
+    before the error propagates, so no request is ever silently lost.
+
+    Every request carries an ``slo`` tag and submit/finish timestamps;
+    ``latency_stats()`` reports per-tag p50/p99 request latency.
 
     ``autoscale=False`` (default) pads every step to exactly ``batch``
     queries, so each step hits one compiled search shape.  With
@@ -153,35 +200,115 @@ class CAMSearchServer:
     compiled shapes.  Request grouping and the fold_in(key, step) key
     schedule are identical to fixed-batch serving, so (absent C2C noise,
     whose per-cycle draw count is the padded width) answers are bit-exact
-    either way.
+    either way.  Pad queries are excluded from the cascade's bank routing
+    (the ``valid_count`` knob), so answers are also bit-exact across pad
+    widths and queue depths when the search cascade is on.
     """
     sim: Any
     state: Any
     batch: Optional[int] = None
     key: Optional[jax.Array] = None
     autoscale: bool = False
+    max_queue: Optional[int] = None
 
     def __post_init__(self):
+        cfg = getattr(self.sim, "config", None)
+        scfg = getattr(cfg, "sim", None)
         if self.batch is None:
-            cfg = getattr(self.sim, "config", None)
-            self.batch = getattr(getattr(cfg, "sim", None),
-                                 "serve_batch", 32)
+            self.batch = getattr(scfg, "serve_batch", 32)
         if self.batch < 1:
             raise ValueError("batch must be >= 1")
+        if self.max_queue is None:
+            self.max_queue = getattr(scfg, "serve_queue", 0)
+        if self.max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
         if self.key is None:
             self.key = jax.random.PRNGKey(0)
-        self.queue: List[SearchRequest] = []
-        self.finished: List[SearchRequest] = []
+        # separate RNG lane for mutation programming noise, so interleaved
+        # mutations never shift the search steps' fold_in(key, step) keys
+        self._mut_key = jax.random.fold_in(self.key, 0x6D757461)  # 'muta'
+        self.queue: List[Any] = []
+        self.finished: List[Any] = []
         self._next_rid = 0
         self._steps = 0
+        self._mut_steps = 0
 
-    # ------------------------------------------------------------------
-    def submit(self, query) -> SearchRequest:
-        req = SearchRequest(self._next_rid, np.asarray(query))
-        self._next_rid += 1
+    # ----------------------------------------------------------- submit
+    def _admit(self, req):
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            raise QueueFull(
+                f"serve queue full ({self.max_queue} pending); retry "
+                "after a step() drains it")
         self.queue.append(req)
         return req
 
+    def _spec(self):
+        return getattr(self.state, "spec", None)
+
+    def _functional(self):
+        """The innermost single-chip simulator (validation helpers)."""
+        inner = getattr(self.sim, "backend", self.sim)
+        return getattr(inner, "sim", inner)
+
+    def _validate_query(self, q: np.ndarray):
+        if not np.issubdtype(q.dtype, np.number):
+            raise ValueError(
+                f"query dtype {q.dtype} is not numeric — request rejected")
+        spec = self._spec()
+        if spec is not None and q.shape != (spec.N,):
+            raise ValueError(
+                f"query shape {q.shape} does not match the written "
+                f"store's ({spec.N},) — request rejected")
+
+    def _validate_rows(self, rows: np.ndarray):
+        if not np.issubdtype(rows.dtype, np.number):
+            raise ValueError(
+                f"row dtype {rows.dtype} is not numeric — request rejected")
+        sim = self._functional()
+        if hasattr(sim, "_check_mutable"):
+            sim._check_mutable()
+            sim._check_rows(self.state, jnp.asarray(rows))
+
+    def submit(self, query, slo: str = "default") -> SearchRequest:
+        """Queue one search; rejects malformed queries at the door (a bad
+        request must fail alone, not poison the batch it would ride)."""
+        q = np.asarray(query)
+        self._validate_query(q)
+        req = SearchRequest(self._next_rid, q, slo=slo,
+                            t_submit=time.perf_counter())
+        self._next_rid += 1
+        return self._admit(req)
+
+    def submit_insert(self, rows, slo: str = "mutation") -> MutationRequest:
+        """Queue an insert of ``rows`` (M, N[, 2]); ``req.ids`` holds the
+        new rows' search ids once the request completes."""
+        rows = np.asarray(rows)
+        self._validate_rows(rows)
+        req = MutationRequest(self._next_rid, "insert", rows=rows, slo=slo,
+                              t_submit=time.perf_counter())
+        self._next_rid += 1
+        return self._admit(req)
+
+    def submit_delete(self, ids, slo: str = "mutation") -> MutationRequest:
+        req = MutationRequest(self._next_rid, "delete",
+                              ids=np.asarray(ids).reshape(-1), slo=slo,
+                              t_submit=time.perf_counter())
+        self._next_rid += 1
+        return self._admit(req)
+
+    def submit_update(self, ids, rows,
+                      slo: str = "mutation") -> MutationRequest:
+        rows = np.asarray(rows)
+        ids = np.asarray(ids).reshape(-1)
+        self._validate_rows(rows)
+        if ids.size != rows.shape[0]:
+            raise ValueError(f"{ids.size} ids but {rows.shape[0]} rows")
+        req = MutationRequest(self._next_rid, "update", rows=rows, ids=ids,
+                              slo=slo, t_submit=time.perf_counter())
+        self._next_rid += 1
+        return self._admit(req)
+
+    # ------------------------------------------------------------- step
     def _padded_width(self, n_reqs: int) -> int:
         """Step width: ``batch`` fixed, or the smallest ladder rung that
         fits the step's requests AND the sharded query-axis divisibility
@@ -201,30 +328,108 @@ class CAMSearchServer:
             rung <<= 1
         return self.batch if rung > self.batch or rung % mult else rung
 
+    def _apply_mutations(self, run: List[MutationRequest]) -> None:
+        """One coalesced engine call for a same-kind mutation run."""
+        kind = run[0].kind
+        mkey = jax.random.fold_in(self._mut_key, self._mut_steps)
+        if kind == "insert":
+            rows = np.concatenate([r.rows for r in run])
+            self.state, ids = self.sim.insert(self.state,
+                                              jnp.asarray(rows), key=mkey)
+            ids = np.asarray(ids)
+            off = 0
+            for r in run:
+                r.ids = ids[off: off + r.rows.shape[0]]
+                off += r.rows.shape[0]
+        elif kind == "delete":
+            self.state = self.sim.delete(
+                self.state, np.concatenate([r.ids for r in run]))
+        elif kind == "update":
+            self.state = self.sim.update(
+                self.state, np.concatenate([r.ids for r in run]),
+                jnp.asarray(np.concatenate([r.rows for r in run])),
+                key=mkey)
+        else:
+            raise ValueError(f"unknown mutation kind {kind!r}")
+        self._mut_steps += 1
+        now = time.perf_counter()
+        for r in run:
+            r.done, r.t_done = True, now
+            self.finished.append(r)
+
     def step(self) -> int:
-        """Serve one query batch; returns #requests answered."""
+        """Apply the queue's leading mutation runs, then serve one search
+        batch; returns #requests completed.  A failing unit restores its
+        popped requests to the queue front before re-raising."""
         if not self.queue:
             return 0
-        reqs = self.queue[: self.batch]
-        del self.queue[: len(reqs)]
-        qs = np.stack([r.query for r in reqs]).astype(np.float32)
-        pad = self._padded_width(len(reqs)) - len(reqs)
-        if pad:
-            qs = np.concatenate(
-                [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
-        step_key = jax.random.fold_in(self.key, self._steps)
+        served = 0
+        # continuous batching: drain leading mutations first so every
+        # search in this step sees the store state its submission order
+        # implies
+        while self.queue and isinstance(self.queue[0], MutationRequest):
+            run = [self.queue.pop(0)]
+            while (self.queue
+                   and isinstance(self.queue[0], MutationRequest)
+                   and self.queue[0].kind == run[0].kind):
+                run.append(self.queue.pop(0))
+            try:
+                self._apply_mutations(run)
+            except Exception:
+                self.queue[:0] = run
+                raise
+            served += len(run)
+        n = 0
+        while (n < len(self.queue) and n < self.batch
+               and isinstance(self.queue[n], SearchRequest)):
+            n += 1
+        if n == 0:
+            return served
+        reqs = self.queue[:n]
+        del self.queue[:n]
+        try:
+            qs = np.stack([r.query for r in reqs]).astype(np.float32)
+            pad = self._padded_width(len(reqs)) - len(reqs)
+            if pad:
+                qs = np.concatenate(
+                    [qs, np.zeros((pad, qs.shape[1]), qs.dtype)])
+            step_key = jax.random.fold_in(self.key, self._steps)
+            # pad queries are real rows of the padded batch but NOT real
+            # requests: valid_count keeps them out of the cascade's
+            # shared bank routing
+            idx, mask = self.sim.query(self.state, jnp.asarray(qs),
+                                       key=step_key,
+                                       valid_count=len(reqs))
+        except Exception:
+            self.queue[:0] = reqs
+            raise
         self._steps += 1
-        idx, mask = self.sim.query(self.state, jnp.asarray(qs),
-                                   key=step_key)
         idx_np, mask_np = np.asarray(idx), np.asarray(mask)
+        now = time.perf_counter()
         for i, req in enumerate(reqs):
             req.indices, req.mask = idx_np[i], mask_np[i]
+            req.t_done = now
             self.finished.append(req)
-        return len(reqs)
+        return served + len(reqs)
 
-    def run(self, max_steps: int = 10_000) -> List[SearchRequest]:
+    def run(self, max_steps: int = 10_000) -> List[Any]:
         steps = 0
         while self.queue and steps < max_steps:
             self.step()
             steps += 1
         return self.finished
+
+    # ------------------------------------------------------------ stats
+    def latency_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-SLO-tag request latency percentiles over finished requests:
+        ``{tag: {'n': count, 'p50_us': ..., 'p99_us': ...}}`` (submit →
+        finish wall time, microseconds)."""
+        by: Dict[str, List[float]] = {}
+        for r in self.finished:
+            by.setdefault(r.slo, []).append((r.t_done - r.t_submit) * 1e6)
+        return {
+            slo: {"n": float(len(v)),
+                  "p50_us": float(np.percentile(np.asarray(v), 50)),
+                  "p99_us": float(np.percentile(np.asarray(v), 99))}
+            for slo, v in by.items()
+        }

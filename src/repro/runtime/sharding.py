@@ -227,6 +227,9 @@ def cam_state_shardings(mesh: Mesh, grid_ndim: int = 4,
         "sigs": NamedSharding(mesh, gspec),
         "sig_thr": NamedSharding(mesh, PartitionSpec()),
         "perm": NamedSharding(mesh, PartitionSpec()),
+        # mutable-store field: the clean (pre-noise) codes grid shards
+        # exactly like the noisy grid it shadows
+        "codes": NamedSharding(mesh, gspec),
     }
 
 

@@ -39,6 +39,52 @@ def test_sharded_perf_sweep_rows():
                 derived, "energy_1chip_pj"), name
 
 
+def test_check_floors_latency_and_parity_guards():
+    """CI gate semantics: match=False fails, recall below floor fails,
+    serve p99 above its declared floor_p99_us ceiling fails; rows without
+    those fields (or within bounds) pass."""
+    from benchmarks.run import check_floors
+    ok = [
+        {"name": "a", "us_per_call": 1.0, "derived": "match=True"},
+        {"name": "b", "us_per_call": 1.0,
+         "derived": "recall=0.95_floor=0.90"},
+        {"name": "c", "us_per_call": 1.0,
+         "derived": "p99_us=5000_floor_p99_us=2000000_match=True"},
+        {"name": "d", "us_per_call": 1.0, "derived": "no_guards_here"},
+    ]
+    check_floors(ok)    # no raise
+    for bad, msg in (
+            ({"derived": "match=False"}, "match=False"),
+            ({"derived": "recall=0.80_floor=0.90"}, "recall"),
+            ({"derived": "p99_us=3000000_floor_p99_us=2000000"}, "p99")):
+        with pytest.raises(RuntimeError, match=msg):
+            check_floors(ok + [dict({"name": "x", "us_per_call": 0.0},
+                                    **bad)])
+
+
+def test_serve_bench_engine_rows_smoke(capsys, monkeypatch):
+    """The serve-engine bench emits parseable CSV rows whose guard fields
+    check_floors understands, with match=True on a healthy build."""
+    import benchmarks.serve_bench as sb
+    from benchmarks.run import check_floors
+    monkeypatch.setattr(sb, "ENGINE_K", 256)
+    monkeypatch.setattr(sb, "ENGINE_BATCH", 8)
+    sb.main(backend="functional", tail=False)
+    out = capsys.readouterr().out
+    rows = []
+    for line in out.splitlines():
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    names = {r["name"] for r in rows}
+    assert {"serve_engine_p50p99_functional",
+            "serve_inserts_functional"} <= names
+    assert all("match=True" in r["derived"] for r in rows)
+    assert any("floor_p99_us=" in r["derived"] for r in rows)
+    assert any("inserts_per_s=" in r["derived"] for r in rows)
+    check_floors(rows)  # guards hold on a healthy run
+
+
 @pytest.mark.slow
 def test_fig4_trends_minimal():
     from benchmarks.fig4_sweep import check_trends, run

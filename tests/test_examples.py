@@ -39,7 +39,8 @@ def test_long_context_retrieval_example_runs():
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("config", ["functional.json", "sharded.json"])
+@pytest.mark.parametrize("config", ["functional.json", "sharded.json",
+                                    "serve.json"])
 def test_camasim_run_cli_executes_checked_in_configs(config):
     """The camasim-run entry point drives a checked-in JSON config end to
     end (functional sim + perf report as JSON on stdout); the sharded

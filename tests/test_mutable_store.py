@@ -1,0 +1,344 @@
+"""Mutability contract: online insert/delete/update/compact of the
+resident store.
+
+The load-bearing guarantees:
+  * insert-then-search is BIT-IDENTICAL to a fresh write of the combined
+    data (both backends, incl. the cascade prefilter and the c2c 'bank'
+    fold) — the per-row-slot D2D fold (`sim.d2d_fold='row'`) is what makes
+    the incremental programming noise reproducible;
+  * deleted ids never match again and their slots return to the free list;
+  * `compact(state)` is bit-identical to a fresh `write` of the live rows
+    (incl. the IVF re-clustering);
+  * the estimator bills partial writes and reports an inserts/sec figure.
+
+Quantization-scale caveat the tests arrange for: a fresh write derives
+lo/hi from ITS data, while the mutable store keeps the original scale, so
+parity legs pin the data extremes inside the never-deleted prefix.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CAMASim, CAMConfig
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _cfg(backend="functional", **sim):
+    base = dict(capacity=40, c2c_fold="bank", d2d_fold="row",
+                backend=backend)
+    base.update(sim)
+    return CAMConfig.from_dict(dict(
+        app=dict(distance="l2", match_type="best", match_param=1,
+                 data_bits=3),
+        arch=dict(h_merge="adder", v_merge="comparator"),
+        circuit=dict(rows=8, cols=8, cell_type="mcam", sensing="best"),
+        device=dict(device="fefet", variation="none", variation_std=0.05),
+        sim=base))
+
+
+def _data(k_base=24, k_extra=8, n=8):
+    base = jax.random.uniform(jax.random.PRNGKey(0), (k_base, n))
+    # pin the quantization extremes in the base rows so a fresh write of
+    # any superset derives the same shared scale as the mutable store
+    base = base.at[0].set(0.0).at[1].set(1.0)
+    extra = jax.random.uniform(jax.random.PRNGKey(7), (k_extra, n))
+    return base, extra
+
+
+WKEY = jax.random.PRNGKey(5)
+QKEY = jax.random.PRNGKey(3)
+
+
+def _queries(q=5, n=8):
+    return jax.random.uniform(jax.random.PRNGKey(9), (q, n))
+
+
+def _assert_result_equal(ra, rb):
+    np.testing.assert_array_equal(np.asarray(ra.indices),
+                                  np.asarray(rb.indices))
+    np.testing.assert_array_equal(np.asarray(ra.mask), np.asarray(rb.mask))
+
+
+# ---------------------------------------------------------------------------
+# insert-then-search == fresh write
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["functional", "sharded"])
+@pytest.mark.parametrize("prefilter,variation", [
+    ("off", "none"),
+    ("signature", "none"),
+    ("off", "d2d"),
+    ("signature", "both"),     # cascade + c2c bank fold + d2d row fold
+])
+def test_insert_then_search_matches_fresh_write(backend, prefilter,
+                                                variation):
+    base, extra = _data()
+    full = jnp.concatenate([base, extra])
+    cfg = _cfg(backend, prefilter=prefilter,
+               top_p_banks=2 if prefilter != "off" else None)
+    cfg = cfg.replace(device=dict(variation=variation))
+    sim = CAMASim(cfg)
+    s_full = sim.write(full, WKEY)
+    s_ins, ids = sim.insert(sim.write(base, WKEY), extra, WKEY)
+    # inserted rows answer to the ids a fresh write gives them
+    np.testing.assert_array_equal(
+        np.asarray(ids), np.arange(base.shape[0], full.shape[0]))
+    np.testing.assert_array_equal(np.asarray(s_full.grid),
+                                  np.asarray(s_ins.grid))
+    np.testing.assert_array_equal(np.asarray(s_full.row_valid),
+                                  np.asarray(s_ins.row_valid))
+    if s_full.sigs is not None:
+        np.testing.assert_array_equal(np.asarray(s_full.sigs),
+                                      np.asarray(s_ins.sigs))
+    _assert_result_equal(sim.query(s_full, _queries(), key=QKEY),
+                         sim.query(s_ins, _queries(), key=QKEY))
+
+
+def test_insert_parity_acam_ranges():
+    lo = jax.random.uniform(jax.random.PRNGKey(2), (24, 8)) * 0.4
+    ranges = jnp.stack([lo, lo + 0.3], axis=-1)
+    extra = jnp.stack([lo[:6] + 0.1, lo[:6] + 0.5], axis=-1)
+    cfg = CAMConfig.from_dict(dict(
+        app=dict(distance="range", match_type="exact", match_param=0,
+                 data_bits=0),
+        arch=dict(h_merge="and", v_merge="gather"),
+        circuit=dict(rows=8, cols=8, cell_type="acam", sensing="exact"),
+        device=dict(device="fefet", variation="d2d", variation_std=0.02),
+        sim=dict(capacity=32, d2d_fold="row")))
+    sim = CAMASim(cfg)
+    s_full = sim.write(jnp.concatenate([ranges, extra]), WKEY)
+    s_ins, _ = sim.insert(sim.write(ranges, WKEY), extra, WKEY)
+    np.testing.assert_array_equal(np.asarray(s_full.grid),
+                                  np.asarray(s_ins.grid))
+    _assert_result_equal(sim.query(s_full, lo[:4] + 0.15, key=QKEY),
+                         sim.query(s_ins, lo[:4] + 0.15, key=QKEY))
+
+
+# ---------------------------------------------------------------------------
+# delete / free-list reuse
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("prefilter", ["off", "signature", "ivf"])
+def test_deleted_ids_never_match_and_slots_are_reused(prefilter):
+    base, extra = _data()
+    cfg = _cfg(prefilter=prefilter,
+               top_p_banks=2 if prefilter != "off" else None)
+    sim = CAMASim(cfg)
+    state = sim.write(jnp.concatenate([base, extra]), WKEY)
+    victims = np.arange(4, 9)
+    state = sim.delete(state, victims)
+    # query each deleted row's own data: the winner must not be a victim
+    res = sim.query(state, jnp.concatenate([base, extra])[victims],
+                    key=QKEY)
+    assert not np.isin(np.asarray(res.indices), victims).any()
+    assert np.asarray(res.mask)[:, victims].sum() == 0
+    # their slots come back out of the free list, same ids
+    state, ids = sim.insert(state, base[victims], WKEY)
+    assert sorted(np.asarray(ids).tolist()) == victims.tolist()
+    # double delete of a dead id fails loudly
+    with pytest.raises(ValueError, match="not live"):
+        sim.delete(sim.delete(state, [3]), [3])
+
+
+def test_insert_overflow_raises():
+    base, extra = _data()
+    sim = CAMASim(_cfg(capacity=0))
+    state = sim.write(base, WKEY)     # 24 rows in a 24-capacity store
+    with pytest.raises(ValueError, match="store full"):
+        sim.insert(state, extra, WKEY)
+
+
+def test_mutation_with_grid_d2d_fold_rejected():
+    base, extra = _data()
+    cfg = _cfg(d2d_fold="grid").replace(device=dict(variation="d2d"))
+    sim = CAMASim(cfg)
+    state = sim.write(base, WKEY)
+    with pytest.raises(ValueError, match="d2d_fold='row'"):
+        sim.insert(state, extra, WKEY)
+
+
+def test_row_shape_validation():
+    base, extra = _data()
+    sim = CAMASim(_cfg())
+    state = sim.write(base, WKEY)
+    with pytest.raises(ValueError, match="width"):
+        sim.insert(state, jnp.ones((2, 5)), WKEY)
+    with pytest.raises(ValueError, match="rows"):
+        sim.insert(state, jnp.ones((8,)), WKEY)
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+def test_update_rewrites_rows_in_place():
+    base, extra = _data()
+    sim = CAMASim(_cfg())
+    state = sim.write(base, WKEY)
+    # in-place update is bit-identical to a fresh write of the modified
+    # data (slot noise depends only on the slot, not on write history)
+    new = sim.update(state, [5], base[20][None], WKEY)
+    fresh = sim.write(base.at[5].set(base[20]), WKEY)
+    np.testing.assert_array_equal(np.asarray(new.grid),
+                                  np.asarray(fresh.grid))
+    _assert_result_equal(sim.query(new, _queries(), key=QKEY),
+                         sim.query(fresh, _queries(), key=QKEY))
+    # shapes/perm untouched
+    assert new.grid.shape == state.grid.shape
+    with pytest.raises(ValueError, match="ids but"):
+        sim.update(state, [1, 2], base[:1], WKEY)
+
+
+# ---------------------------------------------------------------------------
+# compact == fresh write
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["functional", "sharded"])
+@pytest.mark.parametrize("prefilter,variation", [
+    ("off", "none"),
+    ("signature", "both"),
+    ("ivf", "none"),           # compact re-runs the k-means placement
+    ("ivf", "both"),
+])
+def test_compact_is_bit_identical_to_fresh_write(backend, prefilter,
+                                                 variation):
+    base, extra = _data()
+    cfg = _cfg(backend, prefilter=prefilter,
+               top_p_banks=2 if prefilter != "off" else None)
+    cfg = cfg.replace(device=dict(variation=variation))
+    sim = CAMASim(cfg)
+    state, _ = sim.insert(sim.write(base, WKEY), extra, WKEY)
+    state = sim.delete(state, np.arange(4, 8))   # extremes (rows 0/1) live
+    compacted = sim.compact(state, WKEY)
+    live = jnp.concatenate([base[:4], base[8:], extra])
+    fresh = sim.write(live, WKEY)
+    np.testing.assert_array_equal(np.asarray(compacted.grid),
+                                  np.asarray(fresh.grid))
+    np.testing.assert_array_equal(np.asarray(compacted.row_valid),
+                                  np.asarray(fresh.row_valid))
+    if fresh.sigs is not None:
+        np.testing.assert_array_equal(np.asarray(compacted.sigs),
+                                      np.asarray(fresh.sigs))
+    if fresh.perm is not None:
+        np.testing.assert_array_equal(np.asarray(compacted.perm),
+                                      np.asarray(fresh.perm))
+    _assert_result_equal(sim.query(compacted, _queries(), key=QKEY),
+                         sim.query(fresh, _queries(), key=QKEY))
+
+
+def test_compact_empty_store_raises():
+    base, _ = _data()
+    sim = CAMASim(_cfg())
+    state = sim.write(base, WKEY)
+    state = sim.delete(state, np.arange(base.shape[0]))
+    with pytest.raises(ValueError, match="empty"):
+        sim.compact(state, WKEY)
+
+
+# ---------------------------------------------------------------------------
+# IVF insert routes to the inserted row (semantic, not bit-exact: an
+# incremental insert cannot re-run the fresh write's k-means placement)
+# ---------------------------------------------------------------------------
+def test_ivf_insert_is_searchable_through_the_cascade():
+    base, extra = _data()
+    sim = CAMASim(_cfg(prefilter="ivf", top_p_banks=2))
+    state, ids = sim.insert(sim.write(base, WKEY), extra, WKEY)
+    res = sim.query(state, extra, key=QKEY)
+    np.testing.assert_array_equal(np.asarray(res.indices)[:, 0],
+                                  np.asarray(ids))
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity (subprocess: XLA host-device trick must precede
+# jax init)
+# ---------------------------------------------------------------------------
+_SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CAMASim, CAMConfig
+
+base = jax.random.uniform(jax.random.PRNGKey(0), (24, 8))
+base = base.at[0].set(0.0).at[1].set(1.0)
+extra = jax.random.uniform(jax.random.PRNGKey(7), (8, 8))
+full = jnp.concatenate([base, extra])
+cfg = CAMConfig.from_dict(dict(
+    app=dict(distance="l2", match_type="best", match_param=1, data_bits=3),
+    arch=dict(h_merge="adder", v_merge="comparator"),
+    circuit=dict(rows=8, cols=8, cell_type="mcam", sensing="best"),
+    device=dict(device="fefet", variation="both", variation_std=0.05),
+    sim=dict(backend="sharded", devices=2, capacity=40,
+             prefilter="signature", top_p_banks=2, c2c_fold="bank",
+             d2d_fold="row")))
+sim = CAMASim(cfg)
+wkey, qkey = jax.random.PRNGKey(5), jax.random.PRNGKey(3)
+q = jax.random.uniform(jax.random.PRNGKey(9), (4, 8))
+s_full = sim.write(full, wkey)
+s_ins, ids = sim.insert(sim.write(base, wkey), extra, wkey)
+ra, rb = sim.query(s_full, q, key=qkey), sim.query(s_ins, q, key=qkey)
+assert np.array_equal(np.asarray(ra.indices), np.asarray(rb.indices))
+assert np.array_equal(np.asarray(ra.mask), np.asarray(rb.mask))
+sc = sim.compact(sim.delete(s_ins, np.arange(4, 8)), wkey)
+fresh = sim.write(jnp.concatenate([base[:4], base[8:], extra]), wkey)
+assert np.array_equal(np.asarray(sc.grid), np.asarray(fresh.grid))
+assert np.array_equal(np.asarray(sc.row_valid), np.asarray(fresh.row_valid))
+print("MUTABLE_SHARDED_OK")
+'''
+
+
+def test_mutations_parity_on_two_device_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..",
+                                      "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0 and "MUTABLE_SHARDED_OK" in proc.stdout, \
+        proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# estimator: partial-write billing + inserts/sec
+# ---------------------------------------------------------------------------
+def test_predict_write_partial_rows_billing():
+    from repro.core import estimate_arch, predict_write
+    cfg = _cfg()
+    arch = estimate_arch(cfg, 512, 64)
+    full = predict_write(cfg, arch)
+    one = predict_write(cfg, arch, rows=1)
+    some = predict_write(cfg, arch, rows=4)
+    # latency row-serial in touched rows, capped at R
+    assert one.latency_ns <= some.latency_ns <= full.latency_ns
+    assert predict_write(cfg, arch, rows=10**6).latency_ns \
+        == pytest.approx(full.latency_ns)
+    # energy scales with touched rows
+    assert 0 < one.energy_pj < some.energy_pj < full.energy_pj
+    assert some.energy_pj == pytest.approx(4 * one.energy_pj)
+    with pytest.raises(ValueError):
+        predict_write(cfg, arch, rows=-1)
+
+
+def test_perf_report_has_inserts_per_s():
+    from repro.core import estimate_arch, predict_write
+    sim = CAMASim(_cfg())
+    sim.plan(512, 64)
+    rep = sim.eval_perf()
+    arch = estimate_arch(sim.config, 512, 64)
+    want = 1e9 / predict_write(sim.config, arch, rows=1).latency_ns
+    assert rep["inserts_per_s"] == pytest.approx(want)
+    assert rep["inserts_per_s"] > 0
+
+
+def test_capacity_reserves_headroom_in_plan_and_write():
+    base, extra = _data()
+    sim = CAMASim(_cfg(capacity=40))
+    state = sim.write(base, WKEY)
+    assert state.spec.padded_K == 40          # ceil(40/8)*8
+    assert state.spec.K == base.shape[0]
+    arch = sim.plan(base.shape[0], base.shape[1])
+    assert arch.spec.padded_K == 40           # estimator sees the headroom
+    free = np.asarray(sim.backend.free_slots(state))
+    assert free.size == 40 - base.shape[0]

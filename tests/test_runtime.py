@@ -370,6 +370,239 @@ def test_cam_search_server_autoscale_c2c_matches_direct_padded_query():
         np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
 
 
+def _cascade_cfg():
+    from repro.core import CAMConfig
+    return CAMConfig.from_dict(dict(
+        app=dict(distance="l2", match_type="best", match_param=1,
+                 data_bits=3),
+        arch=dict(h_merge="adder", v_merge="comparator"),
+        circuit=dict(rows=8, cols=8, cell_type="mcam", sensing="best"),
+        device=dict(device="fefet"),
+        sim=dict(prefilter="signature", top_p_banks=2)))
+
+
+def test_cascade_pad_routing_regression():
+    """THE serve-padding routing bug: `select_banks` min-reduces per-query
+    margins over the batch axis, so an all-zero pad query used to vote for
+    ITS best banks and evict the real query's — padded answers diverged
+    from the unpadded ones.  `valid_count` must make them bit-identical,
+    and on these seeds the unmasked padded query must still reproduce the
+    divergence (else the regression test guards nothing)."""
+    from repro.core import FunctionalSimulator
+
+    sim = FunctionalSimulator(_cascade_cfg())
+    state = sim.write(jax.random.uniform(jax.random.PRNGKey(0), (64, 8)))
+    diverged = 0
+    for qseed in (1000, 1001, 1005):
+        q = jax.random.uniform(jax.random.PRNGKey(qseed), (1, 8))
+        direct = sim.query(state, q)
+        for width in (2, 4, 8):
+            padded = jnp.concatenate(
+                [q, jnp.zeros((width - 1, 8), q.dtype)])
+            fixed = sim.query(state, padded, valid_count=1)
+            np.testing.assert_array_equal(np.asarray(direct.indices[0]),
+                                          np.asarray(fixed.indices[0]))
+            np.testing.assert_array_equal(np.asarray(direct.mask[0]),
+                                          np.asarray(fixed.mask[0]))
+            buggy = sim.query(state, padded)       # no mask: pads vote
+            if not np.array_equal(np.asarray(direct.indices[0]),
+                                  np.asarray(buggy.indices[0])):
+                diverged += 1
+    assert diverged > 0      # the masked path is actually load-bearing
+
+
+def test_cascade_served_answers_stable_across_pad_widths_and_depths():
+    """Through the server: the same requests answer bit-identically no
+    matter the serve batch, autoscale rung, or how many other requests
+    share the queue — pad queries never steer the cascade's bank vote."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cascade_cfg())
+    state = sim.write(jax.random.uniform(jax.random.PRNGKey(0), (64, 8)))
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(1000),
+                                            (3, 8)))
+    want = sim.query(state, jnp.asarray(queries), valid_count=3)
+    for batch, autoscale in ((4, False), (8, False), (8, True), (16, True)):
+        srv = CAMSearchServer(sim, state, batch=batch, autoscale=autoscale)
+        for q in queries:
+            srv.submit(q)
+        done = srv.run()
+        assert len(done) == 3
+        for i, r in enumerate(done):
+            np.testing.assert_array_equal(r.indices,
+                                          np.asarray(want.indices[i]))
+            np.testing.assert_array_equal(r.mask, np.asarray(want.mask[i]))
+
+
+def test_cam_search_server_valid_count_noop_without_cascade():
+    """valid_count is routing-only: with the cascade off it must not
+    change full-batch answers (all-valid mask == no mask)."""
+    from repro.core import FunctionalSimulator
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    qs = jnp.asarray(np.asarray(
+        jax.random.uniform(jax.random.PRNGKey(8), (4, 16))))
+    a = sim.query(state, qs)
+    b = sim.query(state, qs, valid_count=4)
+    np.testing.assert_array_equal(np.asarray(a.indices),
+                                  np.asarray(b.indices))
+    np.testing.assert_array_equal(np.asarray(a.mask), np.asarray(b.mask))
+
+
+def test_cam_search_server_rejects_malformed_requests_at_submit():
+    """Malformed requests fail alone at the door — the queue they would
+    have poisoned is untouched and keeps serving."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    srv = CAMSearchServer(sim, state, batch=4)
+    good = srv.submit(np.zeros(16, np.float32))
+    with pytest.raises(ValueError, match="shape"):
+        srv.submit(np.zeros(9, np.float32))          # wrong width
+    with pytest.raises(ValueError, match="numeric"):
+        srv.submit(np.array(["a"] * 16))             # wrong dtype
+    with pytest.raises(ValueError, match="width"):
+        srv.submit_insert(np.zeros((2, 9), np.float32))
+    with pytest.raises(ValueError, match="numeric"):
+        srv.submit_insert(np.array([["a"] * 16]))
+    with pytest.raises(ValueError, match="ids but"):
+        srv.submit_update([1, 2], np.zeros((1, 16), np.float32))
+    assert [r.rid for r in srv.queue] == [good.rid]
+    assert srv.step() == 1 and good.done
+
+
+def test_cam_search_server_step_failure_restores_queue():
+    """A failing engine call must not lose requests: step() restores its
+    popped batch to the queue front and re-raises; the retry then serves
+    the SAME requests under the SAME fold_in(key, step) key."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    srv = CAMSearchServer(sim, state, batch=4)
+    queries = np.asarray(jax.random.uniform(jax.random.PRNGKey(11),
+                                            (3, 16)))
+    reqs = [srv.submit(q) for q in queries]
+    real_query = sim.query
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected engine fault")
+
+    sim.query = boom
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            srv.step()
+    finally:
+        sim.query = real_query
+    assert [r.rid for r in srv.queue] == [r.rid for r in reqs]
+    assert srv._steps == 0                   # key schedule untouched
+    assert srv.step() == 3
+    idx, mask = sim.query(state, jnp.asarray(queries))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(r.indices, np.asarray(idx[i]))
+        np.testing.assert_array_equal(r.mask, np.asarray(mask[i]))
+    # mutation-unit failure restores too
+    bad = srv.submit_delete([10**6])         # out-of-range id
+    with pytest.raises(ValueError, match=r"ids must be in"):
+        srv.step()
+    assert srv.queue and srv.queue[0].rid == bad.rid
+
+
+def test_cam_search_server_queue_full_backpressure():
+    from repro.core import CAMASim
+    from repro.runtime import CAMSearchServer, QueueFull
+
+    cfg = _cam_server_cfg().replace(sim=dict(serve_queue=2))
+    sim = CAMASim(cfg)
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    srv = CAMSearchServer(sim, state, batch=4)   # max_queue from config
+    assert srv.max_queue == 2
+    srv.submit(np.zeros(16, np.float32))
+    srv.submit(np.zeros(16, np.float32))
+    with pytest.raises(QueueFull):
+        srv.submit(np.zeros(16, np.float32))
+    srv.step()                                   # drains the queue
+    srv.submit(np.zeros(16, np.float32))         # admits again
+    # explicit max_queue overrides the config default
+    assert CAMSearchServer(sim, state, batch=4, max_queue=7).max_queue == 7
+
+
+def test_cam_search_server_mutations_interleave_deterministically():
+    """insert → search → delete → search through the serve loop: answers
+    reflect submission order, the final state is bit-identical to direct
+    engine mutations under the server's mutation key lane, and an
+    identical server replays the identical trace."""
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    cfg = _cam_server_cfg("both").replace(
+        sim=dict(capacity=48, d2d_fold="row"),
+        device=dict(variation_std=0.05))
+    sim = FunctionalSimulator(cfg)
+    stored = jax.random.uniform(KEY, (30, 16))
+    stored = stored.at[0].set(0.0).at[1].set(1.0)
+    extra = np.asarray(jax.random.uniform(jax.random.PRNGKey(12), (4, 16)))
+    state = sim.write(stored, KEY)
+
+    def drive(srv):
+        ins = srv.submit_insert(extra)
+        hits = [srv.submit(row) for row in extra]    # see the new rows
+        dels = srv.submit_delete([3, 4])
+        miss = srv.submit(np.asarray(stored[3]))     # deleted row's data
+        srv.run()
+        return ins, hits, dels, miss
+
+    srv = CAMSearchServer(sim, state, batch=4, key=jax.random.PRNGKey(9))
+    ins, hits, dels, miss = drive(srv)
+    assert ins.done and dels.done
+    np.testing.assert_array_equal(ins.ids, np.arange(30, 34))
+    for i, r in enumerate(hits):                 # inserted rows match
+        assert r.indices[0] == ins.ids[i]
+    assert miss.indices[0] not in (3, 4)         # deleted rows never match
+    # server state == direct mutations under the same mutation key lane
+    mk = jax.random.fold_in(srv._mut_key, 0)
+    direct, _ = sim.insert(state, jnp.asarray(extra), key=mk)
+    direct = sim.delete(direct, [3, 4])
+    np.testing.assert_array_equal(np.asarray(srv.state.grid),
+                                  np.asarray(direct.grid))
+    np.testing.assert_array_equal(np.asarray(srv.state.row_valid),
+                                  np.asarray(direct.row_valid))
+    # identical server → identical trace
+    srv2 = CAMSearchServer(sim, sim.write(stored, KEY), batch=4,
+                           key=jax.random.PRNGKey(9))
+    drive(srv2)
+    assert len(srv.finished) == len(srv2.finished)
+    for a, b in zip(srv.finished, srv2.finished):
+        assert a.rid == b.rid and a.slo == b.slo
+        if hasattr(a, "query"):                  # search requests
+            np.testing.assert_array_equal(a.indices, b.indices)
+            np.testing.assert_array_equal(a.mask, b.mask)
+
+
+def test_cam_search_server_latency_stats_by_slo():
+    from repro.core import FunctionalSimulator
+    from repro.runtime import CAMSearchServer
+
+    sim = FunctionalSimulator(_cam_server_cfg())
+    state = sim.write(jax.random.uniform(KEY, (30, 16)))
+    srv = CAMSearchServer(sim, state, batch=4)
+    for i in range(5):
+        srv.submit(np.zeros(16, np.float32),
+                   slo="interactive" if i % 2 else "batch")
+    srv.submit_insert(np.ones((1, 16), np.float32))
+    srv.run()
+    stats = srv.latency_stats()
+    assert set(stats) == {"interactive", "batch", "mutation"}
+    assert stats["interactive"]["n"] == 2 and stats["batch"]["n"] == 3
+    for s in stats.values():
+        assert 0 <= s["p50_us"] <= s["p99_us"]
+
+
 # ---------------------------------------------------------------------------
 # sharding resolver
 # ---------------------------------------------------------------------------
