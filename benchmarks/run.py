@@ -95,9 +95,9 @@ def main() -> None:
     devices = 4
     if "--devices" in sys.argv:
         devices = int(sys.argv[sys.argv.index("--devices") + 1])
-    from . import (cascade_bench, fig4_sweep, fig5_nonidealities,
-                   kernel_bench, serve_bench, sharded_bench, sharded_perf,
-                   table4_validation)
+    from . import (autotune_bench, cascade_bench, fig4_sweep,
+                   fig5_nonidealities, kernel_bench, serve_bench,
+                   sharded_bench, sharded_perf, table4_validation)
 
     rows: list = []
 
@@ -115,6 +115,8 @@ def main() -> None:
     _run_and_collect(kernel_bench.main, rows)
     _run_and_collect(lambda: cascade_bench.main(ci=not full), rows)
     _run_and_collect(lambda: serve_bench.main(backend="both"), rows)
+    _run_and_collect(lambda: autotune_bench.main(backend="functional"),
+                     rows)
     if devices > 0:
         _run_and_collect(lambda: sharded_bench.main(devices), rows)
 

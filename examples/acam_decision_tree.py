@@ -5,6 +5,12 @@ whole tree traversal.
 
     PYTHONPATH=src python examples/acam_decision_tree.py [--kernel]
 
+This is now a thin client of the query compiler (``core.plan``): the tree
+goes in as an IR program (``tree_from_paths``) and ``CAMASim.compile``
+lowers it onto the ACAM — the same leaf-per-row placement this example
+used to hand-roll (``tests/test_plan.py`` proves the compiled schedule
+bit-identical to the historical hand lowering on both backends).
+
 ``--kernel`` routes the batched classification through the fused ACAM
 range-search Pallas kernel (``cam_range_fused_pallas``) instead of the jnp
 broadcast path — same results, one HBM pass over the stored ranges for the
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
                         CircuitConfig, DeviceConfig, SimConfig)
+from repro.core.plan import tree_from_paths
 
 N_FEAT, DEPTH = 6, 3
 
@@ -85,12 +92,9 @@ def main(argv=None) -> None:
           f"x {N_FEAT} range cells")
 
     # -----------------------------------------------------------------
-    # map leaves onto the ACAM and classify with one exact range-match
+    # compile the tree program onto the ACAM (leaf-per-row lowering) and
+    # classify with one exact range-match per pass
     # -----------------------------------------------------------------
-    lo = jnp.asarray(np.stack([p[0] for p in paths]), jnp.float32)
-    hi = jnp.asarray(np.stack([p[1] for p in paths]), jnp.float32)
-    labels = np.asarray([p[2] for p in paths])
-
     cfg = CAMConfig(
         app=AppConfig(distance="range", match_type="exact", match_param=1,
                       data_bits=0),
@@ -100,16 +104,17 @@ def main(argv=None) -> None:
         device=DeviceConfig(device="fefet"),
         sim=SimConfig(use_kernel=args.kernel))
     sim = CAMASim(cfg)
-    state = sim.write(jnp.stack([lo, hi], axis=-1))
+    program = tree_from_paths(paths)
+    compiled = sim.compile(program)
 
     Xt = rng.uniform(0, 1, (200, N_FEAT)).astype(np.float32)
-    idx, mask = sim.query(state, jnp.asarray(Xt))
-    cam_pred = labels[np.maximum(np.asarray(idx[:, 0]), 0)]
+    cam_pred = compiled.run(jnp.asarray(Xt))
     sw_pred = np.asarray([tree_predict(tree, x) for x in Xt])
 
     agree = (cam_pred == sw_pred).mean()
-    matches_per_query = np.asarray(mask).sum(1)
-    perf = sim.eval_perf()
+    res = compiled.query_raw(jnp.asarray(Xt))[0]
+    matches_per_query = np.asarray(res.mask).sum(1)
+    perf = compiled.estimate()
     path = "fused range kernel" if args.kernel else "jnp broadcast"
     print(f"search path: {path}")
     print(f"CAM vs software-tree agreement: {agree:.3f} (expect 1.0 — leaf "

@@ -1,13 +1,15 @@
 """Design-space exploration (the paper's §IV-B case study, condensed).
 
-Sweeps quantization bits x subarray columns x device variation for the
-MANN task and prints an accuracy / EDP Pareto view — the workflow CAMASim
-exists to enable.
+Two nested searches, cleanly split since the query-compiler PR:
 
-The hardware side is PURE-MODEL planning: ``CAMASim.plan(entries, dims)``
-derives the architecture specifics from the store SHAPE alone, so
-``eval_perf`` runs before (and here, without) any ``write`` — the sweep
-no longer fabricates zero-filled stores just to bill area.
+* the DESIGN space (quantization bits x subarray columns x embedding dim)
+  still needs functional simulation — accuracy is measured by running the
+  MANN task per design point;
+* the DEPLOYMENT space (fused-kernel q_tile, device mesh + link preset,
+  cascade bank budget) is swept by ``CAMASim.autotune`` — an exhaustive
+  estimator-only ranking that picks the best ``sim`` section for each
+  design BEFORE any write (no hand-rolled nested loop, no fabricated
+  stores).
 
     PYTHONPATH=src:. python examples/design_space_exploration.py
 """
@@ -17,39 +19,46 @@ from repro.core import CAMASim
 DIMS = (64, 128)
 BITS = (2, 3)
 COLS = (32, 64)
-STD = (0.0, 1.0)
 ENTRIES = 32          # support-set rows planned into the CAM
+BATCH = 16            # serving batch the deployment is tuned for
 
 
 def main() -> None:
     print("training embedding nets...")
     nets = {d: mann_task.train_embedding(dim=d, steps=250) for d in DIMS}
 
-    print(f"{'dim':>4} {'bits':>4} {'cols':>4} {'d2d':>4} "
-          f"{'acc':>6} {'lat_ns':>8} {'en_pJ':>8} {'EDP_aJs':>8}")
+    print(f"{'dim':>4} {'bits':>4} {'cols':>4} {'acc':>6} {'lat_ns':>8} "
+          f"{'en_pJ':>8} {'EDP_aJs':>8}  tuned deployment")
     best = None
     for d in DIMS:
         for b in BITS:
             for c in COLS:
-                for s in STD:
-                    cfg = mann_task.mann_cam_config(d, b, rows=32, cols=c,
-                                                    d2d_std=s)
-                    acc = mann_task.eval_mann(nets[d], cfg, episodes=5)
-                    sim = CAMASim(cfg)
-                    sim.plan(ENTRIES, d)        # estimator-only: no write
-                    perf = sim.eval_perf()
-                    edp = perf.latency_ns * perf.energy_pj * 1e-3
-                    print(f"{d:4d} {b:4d} {c:4d} {s:4.1f} {acc:6.3f} "
-                          f"{perf.latency_ns:8.2f} "
-                          f"{perf.energy_pj:8.2f} {edp:8.3f}")
-                    score = acc - 0.002 * edp
-                    if best is None or score > best[0]:
-                        best = (score, d, b, c, s, acc, edp)
+                cfg = mann_task.mann_cam_config(d, b, rows=32, cols=c)
+                acc = mann_task.eval_mann(nets[d], cfg, episodes=5)
+                sim = CAMASim(cfg)
+                # estimator-only deployment sweep: no write happens
+                tuned = sim.autotune(ENTRIES, d, objective="edp",
+                                     queries_per_batch=BATCH)
+                m = tuned.best.metrics
+                k = tuned.best.knobs
+                edp = m["edp_pj_ns"] * 1e-3
+                knobs = (f"dev={k['devices']} link={k['link']} "
+                         f"top_p={k['top_p_banks']} q_tile={k['q_tile']}")
+                print(f"{d:4d} {b:4d} {c:4d} {acc:6.3f} "
+                      f"{m['latency_ns']:8.2f} {m['energy_pj']:8.2f} "
+                      f"{edp:8.3f}  {knobs}")
+                score = acc - 0.002 * edp
+                if best is None or score > best[0]:
+                    best = (score, d, b, c, acc, edp, tuned)
 
-    _, d, b, c, s, acc, edp = best
+    _, d, b, c, acc, edp, tuned = best
     print(f"\nbest accuracy/EDP trade-off: dim={d} bits={b} cols={c} "
-          f"(acc={acc:.3f}, EDP={edp:.3f} aJ*s)"
-          f"{' under variation' if s else ''}")
+          f"(acc={acc:.3f}, EDP={edp:.3f} aJ*s)")
+    print(f"its deployment space, ranked by the estimator "
+          f"({len(tuned.candidates)} candidates, {tuned.skipped} invalid):")
+    print(tuned.table(top=5))
+    print("\nwinning sim section (loadable as-is in a JSON config):")
+    print(" ", tuned.config.sim)
 
 
 if __name__ == "__main__":

@@ -2,6 +2,7 @@
 
     camasim-run CONFIG.json [--entries K] [--dims N] [--queries Q]
                             [--seed S] [--include-write] [--plan-only]
+    camasim-run CONFIG.json --autotune [--objective edp] [--top T]
 
 The config is the FULL experiment description (app/arch/circuit/device
 design levels + the sim execution section); the CLI drives
@@ -9,6 +10,14 @@ design levels + the sim execution section); the CLI drives
 data and prints the performance report as JSON to stdout.  With
 ``--plan-only`` no data is ever written: the architecture is derived from
 the (entries, dims) shape alone (estimator-only planning).
+
+``--autotune`` extends plan-only semantics to the whole DEPLOYMENT space:
+it sweeps the ``sim``-section knobs (q_tile / devices / link /
+top_p_banks / ...) purely on the estimator, prints the ranked candidate
+table to stderr, writes the winning full config as
+``CONFIG.tuned.json`` next to the input, and emits a JSON summary
+(objective, winning knobs/metrics, tuned path) to stdout.  Still zero
+writes — the tuned config deploys by re-running with it.
 """
 from __future__ import annotations
 
@@ -44,6 +53,15 @@ def main(argv: Optional[list] = None) -> int:
                     help="add the write-path prediction to the report")
     ap.add_argument("--plan-only", action="store_true",
                     help="estimator-only: no functional simulation at all")
+    ap.add_argument("--autotune", action="store_true",
+                    help="estimator-only deployment sweep: rank sim-section "
+                         "candidates, write CONFIG.tuned.json next to the "
+                         "input")
+    ap.add_argument("--objective", default="edp",
+                    help="autotune ranking objective "
+                         "(latency|energy|area|edp|qps; default edp)")
+    ap.add_argument("--top", type=int, default=10,
+                    help="rows of the ranked table to print (default 10)")
     args = ap.parse_args(argv)
 
     import jax
@@ -56,6 +74,36 @@ def main(argv: Optional[list] = None) -> int:
     print(f"config : {args.config}", file=sys.stderr)
     print(f"backend: {cfg.sim.backend} (use_kernel={cfg.sim.use_kernel})",
           file=sys.stderr)
+
+    if args.autotune:
+        res = sim.autotune(args.entries, args.dims,
+                           objective=args.objective,
+                           queries_per_batch=args.queries)
+        print(f"autotune: {len(res.candidates)} candidates ranked by "
+              f"{res.objective} ({res.skipped} invalid skipped)",
+              file=sys.stderr)
+        print(res.table(top=args.top), file=sys.stderr)
+        tuned_path = (args.config[:-len(".json")]
+                      if args.config.endswith(".json")
+                      else args.config) + ".tuned.json"
+        with open(tuned_path, "w") as f:
+            f.write(res.config.to_json(indent=1))
+            f.write("\n")
+        print(f"tuned  : {tuned_path}", file=sys.stderr)
+        best = res.best
+        json.dump({
+            "objective": res.objective,
+            "entries": res.entries,
+            "dims": res.dims,
+            "queries_per_batch": res.queries_per_batch,
+            "candidates": len(res.candidates),
+            "skipped": res.skipped,
+            "tuned_config": tuned_path,
+            "best": {"knobs": _jsonable(best.knobs),
+                     "metrics": _jsonable(best.metrics)},
+        }, sys.stdout, indent=1)
+        print()
+        return 0
 
     if args.plan_only:
         sim.plan(args.entries, args.dims)

@@ -10,15 +10,17 @@ from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
                      DeviceConfig, SimConfig)
 from .functional import CAMState, FunctionalSimulator
 from .perf import (MeshLink, MeshSpec, PerfReport, PerfResult, estimate_arch,
-                   predict_search, predict_search_sharded, predict_write)
+                   predict_schedule, predict_search, predict_search_sharded,
+                   predict_write)
 from .results import SearchResult
 from .sharded import ShardedCAMSimulator
+from . import plan
 
 __all__ = [
     "Backend", "CAMASim", "CAMConfig", "AppConfig", "ArchConfig",
     "CircuitConfig", "DeviceConfig", "SimConfig", "CAMState",
     "FunctionalSimulator", "PerfReport", "PerfResult", "SearchResult",
     "MeshLink", "MeshSpec", "ShardedCAMSimulator", "estimate_arch",
-    "make_backend", "predict_search", "predict_search_sharded",
-    "predict_write",
+    "make_backend", "plan", "predict_schedule", "predict_search",
+    "predict_search_sharded", "predict_write",
 ]

@@ -163,6 +163,37 @@ class CAMASim:
                     prefilter_bits=sig_bits, **perf_kw)
         return out
 
+    # ------------------------------------------------ planning / tuning
+    def compile(self, program, *, n_features: Optional[int] = None,
+                max_rows_per_pass: Optional[int] = None,
+                align_banks: Optional[bool] = None):
+        """Compile a query program (``core.plan.ir``) onto this CAM.
+
+        Lowers points / range predicates / AND-OR / tree-ensembles into a
+        ``Schedule`` of write placements + query passes + a host-side
+        combine, and returns a ``CompiledProgram`` bound to this facade:
+        ``.run(X)`` executes it on the configured backend, ``.estimate()``
+        bills the whole schedule on the estimator before any write."""
+        from .plan.compile import CompiledProgram, lower
+        schedule = lower(program, self.config, n_features=n_features,
+                         max_rows_per_pass=max_rows_per_pass,
+                         align_banks=align_banks)
+        return CompiledProgram(self, schedule)
+
+    def autotune(self, entries: int, dims: int, *, space=None,
+                 objective: str = "edp", queries_per_batch: int = 32):
+        """Estimator-only deployment sweep for an ``(entries, dims)``
+        store: rank ``sim``-section candidates (q_tile / c2c_query_tile /
+        devices / query_shards / link / top_p_banks / signature_bits) and
+        return an ``AutotuneResult`` whose ``.config`` is the argmin —
+        zero writes, zero backends constructed (``core.plan.autotune``).
+        The facade's own config is not mutated; construct
+        ``CAMASim(result.config)`` to deploy the winner."""
+        from .plan.autotune import autotune as _autotune
+        return _autotune(self.config, entries, dims, space=space,
+                         objective=objective,
+                         queries_per_batch=queries_per_batch)
+
     # ------------------------------------------------------- convenience
     def search(self, stored: jax.Array, queries: jax.Array,
                key: Optional[jax.Array] = None) -> SearchResult:

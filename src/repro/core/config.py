@@ -140,6 +140,11 @@ class SimConfig:
     prefilter: str = "off"         # off / signature / ivf
     top_p_banks: Optional[int] = None  # banks searched per batch (None = all)
     signature_bits: int = 0        # stage-1 signature width (0 = one per dim)
+    # Fused-kernel query tile: queries per stored-grid pass.  None keeps the
+    # kernels' VMEM working-set formula (kernels.cam_search.default_q_tile);
+    # an explicit value must sit on the same power-of-two ladder the formula
+    # rounds to, so the autotuner's pick is directly settable from JSON.
+    q_tile: Optional[int] = None
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "backend")
@@ -164,6 +169,12 @@ class SimConfig:
             raise ValueError("top_p_banks must be >= 1 (or None = all banks)")
         if self.signature_bits < 0:
             raise ValueError("signature_bits must be >= 0 (0 = one per dim)")
+        if self.q_tile is not None:
+            q = self.q_tile
+            if not (1 <= q <= 256) or (q & (q - 1)):
+                raise ValueError(
+                    "q_tile must be a power of two in [1, 256] "
+                    "(or None = the kernels' VMEM formula)")
 
     def cascade_enabled(self) -> bool:
         """Both stages configured: a prefilter is selected AND a bank

@@ -113,6 +113,7 @@ class FunctionalSimulator:
         self.config = config
         self.use_kernel = config.sim.use_kernel
         self.c2c_query_tile = config.sim.c2c_query_tile
+        self.q_tile = config.sim.q_tile
         # 'grid': one normal draw over the whole (nv, nh, R, C) grid per
         # cycle (the historical single-device draw).  'bank': one draw per
         # nv bank from fold_in(cycle_key, bank index) — bit-identical no
@@ -626,7 +627,8 @@ class FunctionalSimulator:
                 col_valid=col_valid,
                 row_valid=row_valid,
                 use_kernel=self.use_kernel,
-                want_dist=self.need_dist())
+                want_dist=self.need_dist(),
+                q_tile=self.q_tile)
 
         if cfg.device.variation not in ("c2c", "both"):
             return run(grid, qseg)
@@ -674,5 +676,6 @@ class FunctionalSimulator:
             col_valid=state.col_valid,
             row_valid=state.row_valid,
             use_kernel=self.use_kernel,
-            want_dist=self.need_dist())
+            want_dist=self.need_dist(),
+            q_tile=self.q_tile)
         return self.merge_rows(dist, match, state.spec.padded_K)

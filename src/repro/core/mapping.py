@@ -18,6 +18,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -98,6 +99,36 @@ def row_valid_mask(spec: GridSpec) -> jax.Array:
 def global_row_index(spec: GridSpec) -> jax.Array:
     """(nv, R) global entry index of each subarray row."""
     return jnp.arange(spec.padded_K).reshape(spec.nv, spec.R)
+
+
+# ---------------------------------------------------------------------------
+# grouped row placement (query-compiler write planning)
+# ---------------------------------------------------------------------------
+def plan_group_offsets(group_sizes, R: int, align: bool = False):
+    """Row offsets for placing consecutive row GROUPS (the query compiler's
+    co-fired predicate sets — e.g. one tree of an ensemble) into one store.
+
+    ``align=True`` rounds each group's start up to a subarray-row boundary
+    (multiples of ``R``), so after ``partition_stored`` every group owns
+    whole nv banks and co-fired predicates land in the same banks — no
+    bank mixes rows of two groups (the gap rows are filler the compiler
+    makes unmatchable).  ``align=False`` packs groups densely.
+
+    Returns ``(offsets, total_rows)`` with ``offsets[i]`` the first row of
+    group ``i``.
+    """
+    if R < 1:
+        raise ValueError("R must be >= 1")
+    offsets = []
+    total = 0
+    for s in group_sizes:
+        if s < 1:
+            raise ValueError("every group needs at least one row")
+        if align and total % R:
+            total += R - total % R
+        offsets.append(total)
+        total += int(s)
+    return np.asarray(offsets, np.int64), total
 
 
 # ---------------------------------------------------------------------------

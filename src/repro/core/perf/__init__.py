@@ -1,7 +1,7 @@
 from .devices import CellModel, get_cell_model, register_cell_model
 from .estimator import (ArchSpecifics, PerfReport, PerfResult,
                         cascade_billing, estimate_arch, perf_report,
-                        predict_prefilter, predict_search,
+                        predict_prefilter, predict_schedule, predict_search,
                         predict_search_sharded, predict_write,
                         sharded_merge_bytes)
 from .interconnect import (MESH_LINKS, MeshLink, MeshSpec, get_mesh_link,
@@ -11,8 +11,9 @@ from .peripherals import PeripheralBill, estimate_merge_peripherals
 __all__ = [
     "CellModel", "get_cell_model", "register_cell_model",
     "ArchSpecifics", "PerfReport", "PerfResult", "estimate_arch",
-    "cascade_billing", "predict_prefilter", "predict_search",
-    "predict_search_sharded", "predict_write", "perf_report",
+    "cascade_billing", "predict_prefilter", "predict_schedule",
+    "predict_search", "predict_search_sharded", "predict_write",
+    "perf_report",
     "sharded_merge_bytes", "MeshLink", "MeshSpec", "MESH_LINKS",
     "get_mesh_link", "mesh_all_gather",
     "PeripheralBill", "estimate_merge_peripherals",

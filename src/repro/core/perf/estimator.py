@@ -444,6 +444,76 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
     return PerfReport(out)
 
 
+def predict_schedule(config: CAMConfig, pass_shapes, *,
+                     mesh: Optional[Union[int,
+                                          "interconnect.MeshSpec"]] = None,
+                     n_queries: int = 1, include_write: bool = False,
+                     ops_per_query: int = 1,
+                     clock_hz: Optional[float] = None,
+                     queries_per_batch: int = 1,
+                     searched_fraction: Optional[float] = None,
+                     prefilter_bits: Optional[int] = None) -> PerfReport:
+    """Whole-schedule billing: a multi-pass query program (the
+    ``core.plan`` compiler's output) costed through the existing
+    single-pass predictors BEFORE any write.
+
+    ``pass_shapes`` is a sequence of per-pass ``(entries, dims)`` store
+    shapes (``Schedule.pass_shapes()``).  Every pass is billed exactly as
+    ``perf_report`` bills a single store of that shape (same mesh /
+    cascade / clock semantics, so a one-pass schedule is key-for-key the
+    plain report), and the passes execute in series on their own resident
+    slabs: ``latency_ns`` / ``energy_pj`` / ``area_um2`` are the SUMS of
+    the per-pass predictions (a property test pins this), ``edp_pj_ns``
+    is recomputed from the summed latency and energy.  ``include_write``
+    bills each pass's placement as a ``predict_write(rows=K_pass)``
+    partial write into its slab.  The per-pass reports ride along under
+    ``"passes"``.
+    """
+    shapes = [(int(k), int(n)) for k, n in pass_shapes]
+    if not shapes:
+        raise ValueError("a schedule needs at least one pass")
+    reports = []
+    writes = []
+    for K, N in shapes:
+        arch = estimate_arch(config, K, N)
+        reports.append(perf_report(
+            config, arch, mesh=mesh, n_queries=n_queries,
+            include_write=False, ops_per_query=ops_per_query,
+            clock_hz=clock_hz, queries_per_batch=queries_per_batch,
+            searched_fraction=searched_fraction,
+            prefilter_bits=prefilter_bits))
+        if include_write:
+            writes.append(predict_write(config, arch, rows=K))
+    lat = sum(r["latency_ns"] for r in reports)
+    en = sum(r["energy_pj"] for r in reports)
+    area = sum(r["area_um2"] for r in reports)
+    out = {
+        "arch": " + ".join(r["arch"] for r in reports),
+        "search": PerfResult(
+            latency_ns=lat, energy_pj=en, area_um2=area,
+            breakdown={f"pass{i}": {"latency_ns": r["latency_ns"],
+                                    "energy_pj": r["energy_pj"],
+                                    "area_um2": r["area_um2"]}
+                       for i, r in enumerate(reports)}),
+        "latency_ns": lat,
+        "energy_pj": en,
+        "area_um2": area,
+        "edp_pj_ns": lat * en / max(1, n_queries),
+        "passes": reports,
+        "inserts_per_s": reports[0]["inserts_per_s"],
+    }
+    if include_write:
+        w = PerfResult(
+            latency_ns=sum(x.latency_ns for x in writes),
+            energy_pj=sum(x.energy_pj for x in writes),
+            area_um2=area,
+            breakdown={f"pass{i}": x.breakdown["write"]
+                       for i, x in enumerate(writes)})
+        out["write"] = w
+        out["energy_pj"] += w.energy_pj
+    return PerfReport(out)
+
+
 def predict_write(config: CAMConfig, arch: ArchSpecifics,
                   rows: Optional[int] = None) -> PerfResult:
     """Write-path prediction: program all rows (row-parallel across

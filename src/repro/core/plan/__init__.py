@@ -1,0 +1,22 @@
+"""Query compiler + deployment autotuner (C4CAM-style planning layer).
+
+``ir`` is the tiny program representation (points, range predicates,
+AND/OR, trees, ensembles); ``lower`` compiles a program into a
+``Schedule`` of CAM primitive calls; ``autotune`` sweeps the deployment
+space purely on the estimator.  ``CAMASim.compile`` / ``CAMASim.autotune``
+are the facade entry points.
+"""
+from . import ir
+from .autotune import (OBJECTIVES, Q_TILE_LADDER, AutotuneResult, Candidate,
+                       autotune, default_space, simulated_qps)
+from .compile import CompiledProgram, QueryPass, Schedule, lower
+from .ir import (And, Band, Ensemble, Leaf, Or, Point, Tree, evaluate,
+                 program_dims, to_dnf, tree_from_paths)
+
+__all__ = [
+    "ir", "Point", "Band", "And", "Or", "Leaf", "Tree", "Ensemble",
+    "evaluate", "to_dnf", "tree_from_paths", "program_dims",
+    "QueryPass", "Schedule", "CompiledProgram", "lower",
+    "autotune", "default_space", "simulated_qps", "AutotuneResult",
+    "Candidate", "OBJECTIVES", "Q_TILE_LADDER",
+]

@@ -1,0 +1,276 @@
+"""Estimator-driven deployment autotuner: pick the ``sim`` config before
+any write.
+
+Sweeps the DEPLOYMENT space — knobs that change how the experiment
+executes, not what it computes: the fused-kernel query tile
+(``sim.q_tile``), the C2C noise tile (``sim.c2c_query_tile``), the mesh
+split (``sim.devices`` x ``sim.query_shards`` + link preset), and the
+search-cascade budget (``sim.top_p_banks`` / ``sim.signature_bits``) —
+scoring every candidate purely on the performance estimator
+(``perf.perf_report`` over ``plan(entries, dims)`` shapes).  No backend is
+constructed and no ``write`` ever happens: the sweep is deterministic
+arithmetic, so ``CAMASim.autotune`` can rank thousands of deployments in
+milliseconds and the winner is directly loadable from JSON.
+
+Two metric families coexist honestly:
+
+* hardware-model metrics (``latency_ns`` / ``energy_pj`` / ``area_um2`` /
+  ``edp``) come from the paper-calibrated estimator — ``q_tile`` and
+  ``c2c_query_tile`` do NOT move these (the modeled CAM fires whole
+  subarrays regardless of how the simulator tiles its batches);
+* ``sim_qps`` is a SIMULATOR-throughput proxy — the HBM bytes the fused
+  kernels stream per batch (stored planes x passes + queries + match
+  write-back) over a nominal HBM bandwidth — which is what ``q_tile``
+  does move.  ``benchmarks/autotune_bench.py`` reports how well this
+  proxy's ranking agrees with measured qps (rank agreement as an honest
+  BENCH field).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..config import CAMConfig
+from ..perf import MeshSpec, PerfReport, estimate_arch, perf_report
+from ..perf.interconnect import MESH_LINKS
+
+__all__ = ["Candidate", "AutotuneResult", "autotune", "default_space",
+           "simulated_qps", "OBJECTIVES", "Q_TILE_LADDER"]
+
+# the power-of-two ladder SimConfig.q_tile validates against
+Q_TILE_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+# nominal accelerator HBM bandwidth for the simulator-throughput proxy
+# (bytes/s); the proxy only RANKS candidates, absolute qps is calibrated
+# against measurement by benchmarks/autotune_bench.py
+HBM_BYTES_PER_S = 819e9
+
+# objective -> (metric key, sign); candidates minimize sign * value
+OBJECTIVES = {
+    "latency": ("latency_ns", 1.0),
+    "energy": ("energy_pj", 1.0),
+    "area": ("area_um2", 1.0),
+    "edp": ("edp_pj_ns", 1.0),
+    "qps": ("sim_qps", -1.0),
+}
+
+# sweep-knob iteration order (fixed, so the argmin tie-break — first
+# minimum wins — is reproducible and testable against a hand-rolled loop)
+_KNOBS = ("q_tile", "c2c_query_tile", "devices", "query_shards", "link",
+          "top_p_banks", "signature_bits")
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One scored deployment: the full config (loadable as-is), the knob
+    assignment that produced it, and its metrics."""
+    config: CAMConfig
+    knobs: Dict[str, object]
+    metrics: Dict[str, float]
+    objective: float
+    report: PerfReport = field(repr=False, default=None)
+
+
+@dataclass
+class AutotuneResult:
+    """Ranked sweep output.  ``best``/``config`` are the argmin;
+    ``candidates`` is the full ranked table (ascending objective);
+    ``skipped`` counts knob combinations rejected by config validation."""
+    objective: str
+    entries: int
+    dims: int
+    queries_per_batch: int
+    candidates: List[Candidate]
+    skipped: int = 0
+
+    @property
+    def best(self) -> Candidate:
+        return self.candidates[0]
+
+    @property
+    def config(self) -> CAMConfig:
+        return self.best.config
+
+    def table(self, top: Optional[int] = None) -> str:
+        """Human-readable ranked candidate table."""
+        rows = self.candidates[:top]
+        hdr = (f"{'#':>3} {'q_tile':>6} {'c2c':>4} {'dev':>4} {'qsh':>4} "
+               f"{'link':>10} {'top_p':>6} {'sig':>4} {'lat_ns':>10} "
+               f"{'en_pJ':>10} {'edp':>12} {'qps':>12}")
+        out = [hdr]
+        for i, c in enumerate(rows):
+            k, m = c.knobs, c.metrics
+            out.append(
+                f"{i:3d} {str(k['q_tile']):>6} {k['c2c_query_tile']:4d} "
+                f"{k['devices']:4d} {k['query_shards']:4d} "
+                f"{str(k['link']):>10} {str(k['top_p_banks']):>6} "
+                f"{k['signature_bits']:4d} {m['latency_ns']:10.2f} "
+                f"{m['energy_pj']:10.2f} {m['edp_pj_ns']:12.2f} "
+                f"{m['sim_qps']:12.0f}")
+        return "\n".join(out)
+
+
+def default_space(config: CAMConfig, entries: int, dims: int
+                  ) -> Dict[str, Sequence]:
+    """A small default sweep adapted to the planned store shape: the
+    q_tile ladder's upper rungs, 1/2/4-device meshes over two link
+    presets, and — when the grid has enough banks to route — a top-p/4
+    cascade budget."""
+    spec = estimate_arch(config, entries, dims).spec
+    space: Dict[str, Sequence] = {
+        "q_tile": [None, 16, 64, 256],
+        "c2c_query_tile": [config.sim.c2c_query_tile],
+        "devices": [1, 2, 4],
+        "query_shards": [1],
+        "link": ["on_package", "pcb"],
+        "top_p_banks": [None],
+        "signature_bits": [0],
+    }
+    if spec.nv >= 4:
+        space["top_p_banks"] = [None, max(1, spec.nv // 4)]
+    return space
+
+
+def simulated_qps(config: CAMConfig, entries: int, dims: int, *,
+                  queries_per_batch: int = 1,
+                  q_tile: Optional[int] = None,
+                  devices: int = 1, query_shards: int = 1,
+                  top_p_banks: Optional[int] = None,
+                  want_dist: bool = True) -> float:
+    """Simulator-throughput proxy: fused-kernel HBM traffic per batch.
+
+    The fused kernels stream the resident stored planes from HBM once per
+    Q-tile (``ceil(Q_local / q_tile)`` passes), move the query block down
+    and the (Q, nv, nh, R) match/count block back; the slowest device
+    bounds the batch.  Bank sharding divides the streamed banks, query
+    sharding divides the local batch (and multiplies throughput), and the
+    cascade's top-p routing shrinks the searched banks.  Returned as
+    queries/second over ``HBM_BYTES_PER_S`` — a RANKING proxy, validated
+    against measurement by ``benchmarks/autotune_bench.py``.
+    """
+    from repro.kernels.cam_search import default_q_tile
+
+    spec = estimate_arch(config, entries, dims).spec
+    planes = 2 if config.app.distance == "range" else 1
+    Q = max(1, queries_per_batch)
+    q_loc = math.ceil(Q / max(1, query_shards))
+    qt = q_tile or default_q_tile(spec.R, spec.C, planes)
+    qt = max(1, min(qt, q_loc))
+    nv_loc = math.ceil(spec.nv / max(1, devices))
+    p_loc = (nv_loc if top_p_banks is None
+             else min(nv_loc, math.ceil(min(top_p_banks, spec.nv)
+                                        / max(1, devices))))
+    passes = math.ceil(q_loc / qt)
+    stream = 4.0 * planes * p_loc * spec.nh * spec.R * spec.C * passes
+    q_bytes = 4.0 * q_loc * spec.nh * spec.C
+    out_bytes = (4.0 * q_loc * p_loc * spec.nh * spec.R
+                 * (2 if want_dist else 1))
+    # all shard groups run in parallel, so the whole Q-batch lands in one
+    # local-group time
+    t_s = (stream + q_bytes + out_bytes) / HBM_BYTES_PER_S
+    return Q / t_s
+
+
+def _candidate_config(config: CAMConfig, knobs: dict) -> CAMConfig:
+    """Assemble one candidate's full config from a knob assignment."""
+    sim = dict(
+        q_tile=knobs["q_tile"],
+        c2c_query_tile=knobs["c2c_query_tile"],
+        devices=knobs["devices"] if knobs["devices"] > 1 else 0,
+        query_shards=knobs["query_shards"],
+        backend="sharded" if (knobs["devices"] > 1
+                              or knobs["query_shards"] > 1)
+        else "functional",
+        top_p_banks=knobs["top_p_banks"],
+        signature_bits=knobs["signature_bits"],
+    )
+    if knobs["top_p_banks"] is not None:
+        if config.sim.prefilter == "off":
+            sim["prefilter"] = "signature"
+        # routed searches with C2C noise need the per-bank RNG fold
+        if config.device.variation in ("c2c", "both"):
+            sim["c2c_fold"] = "bank"
+    cand = config.replace(sim=sim)
+    cand.validate()
+    return cand
+
+
+def autotune(config: CAMConfig, entries: int, dims: int, *,
+             space: Optional[Dict[str, Sequence]] = None,
+             objective: str = "edp",
+             queries_per_batch: int = 32) -> AutotuneResult:
+    """Exhaustive estimator sweep over the deployment space.
+
+    ``space`` overrides any subset of the ``default_space`` axes (lists of
+    values per knob name).  Every candidate is billed with
+    ``perf_report`` over the planned ``(entries, dims)`` shape — zero
+    writes, zero backends — and ranked by ``objective`` (see
+    ``OBJECTIVES``; ties break toward the earlier knob combination, in
+    ``_KNOBS`` iteration order).  Invalid combinations (config
+    cross-validation) are skipped and counted.
+    """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"objective {objective!r} not in "
+                         f"{sorted(OBJECTIVES)}")
+    metric, sign = OBJECTIVES[objective]
+    sp = dict(default_space(config, entries, dims))
+    if space:
+        unknown = set(space) - set(sp)
+        if unknown:
+            raise ValueError(f"unknown sweep knobs {sorted(unknown)}; "
+                             f"knobs: {sorted(sp)}")
+        sp.update(space)
+    for l in sp["link"]:
+        if l not in MESH_LINKS:
+            raise ValueError(f"unknown link preset {l!r}; presets: "
+                             f"{sorted(MESH_LINKS)}")
+
+    candidates: List[Tuple[float, int, Candidate]] = []
+    skipped = 0
+    order = 0
+    for combo in itertools.product(*(sp[k] for k in _KNOBS)):
+        knobs = dict(zip(_KNOBS, combo))
+        if knobs["devices"] <= 1 and knobs["query_shards"] <= 1 \
+                and knobs["link"] != sp["link"][0]:
+            continue    # single chip: the link never fires; dedupe
+        try:
+            cand_cfg = _candidate_config(config, knobs)
+        except ValueError:
+            skipped += 1
+            continue
+        arch = estimate_arch(cand_cfg, entries, dims)
+        d = knobs["devices"]
+        mesh = MeshSpec(d, knobs["link"]) if d > 1 else None
+        q_loc = math.ceil(queries_per_batch
+                          / max(1, knobs["query_shards"]))
+        report = perf_report(cand_cfg, arch, mesh=mesh,
+                             queries_per_batch=q_loc)
+        qps = simulated_qps(
+            cand_cfg, entries, dims, queries_per_batch=queries_per_batch,
+            q_tile=knobs["q_tile"], devices=d,
+            query_shards=knobs["query_shards"],
+            top_p_banks=knobs["top_p_banks"])
+        metrics = {
+            "latency_ns": report["latency_ns"],
+            "energy_pj": report["energy_pj"],
+            # query sharding replicates the store across shard groups
+            "area_um2": report["area_um2"] * max(1, knobs["query_shards"]),
+            "edp_pj_ns": report["edp_pj_ns"],
+            "sim_qps": qps,
+        }
+        obj = sign * metrics[metric]
+        candidates.append(
+            (obj, order,
+             Candidate(config=cand_cfg, knobs=knobs, metrics=metrics,
+                       objective=obj, report=report)))
+        order += 1
+    if not candidates:
+        raise ValueError("every knob combination was invalid for this "
+                         "config — nothing to rank")
+    candidates.sort(key=lambda t: (t[0], t[1]))
+    return AutotuneResult(objective=objective, entries=entries, dims=dims,
+                          queries_per_batch=queries_per_batch,
+                          candidates=[c for _, _, c in candidates],
+                          skipped=skipped)

@@ -1,0 +1,304 @@
+"""Query-program lowering: IR -> ``Schedule`` of CAM primitive calls.
+
+A program (``core.plan.ir``) lowers to a ``Schedule``: one or more write
+placements (each a stored-row array for one ``CAMASim.write``), the query
+passes that search them, and a host-side combine that folds the per-pass
+match masks back into the program's semantics (bool for predicates, labels
+for trees/ensembles).
+
+Lowering shape
+--------------
+Predicates normalize to DNF (``ir.to_dnf``): each conjunction intersects
+into one [lo, hi] box = ONE stored ACAM row; the OR across conjunctions is
+the CAM's native match-line disjunction — no host work beyond "any row
+matched".  Trees map leaf-per-row exactly like the hand lowering in
+``examples/acam_decision_tree.py`` (that example is now a thin client of
+this module, proven bit-identical to its historical hand-rolled version).
+Ensembles place one row GROUP per tree; ``mapping.plan_group_offsets``
+chooses the row placement, bank-aligning groups (co-fired predicates land
+in the same banks, filler rows are unmatchable lo > hi boxes).  On a
+point CAM (``app.distance != 'range'``) only OR-of-``Point`` programs
+lower: the rows are the point values themselves.
+
+``max_rows_per_pass`` packs groups first-fit into multiple passes when a
+deployment caps resident rows; the combine then merges masks across
+passes, and ``perf.predict_schedule`` bills the passes' latency/energy in
+series before any write.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .. import mapping
+from ..config import CAMConfig
+from . import ir
+
+__all__ = ["QueryPass", "Schedule", "CompiledProgram", "lower"]
+
+
+@dataclass(frozen=True)
+class QueryPass:
+    """One write placement + query pass.
+
+    ``stored``: the rows handed to ``CAMASim.write`` — (K, N, 2) [lo, hi]
+    boxes on a range CAM, (K, N) values on a point CAM.  ``labels`` and
+    ``groups`` are per-row combine metadata: the leaf label (0 for
+    predicates) and the co-fired group id (tree index; -1 marks filler
+    rows, which can never match and never vote).
+    """
+    stored: np.ndarray
+    labels: np.ndarray
+    groups: np.ndarray
+
+    @property
+    def rows(self) -> int:
+        return self.stored.shape[0]
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """The compiled program: write placements + query passes + combine
+    mode (``kind``: 'match' = boolean predicate, 'tree' = first-match
+    label, 'ensemble' = per-group first-match labels, majority vote)."""
+    kind: str
+    passes: Tuple[QueryPass, ...]
+    n_features: int
+    n_groups: int
+    range_mode: bool
+
+    @property
+    def total_rows(self) -> int:
+        return sum(p.rows for p in self.passes)
+
+    def pass_shapes(self) -> List[Tuple[int, int]]:
+        """Per-pass (entries, dims) — the shapes ``predict_schedule``
+        bills."""
+        return [(p.rows, self.n_features) for p in self.passes]
+
+    # ---------------------------------------------------------- combine
+    def combine(self, masks: Sequence[np.ndarray]) -> np.ndarray:
+        """Host-side combine: per-pass match masks -> program output.
+
+        ``masks[i]`` is pass i's (Q, padded_K_i) row-match mask (the
+        ``SearchResult.mask`` of that pass; padding columns past the
+        pass's stored rows are ignored).  Returns bool (Q,) for 'match'
+        programs, labels (Q,) otherwise.
+        """
+        if len(masks) != len(self.passes):
+            raise ValueError(f"{len(self.passes)} passes but "
+                             f"{len(masks)} masks")
+        mask = np.concatenate(
+            [np.asarray(m)[:, : p.rows] > 0
+             for m, p in zip(masks, self.passes)], axis=1)
+        labels = np.concatenate([p.labels for p in self.passes])
+        groups = np.concatenate([p.groups for p in self.passes])
+        real = mask & (groups >= 0)[None, :]
+        if self.kind == "match":
+            return real.any(axis=1)
+        if self.kind == "tree":
+            # first matching row, like the hand lowering's
+            # labels[max(idx[:, 0], 0)]: argmax of an all-False row is 0,
+            # reproducing the historical row-0 fallback
+            return labels[np.argmax(real, axis=1)]
+        # ensemble: each tree votes its first-matching leaf's label
+        votes = np.empty((mask.shape[0], self.n_groups), np.int64)
+        for g in range(self.n_groups):
+            cols = np.where(groups == g)[0]
+            sub = real[:, cols]
+            votes[:, g] = labels[cols][np.argmax(sub, axis=1)]
+        n_labels = int(labels.max()) + 1
+        counts = np.zeros((mask.shape[0], n_labels), np.int64)
+        for g in range(self.n_groups):
+            np.add.at(counts, (np.arange(mask.shape[0]), votes[:, g]), 1)
+        return counts.argmax(axis=1)   # ties -> smallest label (ir._majority)
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+def _group_boxes(program: ir.Program, config: CAMConfig, n: int):
+    """IR -> per-group row arrays + labels (range mode) or point rows."""
+    range_mode = config.app.distance == "range"
+    if isinstance(program, (ir.Tree, ir.Ensemble)):
+        if not range_mode:
+            raise ValueError(
+                "tree programs need a range CAM: app.distance='range', "
+                "circuit.cell_type='acam' (got "
+                f"distance={config.app.distance!r})")
+        trees = (program.trees if isinstance(program, ir.Ensemble)
+                 else (program,))
+        kind = "ensemble" if isinstance(program, ir.Ensemble) else "tree"
+        groups = []
+        for t in trees:
+            lo = np.asarray([l.lo for l in t.leaves], np.float32)
+            hi = np.asarray([l.hi for l in t.leaves], np.float32)
+            labels = np.asarray([l.label for l in t.leaves], np.int64)
+            groups.append((np.stack([lo, hi], axis=-1), labels))
+        return kind, groups, True
+
+    dnf = ir.to_dnf(program)
+    if range_mode:
+        los, his = zip(*[ir.conjunction_box(c, n) for c in dnf])
+        rows = np.stack([np.asarray(los, np.float32),
+                         np.asarray(his, np.float32)], axis=-1)
+        return "match", [(rows, np.zeros(len(dnf), np.int64))], True
+    # point CAM: every conjunction must be exactly one full-width Point
+    pts = []
+    for conj in dnf:
+        if len(conj) != 1 or not isinstance(conj[0], ir.Point):
+            raise ValueError(
+                "a point CAM (app.distance != 'range') lowers only "
+                "OR-of-Point programs; range/band predicates need "
+                "distance='range' with cell_type='acam'")
+        if len(conj[0].values) != n:
+            raise ValueError(
+                f"point of {len(conj[0].values)} dims in {n}-dim program")
+        pts.append(conj[0].values)
+    rows = np.asarray(pts, np.float32)
+    return "match", [(rows, np.zeros(len(pts), np.int64))], False
+
+
+def lower(program: ir.Program, config: CAMConfig, *,
+          n_features: Optional[int] = None,
+          max_rows_per_pass: Optional[int] = None,
+          align_banks: Optional[bool] = None) -> Schedule:
+    """Lower an IR program onto the configured CAM.
+
+    ``align_banks`` (default: auto — on for multi-group range programs)
+    starts every group at a subarray-row boundary via
+    ``mapping.plan_group_offsets``, so each co-fired group owns whole
+    banks; gaps are filler rows with lo > hi, which can never satisfy an
+    exact range match.  ``max_rows_per_pass`` packs groups first-fit into
+    multiple sequential passes (a resident-row capacity budget); a single
+    group larger than the budget still gets one (oversized) pass.
+    """
+    if config.app.match_type != "exact":
+        raise ValueError(
+            "query programs are boolean: they compile onto exact match "
+            f"(got app.match_type={config.app.match_type!r})")
+    n = n_features if n_features is not None else ir.program_dims(program)
+    if n < ir.program_dims(program):
+        raise ValueError(f"n_features={n} < program's "
+                         f"{ir.program_dims(program)} features")
+    kind, groups, range_mode = _group_boxes(program, config, n)
+    if range_mode and config.circuit.cell_type != "acam":
+        raise ValueError("range lowering needs circuit.cell_type='acam' "
+                         f"(got {config.circuit.cell_type!r})")
+
+    align = (align_banks if align_banks is not None
+             else (range_mode and len(groups) > 1))
+    if align and not range_mode:
+        raise ValueError("bank alignment needs a range CAM (point rows "
+                         "have no unmatchable filler encoding)")
+
+    # first-fit pack the groups into passes under the row budget
+    R = config.circuit.rows
+    batches: List[List[Tuple[np.ndarray, np.ndarray]]] = [[]]
+    used = 0
+    for g in groups:
+        need = g[0].shape[0]
+        if align:
+            need += (-used) % R
+        if batches[-1] and max_rows_per_pass is not None \
+                and used + need > max_rows_per_pass:
+            batches.append([])
+            used = 0
+            need = g[0].shape[0]
+        batches[-1].append(g)
+        used += need
+
+    passes = []
+    g_base = 0
+    for batch in batches:
+        sizes = [g[0].shape[0] for g in batch]
+        offsets, total = mapping.plan_group_offsets(sizes, R, align)
+        if range_mode:
+            stored = np.empty((total, n, 2), np.float32)
+            stored[..., 0] = np.inf     # filler: lo > hi never matches
+            stored[..., 1] = -np.inf
+        else:
+            stored = np.zeros((total, n), np.float32)
+        labels = np.full(total, -1, np.int64)
+        gids = np.full(total, -1, np.int64)
+        for i, (rows, labs) in enumerate(batch):
+            o = int(offsets[i])
+            stored[o:o + rows.shape[0]] = rows
+            labels[o:o + rows.shape[0]] = labs
+            gids[o:o + rows.shape[0]] = g_base + i
+        passes.append(QueryPass(stored=stored, labels=labels, groups=gids))
+        g_base += len(batch)
+
+    return Schedule(kind=kind, passes=tuple(passes), n_features=n,
+                    n_groups=g_base, range_mode=range_mode)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+class CompiledProgram:
+    """A lowered program bound to a ``CAMASim`` facade.
+
+    ``write()`` programs every pass's placement into the backend (one
+    ``CAMASim.write`` each); ``run(X)`` queries all passes and combines on
+    the host; ``estimate()`` bills the whole schedule on the estimator —
+    latency/energy/area BEFORE any write (``perf.predict_schedule``).
+    """
+
+    def __init__(self, sim, schedule: Schedule):
+        self.sim = sim
+        self.schedule = schedule
+        self.states: Optional[list] = None
+
+    # ------------------------------------------------------------ write
+    def write(self, key=None) -> "CompiledProgram":
+        """Program the passes' placements.  ``key=None`` gives every pass
+        the backend's default write key — a single-pass schedule is then
+        bit-identical to a plain ``sim.write(stored)``."""
+        import jax
+        import jax.numpy as jnp
+        keys = ([None] * len(self.schedule.passes) if key is None
+                else list(jax.random.split(key,
+                                           len(self.schedule.passes))))
+        self.states = [self.sim.write(jnp.asarray(p.stored), k)
+                       for p, k in zip(self.schedule.passes, keys)]
+        return self
+
+    # ------------------------------------------------------------ query
+    def query_raw(self, queries, key=None) -> list:
+        """Per-pass ``SearchResult``s (writes first if needed)."""
+        import jax
+        if self.states is None:
+            self.write()
+        keys = ([None] * len(self.states) if key is None
+                else list(jax.random.split(key, len(self.states))))
+        return [self.sim.query(s, queries, k)
+                for s, k in zip(self.states, keys)]
+
+    def run(self, queries, key=None) -> np.ndarray:
+        """Execute the program: bool (Q,) for predicates, labels (Q,)
+        for trees/ensembles."""
+        results = self.query_raw(queries, key)
+        return self.schedule.combine([np.asarray(r.mask) for r in results])
+
+    __call__ = run
+
+    # ------------------------------------------------------------- perf
+    def estimate(self, *, mesh=None, link: str = "on_package",
+                 queries_per_batch: int = 1, n_queries: int = 1,
+                 include_write: bool = False, ops_per_query: int = 1,
+                 clock_hz: Optional[float] = None):
+        """Whole-schedule billing (``perf.predict_schedule``), defaulting
+        the mesh to the backend's own topology like ``eval_perf`` does."""
+        from ..perf import MeshSpec, predict_schedule
+        if mesh is None:
+            nb = getattr(self.sim.backend, "n_banks", None)
+            if nb:
+                mesh = MeshSpec(int(nb), link)
+        return predict_schedule(
+            self.sim.config, self.schedule.pass_shapes(), mesh=mesh,
+            queries_per_batch=queries_per_batch, n_queries=n_queries,
+            include_write=include_write, ops_per_query=ops_per_query,
+            clock_hz=clock_hz)

@@ -1,0 +1,265 @@
+"""Query IR: a tiny program representation for CAM search programs.
+
+C4CAM-style (PAPERS.md, arXiv:2309.06418): applications describe WHAT to
+search — point matches, per-feature range predicates, AND/OR combinations,
+and decision-tree ensembles (the ``acam_decision_tree`` workload
+generalized) — and the compiler (``core.plan.compile``) lowers the program
+onto CAM primitives (write placements + query passes + a host-side
+combine).
+
+Nodes
+-----
+``Point(values)``            exact match of a full N-dim vector
+``Band(feature, lo, hi)``    lo <= x[feature] <= hi (half-open at +/-inf)
+``And(children)``            conjunction of predicates
+``Or(children)``             disjunction of predicates
+``Leaf(lo, hi, label)``      one root-to-leaf path: a box + its class
+``Tree(leaves)``             a decision tree (leaves tile the space)
+``Ensemble(trees)``          majority vote over trees
+
+Predicates (`Point`/`Band`/`And`/`Or`) evaluate to booleans; `Tree` and
+`Ensemble` evaluate to labels.  ``evaluate`` is the pure-numpy reference
+semantics every lowering is tested against; ``to_dnf`` normalizes a
+predicate into OR-of-ANDs — the CAM's native shape: each conjunction is
+one stored row (per-feature range intersection), the OR across rows is
+the match-line disjunction the CAM performs for free.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence, Tuple, Union
+
+import numpy as np
+
+NEG_INF = -math.inf
+POS_INF = math.inf
+
+
+# ---------------------------------------------------------------------------
+# nodes
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Point:
+    """Exact point match: x == values (element-wise, post-quantization)."""
+    values: Tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "values", tuple(float(v)
+                                                 for v in self.values))
+
+
+@dataclass(frozen=True)
+class Band:
+    """One-feature range predicate: lo <= x[feature] <= hi."""
+    feature: int
+    lo: float = NEG_INF
+    hi: float = POS_INF
+
+    def __post_init__(self):
+        if self.feature < 0:
+            raise ValueError("feature must be >= 0")
+
+
+@dataclass(frozen=True)
+class And:
+    children: Tuple["Predicate", ...]
+
+    def __init__(self, *children):
+        if len(children) == 1 and isinstance(children[0], (tuple, list)):
+            children = tuple(children[0])
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclass(frozen=True)
+class Or:
+    children: Tuple["Predicate", ...]
+
+    def __init__(self, *children):
+        if len(children) == 1 and isinstance(children[0], (tuple, list)):
+            children = tuple(children[0])
+        object.__setattr__(self, "children", tuple(children))
+
+
+@dataclass(frozen=True)
+class Leaf:
+    """One root-to-leaf path: the feature-space box that reaches it."""
+    lo: Tuple[float, ...]
+    hi: Tuple[float, ...]
+    label: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "lo", tuple(float(v) for v in self.lo))
+        object.__setattr__(self, "hi", tuple(float(v) for v in self.hi))
+        if len(self.lo) != len(self.hi):
+            raise ValueError("lo/hi length mismatch")
+
+
+@dataclass(frozen=True)
+class Tree:
+    leaves: Tuple[Leaf, ...]
+
+    def __init__(self, leaves):
+        leaves = tuple(leaves)
+        if not leaves:
+            raise ValueError("Tree needs at least one leaf")
+        n = len(leaves[0].lo)
+        if any(len(l.lo) != n for l in leaves):
+            raise ValueError("all leaves must span the same features")
+        object.__setattr__(self, "leaves", leaves)
+
+    @property
+    def n_features(self) -> int:
+        return len(self.leaves[0].lo)
+
+
+@dataclass(frozen=True)
+class Ensemble:
+    """Tree ensemble; classification is a majority vote over the trees
+    (ties break toward the smallest label)."""
+    trees: Tuple[Tree, ...]
+
+    def __init__(self, trees):
+        trees = tuple(trees)
+        if not trees:
+            raise ValueError("Ensemble needs at least one tree")
+        n = trees[0].n_features
+        if any(t.n_features != n for t in trees):
+            raise ValueError("all trees must span the same features")
+        object.__setattr__(self, "trees", trees)
+
+    @property
+    def n_features(self) -> int:
+        return self.trees[0].n_features
+
+
+Predicate = Union[Point, Band, And, Or]
+Program = Union[Predicate, Tree, Ensemble]
+
+
+def tree_from_paths(paths: Sequence[Tuple]) -> Tree:
+    """Build a ``Tree`` from ``(lo_vec, hi_vec, label)`` triples — the
+    exact shape ``examples/acam_decision_tree.tree_paths`` emits."""
+    return Tree([Leaf(tuple(lo), tuple(hi), int(label))
+                 for lo, hi, label in paths])
+
+
+def program_dims(program: Program) -> int:
+    """Feature count the program spans (max feature index + 1 for bare
+    band predicates)."""
+    if isinstance(program, (Tree, Ensemble)):
+        return program.n_features
+    if isinstance(program, Point):
+        return len(program.values)
+    if isinstance(program, Band):
+        return program.feature + 1
+    if isinstance(program, (And, Or)):
+        return max(program_dims(c) for c in program.children)
+    raise TypeError(f"not an IR node: {program!r}")
+
+
+# ---------------------------------------------------------------------------
+# reference semantics (pure numpy — the oracle every lowering must match)
+# ---------------------------------------------------------------------------
+def evaluate(program: Program, x) -> np.ndarray:
+    """Reference evaluation on a batch ``x`` (Q, N).
+
+    Predicates return bool (Q,); ``Tree``/``Ensemble`` return labels (Q,).
+    """
+    x = np.atleast_2d(np.asarray(x, np.float64))
+    if isinstance(program, Point):
+        v = np.asarray(program.values, np.float64)
+        return (x[:, : v.size] == v).all(axis=1)
+    if isinstance(program, Band):
+        c = x[:, program.feature]
+        return (c >= program.lo) & (c <= program.hi)
+    if isinstance(program, And):
+        out = np.ones(x.shape[0], bool)
+        for ch in program.children:
+            out &= evaluate(ch, x)
+        return out
+    if isinstance(program, Or):
+        out = np.zeros(x.shape[0], bool)
+        for ch in program.children:
+            out |= evaluate(ch, x)
+        return out
+    if isinstance(program, Tree):
+        return _tree_labels(program, x)
+    if isinstance(program, Ensemble):
+        votes = np.stack([_tree_labels(t, x) for t in program.trees])
+        return _majority(votes)
+    raise TypeError(f"not an IR node: {program!r}")
+
+
+def _tree_labels(tree: Tree, x: np.ndarray) -> np.ndarray:
+    lo = np.asarray([l.lo for l in tree.leaves])      # (L, N)
+    hi = np.asarray([l.hi for l in tree.leaves])
+    labels = np.asarray([l.label for l in tree.leaves])
+    inside = ((x[:, None, :] >= lo) & (x[:, None, :] <= hi)).all(-1)
+    # leaves tile the space: take the FIRST matching leaf (same row-order
+    # tie-break as the CAM's gather merge)
+    first = np.argmax(inside, axis=1)
+    return labels[first]
+
+
+def _majority(votes: np.ndarray) -> np.ndarray:
+    """(T, Q) per-tree labels -> (Q,) majority vote, ties to the smallest
+    label."""
+    n_labels = int(votes.max()) + 1
+    counts = np.zeros((votes.shape[1], n_labels), np.int64)
+    for t in range(votes.shape[0]):
+        np.add.at(counts, (np.arange(votes.shape[1]), votes[t]), 1)
+    return counts.argmax(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# DNF normalization (predicates only)
+# ---------------------------------------------------------------------------
+def to_dnf(pred: Predicate) -> Tuple[Tuple[Union[Point, Band], ...], ...]:
+    """OR-of-ANDs normal form: a tuple of conjunctions, each a tuple of
+    ``Point``/``Band`` literals.  The CAM-native shape — each conjunction
+    becomes one stored row, the OR is the CAM's match-line disjunction."""
+    if isinstance(pred, (Point, Band)):
+        return ((pred,),)
+    if isinstance(pred, Or):
+        out = []
+        for ch in pred.children:
+            out.extend(to_dnf(ch))
+        return tuple(out)
+    if isinstance(pred, And):
+        prod = ((),)
+        for ch in pred.children:
+            terms = to_dnf(ch)
+            prod = tuple(p + t for p in prod for t in terms)
+        return prod
+    raise TypeError(f"not a predicate: {pred!r}")
+
+
+def conjunction_box(conj: Sequence[Union[Point, Band]], n: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Intersect a conjunction's literals into one [lo, hi] box (N,).
+
+    A ``Point`` literal pins its features to degenerate [v, v] bands; an
+    infeasible intersection yields lo > hi on some feature — which the
+    ACAM lowering stores verbatim (a lo > hi cell can never satisfy
+    lo <= q <= hi, so the row simply never matches — same as the
+    reference semantics of an empty conjunction)."""
+    lo = np.full(n, NEG_INF)
+    hi = np.full(n, POS_INF)
+    for lit in conj:
+        if isinstance(lit, Band):
+            if lit.feature >= n:
+                raise ValueError(f"feature {lit.feature} out of range "
+                                 f"for {n} dims")
+            lo[lit.feature] = max(lo[lit.feature], lit.lo)
+            hi[lit.feature] = min(hi[lit.feature], lit.hi)
+        elif isinstance(lit, Point):
+            v = np.asarray(lit.values, np.float64)
+            if v.size > n:
+                raise ValueError(f"point of {v.size} dims in {n}-dim "
+                                 "program")
+            lo[: v.size] = np.maximum(lo[: v.size], v)
+            hi[: v.size] = np.minimum(hi[: v.size], v)
+        else:
+            raise TypeError(f"not a literal: {lit!r}")
+    return lo, hi

@@ -106,7 +106,8 @@ def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
                            col_valid: jax.Array | None = None,
                            row_valid: jax.Array | None = None,
                            use_kernel: bool = False,
-                           want_dist: bool = True
+                           want_dist: bool = True,
+                           q_tile: int | None = None
                            ) -> Tuple[jax.Array | None, jax.Array]:
     """Batched subarray search over a (Q, nh, C) query block.
 
@@ -120,13 +121,18 @@ def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
     ``want_dist=False`` skips the distance write-back on the kernel path and
     returns ``(None, match)`` on both paths — one contract for merges that
     consume match lines only.
+
+    ``q_tile`` overrides the fused kernels' VMEM-formula query tile
+    (``sim.q_tile`` threads through here); the jnp path evaluates the whole
+    batch at once regardless, so the knob never changes results.
     """
     if use_kernel:
         from repro.kernels import ops as kops
         out = kops.cam_search_fused(
             stored, queries, distance=distance, sensing=sensing,
             sensing_limit=sensing_limit, threshold=threshold,
-            col_valid=col_valid, row_valid=row_valid, want_dist=want_dist)
+            col_valid=col_valid, row_valid=row_valid, want_dist=want_dist,
+            q_tile=q_tile)
         return out if want_dist else (None, out)
     dist, match = subarray_query(stored, queries, distance=distance,
                                  sensing=sensing,

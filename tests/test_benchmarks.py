@@ -85,6 +85,37 @@ def test_serve_bench_engine_rows_smoke(capsys, monkeypatch):
     check_floors(rows)  # guards hold on a healthy run
 
 
+def test_autotune_bench_rows_smoke(capsys, monkeypatch):
+    """The autotune bench's q_tile sweep is result-preserving: every
+    measured candidate row carries match=True, and the rank summary is a
+    parseable agree-count (reported, never floored)."""
+    import re
+
+    import benchmarks.autotune_bench as ab
+    from benchmarks.run import check_floors
+    monkeypatch.setattr(ab, "K", 256)
+    monkeypatch.setattr(ab, "N", 16)
+    monkeypatch.setattr(ab, "Q", 32)
+    monkeypatch.setattr(ab, "REPS", 1)
+    monkeypatch.setattr(ab, "Q_TILE_SPACE", (None, 8, 32))
+    ab.main(backend="functional")
+    out = capsys.readouterr().out
+    rows = []
+    for line in out.splitlines():
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    cand = [r for r in rows if r["name"].startswith("autotune_cand_")]
+    assert len(cand) == ab.TOP
+    assert all("match=True" in r["derived"] for r in cand)
+    assert all(re.search(r"pred_qps=\d+_meas_qps=\d+", r["derived"])
+               for r in cand)
+    summary = [r for r in rows if r["name"] == "autotune_rank_functional"]
+    assert len(summary) == 1
+    assert re.search(r"pairs_agree=\d+/\d+", summary[0]["derived"])
+    check_floors(rows)  # the match= guard holds on a healthy run
+
+
 @pytest.mark.slow
 def test_fig4_trends_minimal():
     from benchmarks.fig4_sweep import check_trends, run

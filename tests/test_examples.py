@@ -66,6 +66,39 @@ def test_camasim_run_cli_executes_checked_in_configs(config):
 
 
 @pytest.mark.slow
+def test_camasim_run_cli_autotune_mode(tmp_path):
+    """--autotune ranks the deployment space on the estimator alone and
+    writes the winning config next to the input (copied to a tmp dir so
+    the tuned JSON never lands in the repo)."""
+    import json
+    import shutil
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    env.pop("XLA_FLAGS", None)
+    src = os.path.join(_ROOT, "examples", "configs", "autotune.json")
+    cfg_path = str(tmp_path / "autotune.json")
+    shutil.copy(src, cfg_path)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.cli", cfg_path, "--autotune",
+         "--entries", "256", "--dims", "32", "--queries", "8"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    summary = json.loads(proc.stdout)
+    assert summary["candidates"] > 1
+    assert set(summary["best"]) == {"knobs", "metrics"}
+    assert summary["best"]["metrics"]["edp_pj_ns"] > 0
+    assert "candidates ranked by edp" in proc.stderr
+    tuned = tmp_path / "autotune.tuned.json"
+    assert str(tuned) == summary["tuned_config"]
+    assert tuned.exists()
+    # the tuned config is a complete experiment, loadable as-is
+    tuned_cfg = json.loads(tuned.read_text())
+    assert set(tuned_cfg) == {"app", "arch", "circuit", "device", "sim"}
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("args", [(), ("--kernel",)])
 def test_acam_decision_tree_example_runs(args):
     """X-TIME-style decision-tree inference, on both the jnp broadcast

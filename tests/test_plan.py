@@ -1,0 +1,442 @@
+"""Query compiler + estimator autotuner (``core.plan``).
+
+Four guarantee layers:
+
+* the compiled decision tree is BIT-IDENTICAL to the historical hand
+  lowering of ``examples/acam_decision_tree.py`` — same written grid,
+  same indices/mask, same predictions — on the functional backend (jnp
+  and fused-kernel paths) and, in a 2-host-device subprocess, on the
+  sharded backend;
+* every lowering (DNF predicates, point CAM, trees, ensembles, aligned
+  and multi-pass placements) agrees with the pure-numpy reference
+  semantics ``ir.evaluate``;
+* ``autotune`` is exactly the exhaustive estimator sweep: its argmin
+  matches a hand-rolled loop over the same pinned space, and the sweep
+  never writes (counting stubs on both backends' ``write``);
+* ``predict_schedule`` bills a multi-pass schedule as the SUM of the
+  per-pass ``perf_report`` predictions (one pass == the plain report,
+  key for key), and ``sim.q_tile`` validates on the power-of-two ladder
+  without changing search results.
+"""
+import itertools
+import math
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AppConfig, ArchConfig, CAMASim, CAMConfig,
+                        CircuitConfig, DeviceConfig, FunctionalSimulator,
+                        ShardedCAMSimulator, SimConfig, estimate_arch,
+                        predict_schedule)
+from repro.core.perf import MeshSpec, perf_report, predict_write
+from repro.core.plan import (And, Band, Ensemble, Or, Point, autotune,
+                             evaluate, lower, tree_from_paths)
+
+N_FEAT = 6
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _acam_cfg(use_kernel=False, rows=8, **sim):
+    return CAMConfig(
+        app=AppConfig(distance="range", match_type="exact", match_param=1,
+                      data_bits=0),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=rows, cols=8, cell_type="acam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig(use_kernel=use_kernel, **sim))
+
+
+def _tile_paths(n_feat=N_FEAT, depth=3, seed=0, n_labels=2):
+    """Random leaves that TILE [0,1]^n (recursive splits), as
+    (lo, hi, label) triples — the example's ``tree_paths`` shape."""
+    rng = np.random.default_rng(seed)
+    paths = []
+
+    def split(lo, hi, d):
+        if d == 0:
+            paths.append((lo.copy(), hi.copy(),
+                          int(rng.integers(0, n_labels))))
+            return
+        f = int(rng.integers(0, n_feat))
+        span = hi[f] - lo[f]
+        t = float(rng.uniform(lo[f] + 0.2 * span, hi[f] - 0.2 * span))
+        hi2 = hi.copy()
+        hi2[f] = t
+        split(lo, hi2, d - 1)
+        lo2 = lo.copy()
+        lo2[f] = t
+        split(lo2, hi, d - 1)
+
+    split(np.zeros(n_feat), np.ones(n_feat), depth)
+    return paths
+
+
+# ---------------------------------------------------------------------------
+# bit-identity to the historical hand lowering
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True],
+                         ids=["jnp", "kernel"])
+def test_compiled_tree_bit_identical_to_hand_lowering(use_kernel):
+    """``CAMASim.compile(tree)`` reproduces what the example used to
+    hand-roll, bit for bit: same written grid, same SearchResult, same
+    ``labels[max(idx[:, 0], 0)]`` predictions."""
+    paths = _tile_paths()
+    sim = CAMASim(_acam_cfg(use_kernel=use_kernel))
+    rng = np.random.default_rng(1)
+    X = jnp.asarray(rng.uniform(0, 1, (40, N_FEAT)).astype(np.float32))
+
+    # the historical hand lowering, verbatim
+    lo = jnp.asarray(np.stack([p[0] for p in paths]), jnp.float32)
+    hi = jnp.asarray(np.stack([p[1] for p in paths]), jnp.float32)
+    labels = np.asarray([p[2] for p in paths])
+    state = sim.write(jnp.stack([lo, hi], axis=-1))
+    idx, mask = sim.query(state, X)
+    hand_pred = labels[np.maximum(np.asarray(idx[:, 0]), 0)]
+
+    compiled = sim.compile(tree_from_paths(paths)).write()
+    assert len(compiled.states) == 1          # single tree: dense, 1 pass
+    assert compiled.schedule.passes[0].rows == len(paths)   # no filler
+    np.testing.assert_array_equal(np.asarray(compiled.states[0].grid),
+                                  np.asarray(state.grid))
+    res = compiled.query_raw(X)[0]
+    np.testing.assert_array_equal(np.asarray(res.indices), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(res.mask), np.asarray(mask))
+    np.testing.assert_array_equal(compiled.run(X), hand_pred)
+
+
+_SHARDED_SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import numpy as np, jax.numpy as jnp
+from repro.core import CAMASim
+from repro.core.plan import evaluate, tree_from_paths
+from test_plan import _acam_cfg, _tile_paths
+
+paths = _tile_paths(depth=4, seed=3)        # 16 leaves -> 4 banks of 4 rows
+prog = tree_from_paths(paths)
+rng = np.random.default_rng(4)
+X = jnp.asarray(rng.uniform(0, 1, (30, 6)).astype(np.float32))
+
+fun = CAMASim(_acam_cfg(rows=4)).compile(prog)
+sh = CAMASim(_acam_cfg(rows=4, backend="sharded", devices=2)).compile(prog)
+rf, rs = fun.query_raw(X)[0], sh.query_raw(X)[0]
+np.testing.assert_array_equal(np.asarray(rf.mask), np.asarray(rs.mask))
+np.testing.assert_array_equal(np.asarray(rf.indices),
+                              np.asarray(rs.indices))
+np.testing.assert_array_equal(fun.run(X), sh.run(X))
+np.testing.assert_array_equal(sh.run(X), evaluate(prog, np.asarray(X)))
+print("SHARDED-BIT-IDENTICAL")
+'''
+
+
+@pytest.mark.slow
+def test_compiled_tree_sharded_backend_bit_identical():
+    """The same compiled schedule on ``backend='sharded'`` (2 forced host
+    devices) returns bit-identical masks/indices/predictions."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         os.path.dirname(__file__)])
+    proc = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED-BIT-IDENTICAL" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# lowerings vs the reference semantics
+# ---------------------------------------------------------------------------
+def test_dnf_predicate_matches_oracle():
+    prog = Or(And(Band(0, 0.2, 0.8), Band(1, hi=0.5)),
+              And(Band(2, 0.6), Band(0, hi=0.3)),
+              Band(4, 0.9))
+    sim = CAMASim(_acam_cfg())
+    compiled = sim.compile(prog, n_features=N_FEAT)
+    assert compiled.schedule.kind == "match"
+    assert compiled.schedule.passes[0].rows == 3   # one row per conjunction
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 1, (64, N_FEAT)).astype(np.float32)
+    np.testing.assert_array_equal(compiled.run(jnp.asarray(X)),
+                                  evaluate(prog, X))
+
+
+def test_infeasible_conjunction_never_matches():
+    # Band(0, 0.7, inf) AND Band(0, -inf, 0.3) is empty -> lo > hi row
+    prog = Or(And(Band(0, lo=0.7), Band(0, hi=0.3)), Band(1, 0.4, 0.6))
+    sim = CAMASim(_acam_cfg())
+    compiled = sim.compile(prog, n_features=N_FEAT)
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 1, (50, N_FEAT)).astype(np.float32)
+    got = compiled.run(jnp.asarray(X))
+    np.testing.assert_array_equal(got, evaluate(prog, X))
+    # and the empty row really contributed nothing
+    np.testing.assert_array_equal(got, evaluate(Band(1, 0.4, 0.6), X))
+
+
+def test_point_cam_or_of_points_matches_oracle():
+    cfg = CAMConfig(
+        app=AppConfig(distance="hamming", match_type="exact", match_param=0,
+                      data_bits=2),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig())
+    pts = [(0.0, 1.0, 2.0, 3.0), (3.0, 2.0, 1.0, 0.0),
+           (1.0, 1.0, 2.0, 2.0)]
+    prog = Or([Point(p) for p in pts])
+    compiled = CAMASim(cfg).compile(prog)
+    assert not compiled.schedule.range_mode
+    X = np.asarray(pts[:2] + [(0.0, 0.0, 0.0, 0.0), (2.0, 1.0, 2.0, 2.0)],
+                   np.float32)
+    got = compiled.run(jnp.asarray(X))
+    np.testing.assert_array_equal(got, evaluate(prog, X))
+    assert got.tolist() == [True, True, False, False]
+
+
+def test_ensemble_aligned_placement_and_majority_vote():
+    trees = [tree_from_paths(_tile_paths(n_feat=4, depth=2, seed=s,
+                                         n_labels=3))
+             for s in (10, 11, 12)]
+    prog = Ensemble(trees)
+    sim = CAMASim(_acam_cfg())
+    compiled = sim.compile(prog)
+    sched = compiled.schedule
+    assert sched.kind == "ensemble" and sched.n_groups == 3
+    # multi-group range schedule bank-aligns by default: every group
+    # starts on a subarray-row boundary, gaps are unmatchable filler
+    R = sim.config.circuit.rows
+    groups = sched.passes[0].groups
+    for g in range(3):
+        assert np.where(groups == g)[0][0] % R == 0
+    filler = sched.passes[0].stored[groups == -1]
+    assert (filler[..., 0] > filler[..., 1]).all()   # lo > hi: never match
+    rng = np.random.default_rng(6)
+    X = rng.uniform(0, 1, (48, 4)).astype(np.float32)
+    np.testing.assert_array_equal(compiled.run(jnp.asarray(X)),
+                                  evaluate(prog, X))
+
+
+def test_multi_pass_packing_matches_single_pass_and_oracle():
+    trees = [tree_from_paths(_tile_paths(n_feat=4, depth=2, seed=s,
+                                         n_labels=3))
+             for s in (20, 21, 22, 23, 24)]
+    prog = Ensemble(trees)
+    sim = CAMASim(_acam_cfg())
+    one = sim.compile(prog)
+    packed = sim.compile(prog, max_rows_per_pass=16)
+    assert len(one.schedule.passes) == 1
+    assert len(packed.schedule.passes) > 1
+    assert all(p.rows <= 16 for p in packed.schedule.passes)
+    # every group lands whole in exactly one pass
+    seen = [set(p.groups[p.groups >= 0].tolist())
+            for p in packed.schedule.passes]
+    assert sorted(g for s_ in seen for g in s_) == list(range(5))
+    rng = np.random.default_rng(7)
+    X = rng.uniform(0, 1, (32, 4)).astype(np.float32)
+    want = evaluate(prog, X)
+    np.testing.assert_array_equal(one.run(jnp.asarray(X)), want)
+    np.testing.assert_array_equal(packed.run(jnp.asarray(X)), want)
+
+
+def test_oversized_group_still_gets_one_pass():
+    prog = tree_from_paths(_tile_paths(depth=3, seed=8))   # 8 leaves
+    sched = lower(prog, _acam_cfg(), max_rows_per_pass=4)
+    assert len(sched.passes) == 1 and sched.passes[0].rows == 8
+
+
+def test_lowering_rejections():
+    acam = _acam_cfg()
+    with pytest.raises(ValueError, match="exact match"):
+        lower(Band(0, 0.1, 0.2),
+              _acam_cfg().replace(app=dict(match_type="threshold")))
+    point_cfg = CAMConfig(
+        app=AppConfig(distance="hamming", match_type="exact", match_param=0,
+                      data_bits=2),
+        arch=ArchConfig(h_merge="and", v_merge="gather"),
+        circuit=CircuitConfig(rows=8, cols=8, cell_type="mcam",
+                              sensing="exact"),
+        device=DeviceConfig(device="fefet"), sim=SimConfig())
+    with pytest.raises(ValueError, match="range CAM"):
+        lower(tree_from_paths(_tile_paths(depth=1)), point_cfg)
+    with pytest.raises(ValueError, match="OR-of-Point"):
+        lower(Band(0, 0.1, 0.2), point_cfg)
+    with pytest.raises(ValueError, match="bank alignment"):
+        lower(Or(Point((0.0, 1.0)), Point((1.0, 0.0))), point_cfg,
+              align_banks=True)
+    with pytest.raises(ValueError, match="n_features"):
+        lower(Band(3, 0.1, 0.2), acam, n_features=2)
+
+
+# ---------------------------------------------------------------------------
+# schedule billing == sum of per-pass predictions
+# ---------------------------------------------------------------------------
+def test_predict_schedule_is_sum_of_per_pass_reports():
+    cfg = _acam_cfg()
+    shapes = [(16, 6), (9, 6), (4, 6)]
+    rep = predict_schedule(cfg, shapes, n_queries=5, queries_per_batch=3)
+    per = [perf_report(cfg, estimate_arch(cfg, K, N), n_queries=5,
+                       queries_per_batch=3) for K, N in shapes]
+    for key in ("latency_ns", "energy_pj", "area_um2"):
+        assert rep[key] == pytest.approx(sum(p[key] for p in per))
+    assert rep["edp_pj_ns"] == pytest.approx(
+        rep["latency_ns"] * rep["energy_pj"] / 5)
+    assert len(rep["passes"]) == 3
+
+
+def test_predict_schedule_one_pass_equals_plain_report():
+    cfg = _acam_cfg()
+    mesh = MeshSpec(2, "pcb")
+    rep = predict_schedule(cfg, [(24, 6)], mesh=mesh, n_queries=7,
+                           queries_per_batch=4)
+    plain = perf_report(cfg, estimate_arch(cfg, 24, 6), mesh=mesh,
+                        n_queries=7, queries_per_batch=4)
+    for key in ("latency_ns", "energy_pj", "area_um2", "edp_pj_ns"):
+        assert rep[key] == pytest.approx(plain[key])
+
+
+def test_predict_schedule_include_write_bills_partial_rows():
+    cfg = _acam_cfg()
+    shapes = [(16, 6), (9, 6)]
+    rep = predict_schedule(cfg, shapes, include_write=True)
+    dry = predict_schedule(cfg, shapes, include_write=False)
+    writes = [predict_write(cfg, estimate_arch(cfg, K, N), rows=K)
+              for K, N in shapes]
+    assert rep["write"].energy_pj == pytest.approx(
+        sum(w.energy_pj for w in writes))
+    assert rep["energy_pj"] == pytest.approx(
+        dry["energy_pj"] + rep["write"].energy_pj)
+
+
+def test_compiled_estimate_equals_predict_schedule():
+    sim = CAMASim(_acam_cfg())
+    compiled = sim.compile(
+        Ensemble([tree_from_paths(_tile_paths(n_feat=4, depth=2, seed=s))
+                  for s in (30, 31)]))
+    got = compiled.estimate(queries_per_batch=4, n_queries=9)
+    want = predict_schedule(sim.config, compiled.schedule.pass_shapes(),
+                            queries_per_batch=4, n_queries=9)
+    for key in ("latency_ns", "energy_pj", "area_um2", "edp_pj_ns"):
+        assert got[key] == pytest.approx(want[key])
+
+
+# ---------------------------------------------------------------------------
+# autotune == exhaustive estimator sweep, zero writes
+# ---------------------------------------------------------------------------
+def _mcam_cfg():
+    return CAMConfig(
+        app=AppConfig(distance="l2", match_type="best", match_param=3,
+                      data_bits=3),
+        arch=ArchConfig(h_merge="adder", v_merge="comparator"),
+        circuit=CircuitConfig(rows=16, cols=16, cell_type="mcam",
+                              sensing="best"),
+        device=DeviceConfig(device="fefet"),
+        sim=SimConfig())
+
+
+def test_autotune_argmin_matches_hand_rolled_exhaustive_sweep(monkeypatch):
+    """The ranked sweep IS the exhaustive loop: same argmin knobs/metric
+    as an independently hand-rolled product over the same pinned space —
+    and it never constructs a backend or writes."""
+    writes = []
+    monkeypatch.setattr(FunctionalSimulator, "write",
+                        lambda self, *a, **k: writes.append("fun"))
+    monkeypatch.setattr(ShardedCAMSimulator, "write",
+                        lambda self, *a, **k: writes.append("sh"))
+    cfg = _mcam_cfg()
+    entries, dims, qpb = 128, 16, 8
+    space = {"q_tile": [None, 32], "devices": [1, 2],
+             "link": ["on_package", "pcb"], "top_p_banks": [None]}
+    res = autotune(cfg, entries, dims, space=space, objective="latency",
+                   queries_per_batch=qpb)
+    assert writes == []
+
+    best = None
+    count = 0
+    for q_tile, dev, link in itertools.product(
+            [None, 32], [1, 2], ["on_package", "pcb"]):
+        if dev <= 1 and link != "on_package":
+            continue               # single chip: the link never fires
+        cand = cfg.replace(sim=dict(
+            q_tile=q_tile, c2c_query_tile=1,
+            devices=dev if dev > 1 else 0, query_shards=1,
+            backend="sharded" if dev > 1 else "functional",
+            top_p_banks=None, signature_bits=0))
+        cand.validate()
+        rep = perf_report(cand, estimate_arch(cand, entries, dims),
+                          mesh=MeshSpec(dev, link) if dev > 1 else None,
+                          queries_per_batch=qpb)
+        count += 1
+        if best is None or rep["latency_ns"] < best[0]:
+            best = (rep["latency_ns"], dict(q_tile=q_tile, devices=dev,
+                                            link=link))
+    assert len(res.candidates) == count
+    assert res.best.metrics["latency_ns"] == pytest.approx(best[0])
+    for k, v in best[1].items():
+        assert res.best.knobs[k] == v
+    # ranked ascending in the objective
+    lats = [c.metrics["latency_ns"] for c in res.candidates]
+    assert lats == sorted(lats)
+    # the winning config is complete and loadable
+    CAMASim(res.config)
+
+
+def test_autotune_objectives_and_unknown_knob():
+    cfg = _mcam_cfg()
+    space = {"devices": [1], "link": ["on_package"]}
+    by_energy = autotune(cfg, 64, 16, space=space, objective="energy")
+    assert by_energy.best.metrics["energy_pj"] == min(
+        c.metrics["energy_pj"] for c in by_energy.candidates)
+    by_qps = autotune(cfg, 64, 16, space=space, objective="qps")
+    assert by_qps.best.metrics["sim_qps"] == max(
+        c.metrics["sim_qps"] for c in by_qps.candidates)
+    with pytest.raises(ValueError, match="unknown sweep knobs"):
+        autotune(cfg, 64, 16, space={"voltage": [1.2]})
+    with pytest.raises(ValueError, match="objective"):
+        autotune(cfg, 64, 16, objective="speed")
+
+
+def test_autotune_table_and_facade_do_not_mutate_config():
+    sim = CAMASim(_mcam_cfg())
+    before = sim.config.to_json()
+    res = sim.autotune(64, 16, space={"devices": [1, 2]},
+                       queries_per_batch=4)
+    assert sim.config.to_json() == before
+    table = res.table(top=3)
+    assert "lat_ns" in table and len(table.splitlines()) == 4
+
+
+# ---------------------------------------------------------------------------
+# sim.q_tile: ladder validation + result identity
+# ---------------------------------------------------------------------------
+def test_q_tile_validates_power_of_two_ladder():
+    for q in (None, 1, 2, 4, 8, 16, 32, 64, 128, 256):
+        SimConfig(q_tile=q)
+    for q in (0, 3, 6, 48, 512, -8):
+        with pytest.raises(ValueError, match="power of two"):
+            SimConfig(q_tile=q)
+
+
+@pytest.mark.parametrize("q_tile", [1, 4, 64])
+def test_q_tile_identical_results_on_kernel_path(q_tile):
+    """An explicit query tile re-chunks the fused kernel's batch loop but
+    never changes what it computes."""
+    base = CAMASim(_mcam_cfg().replace(sim=dict(use_kernel=True)))
+    tiled = CAMASim(_mcam_cfg().replace(sim=dict(use_kernel=True,
+                                                 q_tile=q_tile)))
+    rng = np.random.default_rng(9)
+    stored = jnp.asarray(rng.uniform(0, 1, (20, 8)).astype(np.float32))
+    queries = jnp.asarray(rng.uniform(0, 1, (10, 8)).astype(np.float32))
+    rb = base.query(base.write(stored), queries)
+    rt = tiled.query(tiled.write(stored), queries)
+    np.testing.assert_array_equal(np.asarray(rb.indices),
+                                  np.asarray(rt.indices))
+    np.testing.assert_array_equal(np.asarray(rb.mask), np.asarray(rt.mask))
