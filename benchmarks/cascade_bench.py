@@ -15,7 +15,10 @@ full-scan qps decays ~1/K while routed qps decays sublinearly (the routed
 qps ratio across the size ladder stays well under the store-size ratio).
 The route row also carries the estimator's end-to-end billing for the same
 knobs (``pred_e_frac``) so measured wall-time and predicted energy move
-together.
+together, plus the ``CAMASim.select_cascade`` clamp verdict: when the
+rung's own billing predicts a LOSS vs the full scan (``pred_e_frac`` >= 1)
+the shipped deployment falls back to ``prefilter='off'``
+(``clamped=True``, ``shipped=off``).
 
 Store: a ~64-center gaussian mixture (cluster structure for IVF to find);
 queries perturb stored rows, so each query's true row is its own best
@@ -119,12 +122,22 @@ def run_size(K, N, Q, backend):
                              queries)
             break
     qps_route = Q / (us_route * 1e-6)
-    pred = full.sweep_cascade([None, p_star], entries=K, dims=N)
+    # estimator clamp (CAMASim.select_cascade): a rung whose own billing
+    # says the cascade costs >= the full scan (the signature slab on a
+    # small grid: n=2048 billed e_frac=1.186) is never shipped — the
+    # deployment falls back to prefilter='off'.  The measured routed qps
+    # stays on the row (it's what the scaling trend is computed from);
+    # ``shipped``/``shipped_qps`` are what the clamp actually deploys.
+    sel, pred = full.select_cascade([p_star], entries=K, dims=N)
     e_frac = pred[p_star]["energy_pj"] / pred[None]["energy_pj"]
+    clamped = sel is None
+    ship_p = "off" if clamped else sel
+    ship_qps = qps_full if clamped else qps_route
     print(f"cascade_route_n{K},{us_route:.0f},"
           f"recall={rec:.3f}_floor={RECALL_FLOOR:.3f}_p={p_star}_"
           f"qps={qps_route:.1f}_speedup={us_full / us_route:.2f}x_"
-          f"pred_e_frac={e_frac:.3f}")
+          f"pred_e_frac={e_frac:.3f}_clamped={clamped}_"
+          f"shipped={ship_p}_shipped_qps={ship_qps:.1f}")
     return dict(K=K, qps_full=qps_full, qps_route=qps_route,
                 p=p_star, recall=rec, match=ok,
                 speedup=us_full / us_route)

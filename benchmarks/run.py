@@ -45,10 +45,15 @@ def merge_bench_rows(rows: list, path: pathlib.Path = BENCH_JSON) -> list:
 def check_floors(rows: list) -> None:
     """Fail loudly when a row records a broken guarantee: any parity bit
     ``match=False``, a ``recall=`` that fell below the ``floor=`` the
-    same row declares, or a serve-loop ``p99_us=`` tail latency that blew
-    through the row's ``floor_p99_us=`` ceiling.  Run in CI so a perf row
-    can't silently regress from "bit-identical"/"recall cleared"/"SLO
-    met" to "close enough"."""
+    same row declares, a serve-loop ``p99_us=`` tail latency that blew
+    through the row's ``floor_p99_us=`` ceiling, a kernel Q-sweep whose
+    qps is not monotone nondecreasing (``qps_monotone=False``; the
+    pipelined kernels' contract — the plain ``monotone=`` field some
+    sharded rows record is informational, not floored), or a
+    measured-vs-estimated drift ``est_ratio=`` above the ``ratio_ceil=``
+    the row declares (the insert-rate estimate was once silently 8800x
+    off).  Run in CI so a perf row can't silently regress from
+    "bit-identical"/"recall cleared"/"SLO met" to "close enough"."""
     import re
     bad = []
     for r in rows:
@@ -67,6 +72,13 @@ def check_floors(rows: list) -> None:
         if p and pf and float(p.group(1)) > float(pf.group(1)):
             bad.append(f"{r['name']}: p99 {p.group(1)}us > floor "
                        f"{pf.group(1)}us ({d})")
+        if re.search(r"(?:^|_)qps_monotone=False\b", d):
+            bad.append(f"{r['name']}: qps_monotone=False ({d})")
+        er = re.search(r"(?:^|_)est_ratio=([0-9.]+)", d)
+        rc = re.search(r"(?:^|_)ratio_ceil=([0-9.]+)", d)
+        if er and rc and float(er.group(1)) > float(rc.group(1)):
+            bad.append(f"{r['name']}: est_ratio {er.group(1)} > ceiling "
+                       f"{rc.group(1)} ({d})")
     if bad:
         raise RuntimeError("benchmark floor violations:\n  "
                            + "\n  ".join(bad))

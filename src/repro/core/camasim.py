@@ -163,6 +163,32 @@ class CAMASim:
                     prefilter_bits=sig_bits, **perf_kw)
         return out
 
+    def select_cascade(self, top_p_list, entries: Optional[int] = None,
+                      dims: Optional[int] = None, metric: str = "energy_pj",
+                      **perf_kw):
+        """Pick a cascade budget whose OWN billing beats the full scan.
+
+        Sweeps ``top_p_list`` (plus the ``None`` full-scan baseline) with
+        ``sweep_cascade`` and returns ``(best_top_p, reports)`` where
+        ``best_top_p`` minimizes ``metric`` — but ONLY among rungs the
+        estimator predicts strictly cheaper than the full scan.  A rung
+        whose stage-1 signature slab costs more than the banks it skips
+        (small grids: the n=2048 geometry bills e_frac=1.186) is never
+        selected: when every rung predicts >= the baseline the method
+        returns ``None``, i.e. fall back to ``prefilter='off'``.
+        """
+        reports = self.sweep_cascade(
+            [p for p in top_p_list if p is not None] + [None],
+            entries, dims, **perf_kw)
+        base = reports[None][metric]
+        best = None
+        for p, rep in reports.items():
+            if p is None or rep[metric] >= base:
+                continue    # predicts its own loss: never ship it
+            if best is None or rep[metric] < reports[best][metric]:
+                best = p
+        return best, reports
+
     # ------------------------------------------------ planning / tuning
     def compile(self, program, *, n_features: Optional[int] = None,
                 max_rows_per_pass: Optional[int] = None,

@@ -145,6 +145,11 @@ class SimConfig:
     # an explicit value must sit on the same power-of-two ladder the formula
     # rounds to, so the autotuner's pick is directly settable from JSON.
     q_tile: Optional[int] = None
+    # Bank-blocked double-buffered kernel schedule (VMEM-resident stores,
+    # per-geometry measured q_tile, narrow-int/bit-packed distance paths for
+    # noise-free integral codes).  False is the bit- and schedule-identical
+    # off-switch: the historical per-tile grid with the VMEM formula tile.
+    pipeline: bool = True
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "backend")

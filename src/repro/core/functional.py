@@ -114,6 +114,19 @@ class FunctionalSimulator:
         self.use_kernel = config.sim.use_kernel
         self.c2c_query_tile = config.sim.c2c_query_tile
         self.q_tile = config.sim.q_tile
+        self.pipeline = config.sim.pipeline
+        # Narrow-int / bit-packed kernel fast paths need the stored grid to
+        # hold exact small integers: quantized point codes (data_bits wide)
+        # with no device variation folded in.  ACAM range grids and analog
+        # noise keep the float path.  0 disables; else the code width in
+        # bits (threaded to kernels.ops as ``int_codes``).
+        app, dev, circ = config.app, config.device, config.circuit
+        self.int_codes = (
+            app.data_bits
+            if (self.pipeline and app.data_bits and app.data_bits <= 8
+                and app.distance in ("hamming", "l1", "l2", "dot")
+                and dev.variation == "none" and circ.cell_type != "acam")
+            else 0)
         # 'grid': one normal draw over the whole (nv, nh, R, C) grid per
         # cycle (the historical single-device draw).  'bank': one draw per
         # nv bank from fold_in(cycle_key, bank index) — bit-identical no
@@ -628,7 +641,9 @@ class FunctionalSimulator:
                 row_valid=row_valid,
                 use_kernel=self.use_kernel,
                 want_dist=self.need_dist(),
-                q_tile=self.q_tile)
+                q_tile=self.q_tile,
+                pipeline=self.pipeline,
+                int_codes=self.int_codes)
 
         if cfg.device.variation not in ("c2c", "both"):
             return run(grid, qseg)
@@ -677,5 +692,7 @@ class FunctionalSimulator:
             row_valid=state.row_valid,
             use_kernel=self.use_kernel,
             want_dist=self.need_dist(),
-            q_tile=self.q_tile)
+            q_tile=self.q_tile,
+            pipeline=self.pipeline,
+            int_codes=self.int_codes)
         return self.merge_rows(dist, match, state.spec.padded_K)

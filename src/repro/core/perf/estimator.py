@@ -22,6 +22,15 @@ from . import interconnect
 from .devices import get_cell_model
 from .peripherals import PeripheralBill, estimate_merge_peripherals
 
+# Host-side engine-step overhead billed per streaming insert (ns): queue
+# admission, free-slot pick, and dispatch of the 1-row partial write
+# through the serve loop.  Calibrated against benchmarks/serve_bench.py's
+# measured single-insert serve rates (~750/s functional, ~430/s sharded on
+# the CI container — ~1.3 ms/step against a ~150 ns device write);
+# check_floors guards the estimate/measurement ratio so it cannot silently
+# drift absurd again.
+HOST_STEP_OVERHEAD_NS = 1.3e6
+
 
 @dataclass
 class LevelSpec:
@@ -435,12 +444,19 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
         w = predict_write(config, arch)
         out["write"] = w
         out["energy_pj"] += w.energy_pj
-    # mutation billing: a streaming insert is a 1-row partial write, so
-    # the sustained insert rate the store admits is one row-programming
-    # latency per insert (additive key — existing report consumers and
-    # the golden Table IV snapshot are unaffected)
-    out["inserts_per_s"] = 1e9 / predict_write(config, arch,
-                                               rows=1).latency_ns
+    # mutation billing: a streaming insert is a 1-row partial write.
+    # ``device_inserts_per_s`` is the pure hardware rate (one
+    # row-programming latency per insert — what the CAM macro admits);
+    # ``inserts_per_s`` is the honest SERVING proxy: each insert also pays
+    # one engine step of host-side work (queue admission, slot pick,
+    # dispatch), which dominates off-accelerator — the device-only figure
+    # overstated the measured serve rate by ~8800x (BENCH
+    # serve_inserts_*: est 6666667 vs measured 751/432).  Additive keys —
+    # existing report consumers and the golden Table IV snapshot are
+    # unaffected.
+    w1 = predict_write(config, arch, rows=1).latency_ns
+    out["device_inserts_per_s"] = 1e9 / w1
+    out["inserts_per_s"] = 1e9 / (w1 + HOST_STEP_OVERHEAD_NS)
     return PerfReport(out)
 
 
@@ -501,6 +517,7 @@ def predict_schedule(config: CAMConfig, pass_shapes, *,
         "edp_pj_ns": lat * en / max(1, n_queries),
         "passes": reports,
         "inserts_per_s": reports[0]["inserts_per_s"],
+        "device_inserts_per_s": reports[0]["device_inserts_per_s"],
     }
     if include_write:
         w = PerfResult(

@@ -138,38 +138,72 @@ def simulated_qps(config: CAMConfig, entries: int, dims: int, *,
                   q_tile: Optional[int] = None,
                   devices: int = 1, query_shards: int = 1,
                   top_p_banks: Optional[int] = None,
-                  want_dist: bool = True) -> float:
+                  want_dist: bool = True,
+                  pipeline: Optional[bool] = None) -> float:
     """Simulator-throughput proxy: fused-kernel HBM traffic per batch.
 
-    The fused kernels stream the resident stored planes from HBM once per
-    Q-tile (``ceil(Q_local / q_tile)`` passes), move the query block down
-    and the (Q, nv, nh, R) match/count block back; the slowest device
-    bounds the batch.  Bank sharding divides the streamed banks, query
-    sharding divides the local batch (and multiplies throughput), and the
-    cascade's top-p routing shrinks the searched banks.  Returned as
-    queries/second over ``HBM_BYTES_PER_S`` — a RANKING proxy, validated
-    against measurement by ``benchmarks/autotune_bench.py``.
+    Unpipelined (``pipeline=False``), the fused kernels stream the
+    resident stored planes from HBM once per Q-tile
+    (``ceil(Q_local / q_tile)`` passes) and move the query block down and
+    the (Q, nv, nh, R) match/count block back.  With the bank-blocked
+    pipeline (``sim.pipeline``, the default) and a store that fits the
+    residency budget (``kernels.cam_search.resident_banks``), the stored
+    planes cross HBM ONCE per batch and the query block is re-streamed per
+    bank block instead — the same model ``choose_q_tile`` ranks rungs
+    with, per-grid-step dispatch term included.  The slowest device bounds
+    the batch; bank sharding divides the streamed banks, query sharding
+    divides the local batch (and multiplies throughput), and the cascade's
+    top-p routing shrinks the searched banks.  Returned as queries/second
+    over ``HBM_BYTES_PER_S`` — a RANKING proxy, validated against
+    measurement by ``benchmarks/autotune_bench.py`` and
+    ``benchmarks/kernel_bench.py``.
     """
-    from repro.kernels.cam_search import default_q_tile
+    from repro.kernels.cam_search import (STEP_OVERHEAD_S, choose_q_tile,
+                                          default_q_tile, resident_banks)
 
     spec = estimate_arch(config, entries, dims).spec
     planes = 2 if config.app.distance == "range" else 1
+    if pipeline is None:
+        pipeline = config.sim.pipeline
     Q = max(1, queries_per_batch)
     q_loc = math.ceil(Q / max(1, query_shards))
-    qt = q_tile or default_q_tile(spec.R, spec.C, planes)
-    qt = max(1, min(qt, q_loc))
     nv_loc = math.ceil(spec.nv / max(1, devices))
     p_loc = (nv_loc if top_p_banks is None
              else min(nv_loc, math.ceil(min(top_p_banks, spec.nv)
                                         / max(1, devices))))
+    vb = (resident_banks(p_loc, spec.nh, spec.R, spec.C, planes)
+          if pipeline else 0)
+    if q_tile:
+        qt = q_tile
+    elif pipeline:
+        # same MXU-vs-broadcast split the kernel drivers apply: l2/dot
+        # have a matmul form, the rest pay the (Qt, rows, C) VPU block
+        bcast = 0 if config.app.distance in ("l2", "dot") else spec.C
+        qt = choose_q_tile(spec.R, spec.C, planes, banks=p_loc,
+                           segs=spec.nh, want_dist=want_dist,
+                           bcast_cols=bcast)
+    else:
+        qt = default_q_tile(spec.R, spec.C, planes)
+    qt = max(1, min(qt, q_loc))
     passes = math.ceil(q_loc / qt)
-    stream = 4.0 * planes * p_loc * spec.nh * spec.R * spec.C * passes
-    q_bytes = 4.0 * q_loc * spec.nh * spec.C
+    if vb:
+        # bank-blocked pipeline: store streamed once per batch, query tile
+        # re-streamed per bank block, one grid step per (block, Q-tile)
+        blocks = p_loc // vb
+        stream = 4.0 * planes * p_loc * spec.nh * spec.R * spec.C
+        q_bytes = 4.0 * q_loc * spec.nh * spec.C * blocks
+        steps = blocks * passes
+    else:
+        stream = 4.0 * planes * p_loc * spec.nh * spec.R * spec.C * passes
+        q_bytes = 4.0 * q_loc * spec.nh * spec.C
+        steps = p_loc * spec.nh * passes
     out_bytes = (4.0 * q_loc * p_loc * spec.nh * spec.R
                  * (2 if want_dist else 1))
     # all shard groups run in parallel, so the whole Q-batch lands in one
-    # local-group time
-    t_s = (stream + q_bytes + out_bytes) / HBM_BYTES_PER_S
+    # local-group time; the dispatch term matters off-TPU (interpret mode)
+    # and only sharpens the ranking on hardware
+    t_s = ((stream + q_bytes + out_bytes) / HBM_BYTES_PER_S
+           + steps * STEP_OVERHEAD_S)
     return Q / t_s
 
 

@@ -230,6 +230,14 @@ class ShardedCAMSimulator:
         if queries.ndim == 1:
             idx, mask = self.query(state, queries[None], key)
             return SearchResult(idx[0], mask[0])
+        if self.n_banks == 1 and self.n_query == 1:
+            # Degenerate 1-device mesh: the shard_map collectives are
+            # identities that only add dispatch overhead (BENCH:
+            # kernel_*_sharded_d1 losing at 0.97x/0.85x), and the inner
+            # simulator IS the documented bit-identical reference
+            # (c2c_fold='bank') — delegate outright.
+            return self.sim.query(state, queries, key,
+                                  valid_count=valid_count)
         Q = queries.shape[0]
         if self.n_query > 1:
             tile = (min(self.sim.c2c_query_tile, Q)

@@ -107,7 +107,9 @@ def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
                            row_valid: jax.Array | None = None,
                            use_kernel: bool = False,
                            want_dist: bool = True,
-                           q_tile: int | None = None
+                           q_tile: int | None = None,
+                           pipeline: bool = True,
+                           int_codes: int = 0
                            ) -> Tuple[jax.Array | None, jax.Array]:
     """Batched subarray search over a (Q, nh, C) query block.
 
@@ -125,6 +127,11 @@ def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
     ``q_tile`` overrides the fused kernels' VMEM-formula query tile
     (``sim.q_tile`` threads through here); the jnp path evaluates the whole
     batch at once regardless, so the knob never changes results.
+
+    ``pipeline`` / ``int_codes`` (``sim.pipeline``; the functional
+    simulator's noise-free integral-code detection) select the kernels'
+    bank-blocked double-buffered schedule and the narrow-int / bit-packed
+    distance fast paths — schedule/dtype rewrites only, results unchanged.
     """
     if use_kernel:
         from repro.kernels import ops as kops
@@ -132,7 +139,7 @@ def subarray_query_batched(stored: jax.Array, queries: jax.Array, *,
             stored, queries, distance=distance, sensing=sensing,
             sensing_limit=sensing_limit, threshold=threshold,
             col_valid=col_valid, row_valid=row_valid, want_dist=want_dist,
-            q_tile=q_tile)
+            q_tile=q_tile, pipeline=pipeline, int_codes=int_codes)
         return out if want_dist else (None, out)
     dist, match = subarray_query(stored, queries, distance=distance,
                                  sensing=sensing,

@@ -86,9 +86,38 @@ _INF = float("inf")
 # (Qt, R, C) register blocks of the VPU distances still fit.
 VMEM_BUDGET_BYTES = 4 * 1024 * 1024
 
+# Pipelined-driver budget: the bank-blocked grid keeps whole stored bank
+# blocks resident across Q-tiles (half the budget) plus the in-flight
+# query/output tiles (the other half), closer to the ~16 MiB physical VMEM
+# than the per-tile formula's conservative 4 MiB.
+RESIDENT_BUDGET_BYTES = 12 * 1024 * 1024
+
+# Per-grid-step dispatch overhead (seconds) for the measured-model Q-tile
+# choice.  Interpret mode pays this in host dispatch per step; compiled
+# Mosaic pays a (much smaller) scalar-core cost — either way the model only
+# RANKS ladder rungs, and kernel_bench.py validates the ranking against
+# wall clock.
+STEP_OVERHEAD_S = 2e-4
+
+# Nominal HBM bandwidth for the traffic term of the Q-tile model; the same
+# constant plan.autotune.simulated_qps uses (bytes/s).
+HBM_BYTES_PER_S = 819e9
+
+# Ceiling on the per-step VPU broadcast block (qt, vb·segs·R, C) that the
+# no-matmul distances (l1 / unpacked hamming / ACAM range) materialize while
+# comparing every query lane against every cell.  The MXU distances
+# (l2 / dot) and the bit-packed hamming path never build this block, so the
+# cap binds only where the block is real — measured on the ACAM Q-sweep
+# geometry (8 banks x 512 x 128): rungs past this cliff run ~4x slower and
+# non-monotonically (kernel_bench.py qps_monotone contract).
+BCAST_BUDGET_BYTES = 24 * 1024 * 1024
+
 # Interpret-mode grids pay per-step dispatch overhead; below this batch size
 # the identical jnp tile math wins (BENCH: kernel_acam_range_q1 at 0.18x).
 SMALL_Q_CROSSOVER = 4
+
+# The power-of-two Q-tile ladder (what SimConfig.q_tile validates against).
+Q_TILES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
 def default_q_tile(rows: int, cols: int, planes: int = 1, *,
@@ -103,12 +132,103 @@ def default_q_tile(rows: int, cols: int, planes: int = 1, *,
     allows (``cap``), floored at 8 (sublane granularity) and capped at 256,
     then rounded down to a power of two for friendly grid divisions.
     ``planes`` is 1 for point-code grids, 2 for ACAM [lo, hi] grids.
+
+    This is the UNPIPELINED drivers' formula (the ``pipeline=False``
+    off-switch keeps it so that path stays bit- and schedule-identical to
+    the historical kernels); the pipelined drivers use the measured-model
+    ``choose_q_tile`` hook instead.
     """
     words = budget_bytes // 4
     stream = (planes * rows * cols) // (rows + cols)
     cap = (words - planes * rows * cols - cols) // (rows + cols)
     qt = min(max(stream, 8), max(cap, 1), 256)
     return max(1, 1 << (int(qt).bit_length() - 1))
+
+
+def resident_banks(banks: int, segs: int, rows: int, cols: int,
+                   planes: int = 1, *, itemsize: int = 4,
+                   budget_bytes: int = RESIDENT_BUDGET_BYTES) -> int:
+    """Bank-block size for the pipelined driver's VMEM-resident fast path.
+
+    Returns the largest divisor ``vb`` of ``banks`` whose
+    (vb, segs, rows, cols) stored planes fit the resident half of the
+    budget (the other half holds the double-buffered query/output tiles).
+    ``vb == banks`` means the WHOLE store stays on-chip and is streamed
+    from HBM once total — no re-stream per Q-tile; smaller ``vb`` still
+    streams the store exactly once per batch (block axis outermost) while
+    Pallas prefetches the next bank block during the current block's
+    distance math.  0 = not even one bank fits; the caller falls back to
+    the per-(R, C)-tile grid.
+    """
+    half = budget_bytes // 2
+    per_bank = planes * segs * rows * cols * itemsize
+    if per_bank <= 0 or per_bank > half or banks < 1:
+        return 0
+    return max(v for v in range(1, banks + 1)
+               if banks % v == 0 and v * per_bank <= half)
+
+
+def choose_q_tile(rows: int, cols: int, planes: int = 1, *, banks: int = 1,
+                  segs: int = 1, want_dist: bool = True, itemsize: int = 4,
+                  bcast_cols: int = 0,
+                  budget_bytes: int = RESIDENT_BUDGET_BYTES,
+                  hbm_bytes_per_s: float = HBM_BYTES_PER_S,
+                  step_overhead_s: float = STEP_OVERHEAD_S) -> int:
+    """Measured-model Q-tile autotune hook for the pipelined drivers.
+
+    Walks the power-of-two ladder and scores every rung with the same
+    HBM-traffic proxy ``plan.autotune.simulated_qps`` bills (stored-plane
+    stream + query stream + output write-back over a nominal bandwidth)
+    PLUS a per-grid-step dispatch term — the cost interpret mode actually
+    pays and the fixed formula ignored; ``benchmarks/kernel_bench.py``
+    validates the ranking against wall clock.  Rungs whose working set
+    (resident bank block + query tile + output tile) blows the budget are
+    infeasible.  The choice is per GEOMETRY, not per batch: the runtime
+    clamp ``qt = min(qt, Q)`` then makes per-call fixed overhead amortize
+    monotonically in Q (larger batches reuse the same block schedule over
+    more queries, which is the monotone-qps contract the Q-sweep rows
+    assert).
+
+    ``bcast_cols`` declares the lane width of the per-step VPU broadcast
+    block for no-matmul distances (0 = no block: l2/dot run on the MXU and
+    packed hamming reduces (Qt, R, W) with W = C/32 words).  When nonzero,
+    rungs whose (qt, bank-block rows, bcast_cols) compare block blows
+    ``BCAST_BUDGET_BYTES`` are infeasible — the block dwarfs every streamed
+    operand and growing it past the cache cliff is what made large-Q
+    batches SLOWER per query (the throughput collapse this driver fixes).
+    """
+    vb = resident_banks(banks, segs, rows, cols, planes, itemsize=itemsize,
+                        budget_bytes=budget_bytes)
+    out_planes = 2 if want_dist else 1
+    stored = float(planes * banks * segs * rows * cols * itemsize)
+    Q = 256.0          # reference batch: the ladder's top rung
+    best, best_t = 1, None
+    for qt in Q_TILES:
+        nq = -(-int(Q) // qt)
+        if vb:
+            blocks = banks // vb
+            block_bytes = (planes * vb * segs * rows * cols * itemsize
+                           + qt * segs * cols * itemsize
+                           + qt * vb * segs * rows * 4 * out_planes)
+            bcast_bytes = 4 * qt * vb * segs * rows * bcast_cols
+            steps = blocks * nq
+            stream = stored                       # store on-chip once
+            q_bytes = itemsize * Q * segs * cols * blocks
+        else:
+            block_bytes = (planes * rows * cols * itemsize
+                           + qt * cols * itemsize + qt * rows * 4 * out_planes)
+            bcast_bytes = 4 * qt * rows * bcast_cols
+            steps = banks * segs * nq
+            stream = stored * nq                  # re-streamed per Q-tile
+            q_bytes = itemsize * Q * segs * cols * banks
+        if block_bytes > budget_bytes or bcast_bytes > BCAST_BUDGET_BYTES:
+            continue
+        out_bytes = 4.0 * Q * banks * segs * rows * out_planes
+        t = ((stream + q_bytes + out_bytes) / hbm_bytes_per_s
+             + steps * step_overhead_s)
+        if best_t is None or t < best_t:
+            best, best_t = qt, t
+    return best
 
 
 def _dist_block(stored, q, valid, distance: str):
@@ -160,19 +280,51 @@ def cam_search_pallas(stored: jax.Array, query: jax.Array,
 # ---------------------------------------------------------------------------
 # Query-batched kernel
 # ---------------------------------------------------------------------------
+def packed_hamming_block(stored, q) -> jax.Array:
+    """stored (R, W) uint32, q (Qt, W) uint32 -> XOR+popcount (Qt, R) int32.
+
+    The bit-packed TCAM match line (``kernels.hamming_pack``) as a tile
+    function: don't-care/padded columns are zeroed in BOTH operands at pack
+    time (``ops.pack_bits``), so XOR contributes nothing there and the
+    count equals the col_valid-masked unpacked hamming distance exactly.
+    """
+    x = jnp.bitwise_xor(stored[None, :, :], q[:, None, :])
+    return jnp.sum(jax.lax.population_count(x), axis=-1, dtype=jnp.int32)
+
+
 def _dist_block_batched(stored, q, valid, distance: str) -> jax.Array:
-    """stored (R, C), q (Qt, C), valid (C,) -> dist (Qt, R)."""
+    """stored (R, C), q (Qt, C), valid (C,) -> dist (Qt, R).
+
+    Integer dtypes select the exact quantized-code fast paths (only safe —
+    and only requested by ``ops._fused_call`` — when the grid holds
+    noise-free integral codes): uint32 operands are bit-packed 1-bit codes
+    (XOR + popcount, ``valid`` already folded in at pack time), int8/int16
+    operands run the distances on narrow integers — on TPU the l2/dot
+    cross term becomes an int8 MXU matmul at a quarter of the f32 HBM
+    bandwidth.  Every int path produces the same f32 values as the float
+    path: all products/sums are exact small integers.
+    """
+    if stored.dtype == jnp.uint32 and distance == "hamming":
+        return packed_hamming_block(stored, q).astype(jnp.float32)
+    integer = jnp.issubdtype(stored.dtype, jnp.integer)
     if distance in ("l2", "dot"):
         # MXU formulation: fold the column mask into one operand so the
         # cross term is a plain (Qt, C) x (C, R) matmul.
-        qv = q * valid[None, :]
+        qv = q * (valid.astype(q.dtype)[None, :] if integer
+                  else valid[None, :])
         cross = jax.lax.dot_general(
             qv, stored, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)         # (Qt, R)
         if distance == "dot":
             return -cross
-        sn = jnp.sum(stored * stored * valid[None, :], axis=-1)   # (R,)
-        qn = jnp.sum(q * qv, axis=-1)                             # (Qt,)
+        if integer:
+            sf = stored.astype(jnp.float32)
+            qf = q.astype(jnp.float32)
+            sn = jnp.sum(sf * sf * valid[None, :], axis=-1)
+            qn = jnp.sum(qf * qf * valid[None, :], axis=-1)
+        else:
+            sn = jnp.sum(stored * stored * valid[None, :], axis=-1)  # (R,)
+            qn = jnp.sum(q * qv, axis=-1)                            # (Qt,)
         return sn[None, :] - 2.0 * cross + qn[:, None]
     # VPU broadcast path: (Qt, R, C) block in registers.
     s = stored[None, :, :]
@@ -194,43 +346,93 @@ def _batched_kernel(stored_ref, query_ref, valid_ref, out_ref, *,
     out_ref[:, 0, 0, :] = _dist_block_batched(stored, q, valid, distance)
 
 
+def _block_batched_kernel(stored_ref, query_ref, valid_ref, out_ref, *,
+                          distance: str):
+    """Bank-blocked variant of ``_batched_kernel``: stored (vb, nh, R, C)
+    resident across the inner Q-tile axis, q (qt, nh, C), valid (nh, C),
+    out (qt, vb, nh, R).  Same tile function vmapped over (nh, vb)."""
+    stored = stored_ref[...]
+    q = query_ref[...]
+    valid = valid_ref[...]
+    per_seg = jax.vmap(
+        lambda s, qseg, v: _dist_block_batched(s, qseg, v, distance),
+        in_axes=(0, 1, 0), out_axes=1)                    # over nh
+    per_bank = jax.vmap(lambda s: per_seg(s, q, valid),
+                        in_axes=0, out_axes=1)            # over vb
+    out_ref[...] = per_bank(stored)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("distance", "q_tile", "interpret"))
+                   static_argnames=("distance", "q_tile", "interpret",
+                                    "pipeline"))
 def cam_search_batched_pallas(stored: jax.Array, queries: jax.Array,
                               col_valid: jax.Array, *,
                               distance: str = "l2",
                               q_tile: Optional[int] = None,
-                              interpret: bool = False) -> jax.Array:
+                              interpret: bool = False,
+                              pipeline: bool = True) -> jax.Array:
     """stored (nv, nh, R, C), queries (Q, nh, C), col_valid (nh, C)
     -> dist (Q, nv, nh, R).
 
     The stored grid is streamed from HBM once for the whole query batch
     (Q-tile axis innermost; see module docstring for the block layout).
-    ``q_tile=None`` derives the tile from ``default_q_tile(R, C)``.
+    ``pipeline=True`` upgrades that to the bank-blocked double-buffered
+    schedule when ``resident_banks`` finds a block size: grid
+    (nv/vb, Q/Qt), each stored byte crosses HBM once per batch instead of
+    once per Q-tile, and ``q_tile=None`` is chosen per geometry by
+    ``choose_q_tile``.  ``pipeline=False`` keeps the historical per-tile
+    grid with ``default_q_tile`` (bit- and schedule-identical off-switch).
     """
     nv, nh, R, C = stored.shape
     Q = queries.shape[0]
     assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
+    cdt = _content_dtype((stored,))
+    vb = (resident_banks(nv, nh, R, C, 1, itemsize=cdt.itemsize)
+          if pipeline else 0)
     if q_tile is None:
-        q_tile = default_q_tile(R, C)
+        if pipeline:
+            bcast = 0 if distance in ("l2", "dot") else C
+            q_tile = choose_q_tile(R, C, 1, banks=nv, segs=nh,
+                                   want_dist=False, itemsize=cdt.itemsize,
+                                   bcast_cols=bcast)
+        else:
+            q_tile = default_q_tile(R, C)
     qt = max(1, min(q_tile, Q))
     pad = (-Q) % qt
     if pad:
         queries = jnp.pad(queries, ((0, pad), (0, 0), (0, 0)))
     nq = (Q + pad) // qt
-    out = pl.pallas_call(
-        functools.partial(_batched_kernel, distance=distance),
-        grid=(nv, nh, nq),
-        in_specs=[
-            pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0)),
-            pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
-            pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0)),
-        out_shape=jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32),
-        interpret=interpret,
-    )(stored.astype(jnp.float32), queries.astype(jnp.float32),
-      col_valid.astype(jnp.float32))
+    operands = (stored.astype(cdt), queries.astype(cdt),
+                col_valid.astype(jnp.float32))
+    out_shape = jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32)
+    if vb:
+        out = pl.pallas_call(
+            functools.partial(_block_batched_kernel, distance=distance),
+            grid=(nv // vb, nq),
+            in_specs=[
+                pl.BlockSpec((vb, nh, R, C), lambda b, k: (b, 0, 0, 0)),
+                pl.BlockSpec((qt, nh, C), lambda b, k: (k, 0, 0)),
+                pl.BlockSpec((nh, C), lambda b, k: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((qt, vb, nh, R),
+                                   lambda b, k: (k, b, 0, 0)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(*operands)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_batched_kernel, distance=distance),
+            grid=(nv, nh, nq),
+            in_specs=[
+                pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0)),
+                pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
+                pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((qt, 1, 1, R),
+                                   lambda i, j, k: (k, i, j, 0)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(*operands)
     return out[:Q]
 
 
@@ -275,43 +477,158 @@ def _fused_kernel(stored_ref, query_ref, valid_ref, rowv_ref, *out_refs,
                     want_dist=want_dist)
 
 
-def _fused_driver(kernel_body, stored_planes, queries: jax.Array,
+def _tile_fused(tile_planes, qseg, valid, rowv, *, distance: str,
+                sensing: str, sensing_limit: float, threshold: float):
+    """One (R, C) tile end-to-end: distance, padding-row inf mask, sense.
+    Shared verbatim by the bank-blocked kernel body and the jnp reference
+    twin — the bit-identity of the pipelined path is by construction."""
+    if distance == "range":
+        d = _range_block_batched(tile_planes[0], tile_planes[1], qseg, valid)
+    else:
+        d = _dist_block_batched(tile_planes[0], qseg, valid, distance)
+    d = jnp.where(rowv[None, :] > 0, d, _INF)
+    m = _sense_block(d, rowv, sensing, sensing_limit, threshold)
+    return d, m
+
+
+def _block_fused_kernel(*refs, n_planes: int, distance: str, sensing: str,
+                        sensing_limit: float, threshold: float,
+                        want_dist: bool):
+    """Bank-blocked pipelined kernel body.
+
+    Per grid step (b, k) the refs hold a whole (vb, nh, R, C) bank block
+    per stored plane (resident across the inner Q-tile axis; Pallas
+    double-buffers the NEXT block's HBM fetch while this one computes), a
+    (qt, nh, C) query tile, (nh, C) col_valid, (vb, R) row_valid, and
+    (qt, vb, nh, R) out tiles.  The body vmaps the same per-tile function
+    as ``cam_fused_reference`` over (nh, vb)."""
+    plane_refs = refs[:n_planes]
+    query_ref, valid_ref, rowv_ref = refs[n_planes:n_planes + 3]
+    out_refs = refs[n_planes + 3:]
+    planes = tuple(r[...] for r in plane_refs)            # (vb, nh, R, C)
+    q = query_ref[...]                                    # (qt, nh, C)
+    cv = valid_ref[...]                                   # (nh, C)
+    rv = rowv_ref[...]                                    # (vb, R)
+    tile = functools.partial(_tile_fused, distance=distance, sensing=sensing,
+                             sensing_limit=sensing_limit, threshold=threshold)
+    per_seg = jax.vmap(tile, in_axes=((0,) * n_planes, 1, 0, None),
+                       out_axes=(1, 1))                   # over nh
+    per_bank = jax.vmap(lambda tp, rowv: per_seg(tp, q, cv, rowv),
+                        in_axes=((0,) * n_planes, 0),
+                        out_axes=(1, 1))                  # over vb
+    d, m = per_bank(planes, rv)                           # (qt, vb, nh, R)
+    if want_dist:
+        out_refs[0][...] = d
+        out_refs[1][...] = m
+    else:
+        out_refs[0][...] = m
+
+
+def _content_dtype(stored_planes):
+    """Kernel compute dtype: integer planes (the quantized-code / packed
+    fast paths) keep their dtype; everything else runs the historical f32."""
+    cdt = stored_planes[0].dtype
+    if not jnp.issubdtype(cdt, jnp.integer):
+        cdt = jnp.dtype(jnp.float32)
+    return jnp.dtype(cdt)
+
+
+def _fused_driver(stored_planes, queries: jax.Array,
                   col_valid: jax.Array, row_valid: jax.Array, *,
-                  q_tile: Optional[int], want_dist: bool, interpret: bool):
-    """Shared scaffolding for the fused batched kernels: Q-tile clamp/pad,
-    the (nv, nh, Q/Qt) grid with the Q-tile axis innermost, BlockSpecs
-    (one (1, 1, R, C) resident spec per stored plane), pallas_call, and
-    the [:Q] unpad.  ``stored_planes`` is (stored,) for point-code grids
-    and (lo, hi) for ACAM range grids.  ``q_tile=None`` derives the tile
-    from the VMEM working-set formula (``default_q_tile``)."""
+                  distance: str, sensing: str, sensing_limit: float,
+                  threshold: float, q_tile: Optional[int], want_dist: bool,
+                  interpret: bool, pipeline: bool):
+    """Shared scaffolding for the fused batched kernels (point-code grids
+    pass ``stored_planes=(stored,)`` with a real distance; ACAM range grids
+    pass ``(lo, hi)`` with ``distance='range'``).
+
+    ``pipeline=True`` (the default) runs the double-buffered bank-blocked
+    schedule when ``resident_banks`` finds a block size: grid
+    (nv/vb, Q/Qt) with the Q-tile axis innermost and a (vb, nh, R, C)
+    stored BlockSpec indexed by the block axis alone — each stored byte
+    crosses HBM once per BATCH (not once per Q-tile), Pallas prefetches
+    block b+1 while block b computes, and ``vb == nv`` is the VMEM-resident
+    fast path (whole store on-chip, grid (1, Q/Qt)).  ``q_tile=None`` is
+    chosen per geometry by the measured-model ``choose_q_tile``.
+
+    ``pipeline=False`` is the bit- and schedule-identical off-switch: the
+    historical (nv, nh, Q/Qt) per-tile grid with ``default_q_tile``.
+    Both paths compute identical tile math — the block body vmaps the same
+    tile functions the per-tile bodies call."""
     nv, nh, R, C = stored_planes[0].shape
     Q = queries.shape[0]
+    n_planes = len(stored_planes)
     assert queries.shape == (Q, nh, C), (queries.shape, (Q, nh, C))
     assert row_valid.shape == (nv, R), (row_valid.shape, (nv, R))
+    cdt = _content_dtype(stored_planes)
+    vb = (resident_banks(nv, nh, R, C, n_planes, itemsize=cdt.itemsize)
+          if pipeline else 0)
     if q_tile is None:
-        q_tile = default_q_tile(R, C, len(stored_planes))
+        if pipeline:
+            # l2/dot take the MXU matmul form; everything else broadcasts a
+            # (Qt, rows, C) compare block on the VPU (for packed hamming C
+            # is already the packed word width, so the cap never binds)
+            bcast = 0 if distance in ("l2", "dot") else C
+            q_tile = choose_q_tile(R, C, n_planes, banks=nv, segs=nh,
+                                   want_dist=want_dist,
+                                   itemsize=cdt.itemsize, bcast_cols=bcast)
+        else:
+            q_tile = default_q_tile(R, C, n_planes)
     qt = max(1, min(q_tile, Q))
     pad = (-Q) % qt
     if pad:
         queries = jnp.pad(queries, ((0, pad), (0, 0), (0, 0)))
     nq = (Q + pad) // qt
     shape = jax.ShapeDtypeStruct((Q + pad, nv, nh, R), jnp.float32)
-    spec = pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0))
-    stored_spec = pl.BlockSpec((1, 1, R, C), lambda i, j, k: (i, j, 0, 0))
-    out = pl.pallas_call(
-        kernel_body,
-        grid=(nv, nh, nq),
-        in_specs=[stored_spec] * len(stored_planes) + [
-            pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
-            pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
-            pl.BlockSpec((1, R), lambda i, j, k: (i, 0)),
-        ],
-        out_specs=(spec, spec) if want_dist else spec,
-        out_shape=(shape, shape) if want_dist else shape,
-        interpret=interpret,
-    )(*(p.astype(jnp.float32) for p in stored_planes),
-      queries.astype(jnp.float32), col_valid.astype(jnp.float32),
-      row_valid.astype(jnp.float32))
+    planes = tuple(p.astype(cdt) for p in stored_planes)
+    qs = queries.astype(cdt)
+    cv = col_valid.astype(jnp.float32)
+    rv = row_valid.astype(jnp.float32)
+    if vb:
+        body = functools.partial(
+            _block_fused_kernel, n_planes=n_planes, distance=distance,
+            sensing=sensing, sensing_limit=sensing_limit,
+            threshold=threshold, want_dist=want_dist)
+        spec = pl.BlockSpec((qt, vb, nh, R), lambda b, k: (k, b, 0, 0))
+        stored_spec = pl.BlockSpec((vb, nh, R, C), lambda b, k: (b, 0, 0, 0))
+        out = pl.pallas_call(
+            body,
+            grid=(nv // vb, nq),
+            in_specs=[stored_spec] * n_planes + [
+                pl.BlockSpec((qt, nh, C), lambda b, k: (k, 0, 0)),
+                pl.BlockSpec((nh, C), lambda b, k: (0, 0)),
+                pl.BlockSpec((vb, R), lambda b, k: (b, 0)),
+            ],
+            out_specs=(spec, spec) if want_dist else spec,
+            out_shape=(shape, shape) if want_dist else shape,
+            interpret=interpret,
+        )(*planes, qs, cv, rv)
+    else:
+        if distance == "range":
+            body = functools.partial(
+                _range_fused_kernel, sensing=sensing,
+                sensing_limit=sensing_limit, threshold=threshold,
+                want_dist=want_dist)
+        else:
+            body = functools.partial(
+                _fused_kernel, distance=distance, sensing=sensing,
+                sensing_limit=sensing_limit, threshold=threshold,
+                want_dist=want_dist)
+        spec = pl.BlockSpec((qt, 1, 1, R), lambda i, j, k: (k, i, j, 0))
+        stored_spec = pl.BlockSpec((1, 1, R, C),
+                                   lambda i, j, k: (i, j, 0, 0))
+        out = pl.pallas_call(
+            body,
+            grid=(nv, nh, nq),
+            in_specs=[stored_spec] * n_planes + [
+                pl.BlockSpec((qt, 1, C), lambda i, j, k: (k, j, 0)),
+                pl.BlockSpec((1, C), lambda i, j, k: (j, 0)),
+                pl.BlockSpec((1, R), lambda i, j, k: (i, 0)),
+            ],
+            out_specs=(spec, spec) if want_dist else spec,
+            out_shape=(shape, shape) if want_dist else shape,
+            interpret=interpret,
+        )(*planes, qs, cv, rv)
     if want_dist:
         return out[0][:Q], out[1][:Q]
     return out[:Q]
@@ -320,7 +637,7 @@ def _fused_driver(kernel_body, stored_planes, queries: jax.Array,
 @functools.partial(jax.jit,
                    static_argnames=("distance", "sensing", "sensing_limit",
                                     "threshold", "q_tile", "want_dist",
-                                    "interpret"))
+                                    "interpret", "pipeline"))
 def cam_search_fused_pallas(stored: jax.Array, queries: jax.Array,
                             col_valid: jax.Array, row_valid: jax.Array, *,
                             distance: str = "l2", sensing: str = "best",
@@ -328,7 +645,8 @@ def cam_search_fused_pallas(stored: jax.Array, queries: jax.Array,
                             threshold: float = 0.0,
                             q_tile: Optional[int] = None,
                             want_dist: bool = True,
-                            interpret: bool = False):
+                            interpret: bool = False,
+                            pipeline: bool = True):
     """Batched search + in-kernel sense amplifier.
 
     stored (nv, nh, R, C), queries (Q, nh, C), col_valid (nh, C),
@@ -338,14 +656,17 @@ def cam_search_fused_pallas(stored: jax.Array, queries: jax.Array,
     ``want_dist=False``, in which case the float distance tensor is never
     written to HBM (exact/threshold AND-merge path).  Distances on padding
     rows are +inf, matching ``core.subarray.subarray_query``.
+
+    ``pipeline=True`` selects the bank-blocked double-buffered schedule
+    (see ``_fused_driver``); ``pipeline=False`` is the bit- and
+    schedule-identical historical per-tile grid.
     """
-    body = functools.partial(
-        _fused_kernel, distance=distance, sensing=sensing,
-        sensing_limit=float(sensing_limit), threshold=float(threshold),
-        want_dist=want_dist)
-    return _fused_driver(body, (stored,), queries, col_valid, row_valid,
+    return _fused_driver((stored,), queries, col_valid, row_valid,
+                         distance=distance, sensing=sensing,
+                         sensing_limit=float(sensing_limit),
+                         threshold=float(threshold),
                          q_tile=q_tile, want_dist=want_dist,
-                         interpret=interpret)
+                         interpret=interpret, pipeline=pipeline)
 
 
 # ---------------------------------------------------------------------------
@@ -375,7 +696,8 @@ def _range_fused_kernel(lo_ref, hi_ref, query_ref, valid_ref, rowv_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("sensing", "sensing_limit", "threshold",
-                                    "q_tile", "want_dist", "interpret"))
+                                    "q_tile", "want_dist", "interpret",
+                                    "pipeline"))
 def cam_range_fused_pallas(stored_lo: jax.Array, stored_hi: jax.Array,
                            queries: jax.Array, col_valid: jax.Array,
                            row_valid: jax.Array, *, sensing: str = "exact",
@@ -383,7 +705,8 @@ def cam_range_fused_pallas(stored_lo: jax.Array, stored_hi: jax.Array,
                            threshold: float = 0.0,
                            q_tile: Optional[int] = None,
                            want_dist: bool = True,
-                           interpret: bool = False):
+                           interpret: bool = False,
+                           pipeline: bool = True):
     """Batched ACAM range search + in-kernel sense amplifier.
 
     stored_lo / stored_hi (nv, nh, R, C) — the two planes of a 5-D
@@ -400,13 +723,12 @@ def cam_range_fused_pallas(stored_lo: jax.Array, stored_hi: jax.Array,
     """
     assert stored_hi.shape == stored_lo.shape, (stored_hi.shape,
                                                 stored_lo.shape)
-    body = functools.partial(
-        _range_fused_kernel, sensing=sensing,
-        sensing_limit=float(sensing_limit), threshold=float(threshold),
-        want_dist=want_dist)
-    return _fused_driver(body, (stored_lo, stored_hi), queries, col_valid,
-                         row_valid, q_tile=q_tile, want_dist=want_dist,
-                         interpret=interpret)
+    return _fused_driver((stored_lo, stored_hi), queries, col_valid,
+                         row_valid, distance="range", sensing=sensing,
+                         sensing_limit=float(sensing_limit),
+                         threshold=float(threshold),
+                         q_tile=q_tile, want_dist=want_dist,
+                         interpret=interpret, pipeline=pipeline)
 
 
 # ---------------------------------------------------------------------------
@@ -431,23 +753,15 @@ def cam_fused_reference(stored_planes, queries: jax.Array,
     ``stored_planes``: (stored,) point grids or (lo, hi) for
     ``distance='range'``, each (nv, nh, R, C); same outputs as the kernels.
     """
-    planes = tuple(p.astype(jnp.float32) for p in stored_planes)
+    cdt = _content_dtype(stored_planes)
+    planes = tuple(p.astype(cdt) for p in stored_planes)
     n_planes = len(planes)
-    q = queries.astype(jnp.float32)
+    q = queries.astype(cdt)
     cv = col_valid.astype(jnp.float32)
     rv = row_valid.astype(jnp.float32)
-
-    def tile(tile_planes, qseg, valid, rowv):
-        if distance == "range":
-            d = _range_block_batched(tile_planes[0], tile_planes[1], qseg,
-                                     valid)
-        else:
-            d = _dist_block_batched(tile_planes[0], qseg, valid, distance)
-        d = jnp.where(rowv[None, :] > 0, d, _INF)
-        m = _sense_block(d, rowv, sensing, float(sensing_limit),
-                         float(threshold))
-        return d, m
-
+    tile = functools.partial(_tile_fused, distance=distance, sensing=sensing,
+                             sensing_limit=float(sensing_limit),
+                             threshold=float(threshold))
     per_seg = jax.vmap(tile, in_axes=((0,) * n_planes, 1, 0, None),
                        out_axes=(1, 1))                  # over nh
     per_bank = jax.vmap(lambda tp, rowv: per_seg(tp, q, cv, rowv),

@@ -29,15 +29,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .cam_search import default_q_tile
+from .cam_search import default_q_tile, packed_hamming_block
 
 
 def _kernel(stored_ref, query_ref, out_ref):
     s = stored_ref[...]                       # (tile_r, W) uint32
-    q = query_ref[0]                          # (W,)
-    x = jnp.bitwise_xor(s, q[None, :])
-    out_ref[...] = jnp.sum(jax.lax.population_count(x), axis=-1,
-                           dtype=jnp.int32)
+    q = query_ref[...]                        # (1, W)
+    out_ref[...] = packed_hamming_block(s, q)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("tile_r", "interpret"))
@@ -62,11 +60,9 @@ def hamming_packed_pallas(stored_packed: jax.Array,
 
 
 def _batched_kernel(stored_ref, query_ref, out_ref):
-    s = stored_ref[...]                       # (tile_r, W) uint32
-    q = query_ref[...]                        # (q_tile, W) uint32
-    x = jnp.bitwise_xor(s[None, :, :], q[:, None, :])
-    out_ref[...] = jnp.sum(jax.lax.population_count(x), axis=-1,
-                           dtype=jnp.int32)
+    # (tile_r, W) x (q_tile, W) -> (q_tile, tile_r); the same XOR+popcount
+    # tile the fused kernels' packed-hamming fast path dispatches to
+    out_ref[...] = packed_hamming_block(stored_ref[...], query_ref[...])
 
 
 @functools.partial(jax.jit,

@@ -33,12 +33,14 @@ def _interpret() -> bool:
 def cam_search(stored: jax.Array, query: jax.Array, *, distance: str = "l2",
                col_valid: Optional[jax.Array] = None,
                q_tile: Optional[int] = None,
-               interpret: Optional[bool] = None) -> jax.Array:
+               interpret: Optional[bool] = None,
+               pipeline: bool = True) -> jax.Array:
     """stored (nv, nh, R, C); query (..., nh, C) -> dist (..., nv, nh, R).
 
     Batched queries go through the query-batched kernel, which streams the
-    stored grid from HBM once for the whole batch; a single (nh, C) query
-    uses the resident single-query kernel.
+    stored grid from HBM once for the whole batch (``pipeline=True``
+    upgrades it to the bank-blocked double-buffered schedule); a single
+    (nh, C) query uses the resident single-query kernel.
     """
     nv, nh, R, C = stored.shape
     if col_valid is None:
@@ -50,7 +52,7 @@ def cam_search(stored: jax.Array, query: jax.Array, *, distance: str = "l2",
     batch = query.reshape(-1, nh, C)
     out = cam_search_batched_pallas(stored, batch, col_valid,
                                     distance=distance, q_tile=q_tile,
-                                    interpret=itp)
+                                    interpret=itp, pipeline=pipeline)
     return out.reshape(*query.shape[:-2], nv, nh, R)
 
 
@@ -74,28 +76,69 @@ def cam_search_vmap(stored: jax.Array, query: jax.Array, *,
     return out.reshape(*query.shape[:-2], nv, nh, R)
 
 
+def _int_cast(stored: jax.Array, queries: jax.Array, col_valid: jax.Array,
+              *, distance: str, int_codes: int):
+    """Lower noise-free integral point codes onto the narrow-int / packed
+    fast paths of ``_dist_block_batched``.
+
+    ``int_codes`` is the code width in bits (``app.data_bits``), asserted
+    by the caller to describe a grid of exact small integers (no device
+    noise).  1-bit hamming codes bit-pack into uint32 words with
+    ``col_valid`` folded in as the care mask (both operands masked, so XOR
+    contributes 0 on don't-care columns); wider codes cast to int8 (≤7
+    bits) or int16 (8 bits).  Returns the (possibly transformed)
+    ``(stored, queries, col_valid)`` triple — unchanged when no fast path
+    applies.  Every path is bit-exact vs f32: the distances are sums of
+    exact small-integer products.
+    """
+    if not int_codes or stored.ndim != 4:
+        return stored, queries, col_valid
+    if distance == "hamming" and int_codes == 1:
+        # care mask broadcast over (nv, nh, R, C) / (Q, nh, C); the packed
+        # word count W replaces C and the mask is already folded in
+        nh = col_valid.shape[0]
+        sp = pack_bits(stored, col_valid[None, :, None, :])
+        qp = pack_bits(queries, col_valid[None])
+        return sp, qp, jnp.ones((nh, sp.shape[-1]), jnp.float32)
+    if distance in ("hamming", "l1", "l2", "dot") and int_codes <= 8:
+        idt = jnp.int8 if int_codes <= 7 else jnp.int16
+        return stored.astype(idt), queries.astype(idt), col_valid
+    return stored, queries, col_valid
+
+
 def _fused_call(stored: jax.Array, queries: jax.Array,
                 col_valid: jax.Array, row_valid: jax.Array, *,
                 distance: str, sensing: str, sensing_limit: float,
                 threshold: float, q_tile: Optional[int], want_dist: bool,
-                interpret: bool):
+                interpret: bool, pipeline: bool = True, int_codes: int = 0):
     """Shape-dispatched fused kernel call (shared with the sharded wrapper).
 
     5-D stored grids are ACAM [lo, hi] ranges and require
     ``distance='range'``; the trailing dim is split into two dense (R, C)
     planes before ``pallas_call`` (see ``cam_range_fused_pallas``).
 
-    Interpret-mode batches below ``SMALL_Q_CROSSOVER`` route to
-    ``cam_fused_reference`` — the jnp twin built from the same tile
-    functions — because emulated per-grid-step dispatch dominates tiny
-    batches (BENCH: q1 kernel at 0.18x of jnp).  On a real TPU backend the
-    kernels handle every batch size.
+    Batches below ``SMALL_Q_CROSSOVER`` route to ``cam_fused_reference`` —
+    the jnp twin built from the same tile functions — on BOTH the interpret
+    and compiled paths: per-grid-step dispatch (emulated or Mosaic launch)
+    dominates tiny batches either way (BENCH: q1 kernel at 0.92x of jnp
+    even with the fused epilogue), and the twin is bit-identical by
+    construction.
+
+    ``pipeline``/``int_codes`` select the bank-blocked double-buffered
+    schedule and the narrow-int/bit-packed distance paths; the fast paths
+    only rewrite dtypes/schedules, never values — ``pipeline=False``
+    reproduces the historical kernels bit-for-bit and skips the int
+    lowering entirely.
     """
     if (stored.ndim == 5) != (distance == "range"):
         raise ValueError(
             f"distance='range' needs a 5-D [lo, hi] grid and vice versa; "
             f"got distance={distance!r} with stored.ndim={stored.ndim}")
-    if interpret and queries.shape[0] < SMALL_Q_CROSSOVER:
+    if pipeline:
+        stored, queries, col_valid = _int_cast(
+            stored, queries, col_valid, distance=distance,
+            int_codes=int_codes)
+    if queries.shape[0] < SMALL_Q_CROSSOVER:
         planes = ((stored[..., 0], stored[..., 1]) if stored.ndim == 5
                   else (stored,))
         return cam_fused_reference(
@@ -107,12 +150,12 @@ def _fused_call(stored: jax.Array, queries: jax.Array,
             stored[..., 0], stored[..., 1], queries, col_valid, row_valid,
             sensing=sensing, sensing_limit=float(sensing_limit),
             threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
-            interpret=interpret)
+            interpret=interpret, pipeline=pipeline)
     return cam_search_fused_pallas(
         stored, queries, col_valid, row_valid, distance=distance,
         sensing=sensing, sensing_limit=float(sensing_limit),
         threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
-        interpret=interpret)
+        interpret=interpret, pipeline=pipeline)
 
 
 def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
@@ -121,13 +164,21 @@ def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
                      col_valid: Optional[jax.Array] = None,
                      row_valid: Optional[jax.Array] = None,
                      q_tile: Optional[int] = None, want_dist: bool = True,
-                     interpret: Optional[bool] = None):
+                     interpret: Optional[bool] = None,
+                     pipeline: bool = True, int_codes: int = 0):
     """Batched search with the sense-and-reduce epilogue fused in-kernel.
 
     stored (nv, nh, R, C) point codes, or (nv, nh, R, C, 2) ACAM [lo, hi]
     ranges with ``distance='range'`` (dispatched to the range kernel).
     queries (Q, nh, C) -> (dist, match) each (Q, nv, nh, R), or match alone
     when ``want_dist=False`` (the distance tensor then never leaves VMEM).
+
+    ``pipeline`` toggles the bank-blocked double-buffered schedule
+    (``sim.pipeline``; off-switch is bit- and schedule-identical to the
+    historical kernels).  ``int_codes`` (code width in bits) opts
+    noise-free integral point codes onto the narrow-int / bit-packed
+    distance fast paths — the caller asserts integrality; results stay
+    bit-exact.
     """
     nv, nh, R, C = stored.shape[:4]
     if col_valid is None:
@@ -139,7 +190,7 @@ def cam_search_fused(stored: jax.Array, queries: jax.Array, *,
         stored, queries, col_valid, row_valid, distance=distance,
         sensing=sensing, sensing_limit=float(sensing_limit),
         threshold=float(threshold), q_tile=q_tile, want_dist=want_dist,
-        interpret=itp)
+        interpret=itp, pipeline=pipeline, int_codes=int_codes)
 
 
 def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
@@ -151,7 +202,8 @@ def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
                              row_valid: Optional[jax.Array] = None,
                              q_tile: Optional[int] = None,
                              want_dist: bool = True,
-                             interpret: Optional[bool] = None):
+                             interpret: Optional[bool] = None,
+                             pipeline: bool = True, int_codes: int = 0):
     """``cam_search_fused`` with the stored grid's nv axis sharded over
     ``bank_axis`` of ``mesh``: each device streams only its local
     (nv/n_banks, nh, R, C) shard — the kernel-layer unit the sharded
@@ -183,7 +235,8 @@ def cam_search_fused_sharded(stored: jax.Array, queries: jax.Array, *,
         return _fused_call(
             s, q, cv, rv, distance=distance, sensing=sensing,
             sensing_limit=float(sensing_limit), threshold=float(threshold),
-            q_tile=q_tile, want_dist=want_dist, interpret=itp)
+            q_tile=q_tile, want_dist=want_dist, interpret=itp,
+            pipeline=pipeline, int_codes=int_codes)
 
     out_spec = P(None, bank_axis)
     return compat_shard_map(

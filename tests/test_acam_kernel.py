@@ -364,3 +364,54 @@ def test_jnp_path_honors_want_dist_false():
     _, want = subarray.subarray_query_batched(grid, qseg, use_kernel=False,
                                               **kw)
     np.testing.assert_array_equal(np.asarray(m), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# pipelined (bank-blocked) schedule: off-switch bit-identity on range grids
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sensing", ["exact", "best", "threshold"])
+@pytest.mark.parametrize("want_dist", [True, False])
+def test_range_pipeline_off_bit_identical(sensing, want_dist):
+    """The bank-blocked pipelined schedule and the historical per-tile
+    grid (sim.pipeline=False) vmap the SAME range tile function, so the
+    fused ACAM kernel must agree bitwise across the sensing matrix."""
+    rng = np.random.default_rng(29)
+    stored = _range_grid(21, 10, rng)
+    spec = mapping.grid_spec(21, 10, 8, 4)
+    grid = mapping.partition_stored(stored, spec)
+    qseg = mapping.partition_query(
+        jnp.asarray(rng.random((9, 10)).astype(np.float32)), spec)
+    kw = dict(distance="range", sensing=sensing, sensing_limit=0.5,
+              threshold=2.0, col_valid=mapping.col_valid_mask(spec),
+              row_valid=mapping.row_valid_mask(spec), want_dist=want_dist)
+    on = ops.cam_search_fused(grid, qseg, pipeline=True, **kw)
+    off = ops.cam_search_fused(grid, qseg, pipeline=False, **kw)
+    if want_dist:
+        np.testing.assert_array_equal(np.asarray(on[0]), np.asarray(off[0]))
+        np.testing.assert_array_equal(np.asarray(on[1]), np.asarray(off[1]))
+    else:
+        np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+
+
+@pytest.mark.parametrize("match,h_merge,v_merge,sensing", [
+    ("exact", "and", "gather", "exact"),
+    ("best", "adder", "comparator", "best"),
+    ("threshold", "adder", "gather", "threshold"),
+])
+def test_acam_query_pipeline_off_bit_identical(match, h_merge, v_merge,
+                                               sensing):
+    """End-to-end ACAM FunctionalSimulator: sim.pipeline=False reproduces
+    the default pipelined query bit-for-bit."""
+    rng = np.random.default_rng(31)
+    stored = _range_grid(21, 10, rng)
+    queries = jnp.asarray(rng.random((9, 10)).astype(np.float32))
+    def mk(pipeline):
+        cfg = _acam_cfg(match=match, h_merge=h_merge, v_merge=v_merge,
+                        sensing=sensing, sl=0.5, k=3)
+        return FunctionalSimulator(
+            cfg.replace(sim=dict(use_kernel=True, pipeline=pipeline)))
+    son, soff = mk(True), mk(False)
+    ion, mon = son.query(son.write(stored), queries)
+    ioff, moff = soff.query(soff.write(stored), queries)
+    np.testing.assert_array_equal(np.asarray(ion), np.asarray(ioff))
+    np.testing.assert_array_equal(np.asarray(mon), np.asarray(moff))

@@ -398,3 +398,85 @@ def test_cam_topk_batched_3d_shapes_and_values():
     # k larger than S: clamped to S, shape must follow the clamp
     v2, i2 = ops.cam_topk(keys, q, k=S + 10, chunk=S)
     assert v2.shape == (B, S) and i2.shape == (B, S)
+
+
+# ---------------------------------------------------------------------------
+# pipelined (bank-blocked) schedule: off-switch bit-identity + autotuned
+# q_tile invariance
+# ---------------------------------------------------------------------------
+from _hypothesis_compat import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels.cam_search import Q_TILES  # noqa: E402
+
+
+@pytest.mark.parametrize("distance", DISTANCES)
+def test_pipeline_off_bit_identical_kernels(distance):
+    """sim.pipeline=False (historical per-tile grid, default_q_tile) and
+    the bank-blocked pipelined schedule share the same tile functions, so
+    they must agree BITWISE — on the dist-only kernel and on the fused
+    kernel's dist and match outputs alike."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(23))
+    for nv, nh, R, C, Q in [(3, 2, 32, 64, 16), (2, 3, 17, 21, 5),
+                            (4, 1, 64, 64, 19)]:
+        stored = jax.random.uniform(k1, (nv, nh, R, C))
+        qb = jax.random.uniform(k2, (Q, nh, C))
+        on = ops.cam_search(stored, qb, distance=distance, pipeline=True)
+        off = ops.cam_search(stored, qb, distance=distance, pipeline=False)
+        np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
+        kw = dict(distance=distance, sensing="best", sensing_limit=0.1)
+        don, mon = ops.cam_search_fused(stored, qb, pipeline=True, **kw)
+        doff, moff = ops.cam_search_fused(stored, qb, pipeline=False, **kw)
+        np.testing.assert_array_equal(np.asarray(don), np.asarray(doff))
+        np.testing.assert_array_equal(np.asarray(mon), np.asarray(moff))
+
+
+@pytest.mark.parametrize(
+    "distance,match,h_merge,v_merge,cell,bits,sensing,sl", COMBOS)
+def test_query_pipeline_off_bit_identical(distance, match, h_merge,
+                                          v_merge, cell, bits, sensing, sl):
+    """End-to-end FunctionalSimulator: sim.pipeline=False must reproduce
+    the default pipelined query bit-for-bit for every match/merge combo —
+    including the quantized-code int fast paths the pipelined schedule
+    turns on (data_bits <= 8, exact small-integer sums)."""
+    K, N = 21, 12
+    cols = N if h_merge == "and" and match == "best" else 6
+    def mk(pipeline):
+        cfg = CAMConfig(
+            app=AppConfig(distance=distance, match_type=match,
+                          match_param=2, data_bits=bits),
+            arch=ArchConfig(h_merge=h_merge, v_merge=v_merge),
+            circuit=CircuitConfig(rows=8, cols=cols, cell_type=cell,
+                                  sensing=sensing, sensing_limit=sl),
+            device=DeviceConfig(device="fefet"))
+        return FunctionalSimulator(
+            cfg.replace(sim=dict(use_kernel=True, pipeline=pipeline)))
+    k1, k2 = jax.random.split(jax.random.PRNGKey(42))
+    stored = jax.random.uniform(k1, (K, N))
+    queries = jax.random.uniform(k2, (9, N))
+    son, soff = mk(True), mk(False)
+    ion, mon = son.query(son.write(stored), queries)
+    ioff, moff = soff.query(soff.write(stored), queries)
+    np.testing.assert_array_equal(np.asarray(ion), np.asarray(ioff))
+    np.testing.assert_array_equal(np.asarray(mon), np.asarray(moff))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, len(Q_TILES) - 1),
+       st.sampled_from(DISTANCES),
+       st.integers(0, 3))
+def test_q_tile_choice_never_changes_results(qt_idx, distance, seed):
+    """Property: the Q-tile is a pure schedule knob — ANY ladder rung,
+    and the autotuned choice (q_tile=None -> choose_q_tile), produce
+    bitwise-identical fused results on both pipeline settings."""
+    qt = Q_TILES[qt_idx]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(100 + seed))
+    stored = jax.random.uniform(k1, (2, 2, 12, 20))
+    qb = jax.random.uniform(k2, (11, 2, 20))
+    kw = dict(distance=distance, sensing="best", sensing_limit=0.05)
+    want_d, want_m = ops.cam_search_fused(stored, qb, q_tile=None,
+                                          pipeline=True, **kw)
+    for pipeline in (True, False):
+        d, m = ops.cam_search_fused(stored, qb, q_tile=qt,
+                                    pipeline=pipeline, **kw)
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(want_d))
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(want_m))

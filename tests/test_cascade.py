@@ -248,6 +248,36 @@ def test_small_q_takes_reference_path(monkeypatch):
                               interpret=True)
 
 
+def test_small_q_takes_reference_path_compiled(monkeypatch):
+    """The crossover must fire on the COMPILED path too: the old guard was
+    ``interpret and Q < SMALL_Q_CROSSOVER``, so a TPU deployment paid a
+    full Mosaic kernel launch for 1-3 query batches.  Monkeypatched
+    kernels prove the Pallas entry points are never reached with
+    interpret=False either."""
+    def boom(*a, **k):
+        raise AssertionError("Pallas kernel entered for a small batch")
+    monkeypatch.setattr(kops, "cam_search_fused_pallas", boom)
+    monkeypatch.setattr(kops, "cam_range_fused_pallas", boom)
+    rng = np.random.default_rng(1)
+    stored = jnp.asarray(rng.random((2, 2, 8, 8)).astype(np.float32))
+    small = jnp.asarray(rng.random(
+        (SMALL_Q_CROSSOVER - 1, 2, 8)).astype(np.float32))
+    d, m = kops.cam_search_fused(stored, small, distance="l2",
+                                 sensing="best", interpret=False)
+    assert d.shape == (SMALL_Q_CROSSOVER - 1, 2, 2, 8)
+    lo = rng.random((2, 2, 8, 8)).astype(np.float32)
+    rgrid = jnp.asarray(np.stack([lo, lo + 0.3], axis=-1))
+    m = kops.cam_search_fused(rgrid, small, distance="range",
+                              sensing="exact", want_dist=False,
+                              interpret=False)
+    assert m.shape == (SMALL_Q_CROSSOVER - 1, 2, 2, 8)
+    big = jnp.asarray(rng.random(
+        (SMALL_Q_CROSSOVER, 2, 8)).astype(np.float32))
+    with pytest.raises(AssertionError, match="small batch"):
+        kops.cam_search_fused(stored, big, distance="l2", sensing="best",
+                              interpret=False)
+
+
 @pytest.mark.parametrize("distance", ["l2", "hamming", "range"])
 def test_small_q_reference_bit_identical_to_kernel(distance):
     rng = np.random.default_rng(4)
@@ -360,3 +390,25 @@ def test_eval_perf_cascade_knobs_via_facade():
         < sweep[None]["energy_pj"] + sweep[2]["search"].breakdown[
             "prefilter"]["energy_pj"] + 1e9  # sanity ordering on fractions
     assert sweep[1]["energy_pj"] < sweep[None]["energy_pj"]
+
+
+def test_select_cascade_clamps_predicted_loss_at_n2048():
+    """Regression (BENCH cascade_route_n2048): the recall ladder on the
+    n=2048 / 64-dim / 64x64-subarray geometry only clears the floor at
+    p = nv = 32, where the rung's own billing is a predicted LOSS
+    (pred_e_frac = 1.186 — the signature slab costs more than the zero
+    banks it skips).  ``select_cascade`` must refuse to ship it and fall
+    back to prefilter='off' (returns None)."""
+    cfg = _cfg(app=dict(match_param=4),
+               circuit=dict(rows=64, cols=64))
+    sim = CAMASim(cfg)
+    nv = sim.plan(2048, 64).spec.nv
+    assert nv == 32
+    sel, rep = sim.select_cascade([nv], entries=2048, dims=64)
+    assert rep[nv]["energy_pj"] >= rep[None]["energy_pj"]
+    assert sel is None                     # never ship a predicted loss
+    # a genuinely cheaper rung on the same geometry IS selected, and the
+    # winner among mixed rungs skips the losing one
+    sel2, rep2 = sim.select_cascade([4, nv], entries=2048, dims=64)
+    assert sel2 == 4
+    assert rep2[4]["energy_pj"] < rep2[None]["energy_pj"]

@@ -31,7 +31,7 @@ from repro.core.results import SearchResult as ResultsSearchResult
 KEY = jax.random.PRNGKey(0)
 
 PERF_KEYS = ("arch", "search", "latency_ns", "energy_pj", "area_um2",
-             "edp_pj_ns", "inserts_per_s")
+             "edp_pj_ns", "inserts_per_s", "device_inserts_per_s")
 
 
 def _cfg(**sim):

@@ -322,14 +322,24 @@ def test_predict_write_partial_rows_billing():
 
 
 def test_perf_report_has_inserts_per_s():
+    """``inserts_per_s`` is the honest SERVING proxy (device write + host
+    engine-step overhead — the quantity serve_bench's wall clock measures,
+    once off by 8800x when it was the raw device figure); the device-only
+    rate rides along as ``device_inserts_per_s``."""
     from repro.core import estimate_arch, predict_write
+    from repro.core.perf.estimator import HOST_STEP_OVERHEAD_NS
     sim = CAMASim(_cfg())
     sim.plan(512, 64)
     rep = sim.eval_perf()
     arch = estimate_arch(sim.config, 512, 64)
-    want = 1e9 / predict_write(sim.config, arch, rows=1).latency_ns
-    assert rep["inserts_per_s"] == pytest.approx(want)
-    assert rep["inserts_per_s"] > 0
+    w1 = predict_write(sim.config, arch, rows=1).latency_ns
+    assert rep["device_inserts_per_s"] == pytest.approx(1e9 / w1)
+    assert rep["inserts_per_s"] == pytest.approx(
+        1e9 / (w1 + HOST_STEP_OVERHEAD_NS))
+    # the serving proxy is always the smaller figure, and on this geometry
+    # the engine step dominates by orders of magnitude
+    assert 0 < rep["inserts_per_s"] < rep["device_inserts_per_s"]
+    assert rep["device_inserts_per_s"] / rep["inserts_per_s"] > 100
 
 
 def test_capacity_reserves_headroom_in_plan_and_write():

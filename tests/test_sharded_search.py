@@ -142,6 +142,37 @@ check(acam_cfg("exact", "and", "gather", "exact", "c2c"), use_kernel=True,
       tag="acam-kernel-c2c")
 n += 5
 
+# pipelined (bank-blocked) schedule off-switch: sim.pipeline=False on the
+# sharded backend must be bit-identical BOTH to the pipelined sharded run
+# and to the single-device reference — covering the fused point kernel
+# (with the quantized-code int fast path) and the ACAM range kernel
+def check_pipeline(cfg, tag=""):
+    base = dict(use_kernel=True, c2c_fold="bank")
+    k1, k2 = jax.random.split(jax.random.PRNGKey(zlib.crc32(tag.encode())))
+    stored = jax.random.uniform(k1, (37, 12))
+    if cfg.circuit.cell_type == "acam":
+        stored = jnp.stack([stored, stored + 0.2], axis=-1)
+    queries = jax.random.uniform(k2, (9, 12))
+    ref = FunctionalSimulator(cfg.replace(sim=dict(base, pipeline=True)))
+    ia, ma = ref.query(ref.write(stored), queries)
+    for pipe in (True, False):
+        s = ShardedCAMSimulator(cfg.replace(sim=dict(base, pipeline=pipe)),
+                                mesh)
+        ib, mb = s.query(s.write(stored), queries)
+        np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib),
+                                      err_msg=f"pipe-{pipe}-{tag}")
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb),
+                                      err_msg=f"pipe-{pipe}-{tag}")
+    print("OK pipeline", tag)
+
+check_pipeline(cfg_for("best", "l2", "adder", "comparator", "best"),
+               tag="point-best")
+check_pipeline(cfg_for("exact", "hamming", "and", "gather", "exact"),
+               tag="point-hamming")
+check_pipeline(acam_cfg("best", "adder", "comparator", "best"),
+               tag="acam-best")
+n += 3
+
 # best-match merge with match_param > padded_K: the single-device clamp
 # + -1 pad must agree with the sharded candidate re-rank (regression for
 # the unclamped jax.lax.top_k crash in v_merge_comparator_topk)
@@ -205,7 +236,7 @@ def _run_subprocess(script: str, timeout: int = 900):
 @pytest.mark.multidevice
 def test_sharded_parity_4_devices():
     proc = _run_subprocess(_PARITY_SCRIPT)
-    assert proc.returncode == 0 and "PARITY_OK 31" in proc.stdout, \
+    assert proc.returncode == 0 and "PARITY_OK 34" in proc.stdout, \
         (proc.stdout[-2000:], proc.stderr[-4000:])
 
 
