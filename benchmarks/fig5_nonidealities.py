@@ -44,15 +44,30 @@ def check_trends(out) -> dict:
     return res
 
 
+# CI accuracy floors (check_floors: acc= must clear acc_floor=), pinned
+# ~0.05-0.1 under the measured CI values so the non-ideality model can't
+# silently regress: clean/sl legs measured 0.887-0.900; the std=2.0 leg
+# measured 0.498 (noise hurts, but the CAM must stay far above the 0.10
+# random-guess line).
+FLOORS = {("var", 0.0): 0.80, ("var", 2.0): 0.30,
+          ("sl", 0.0): 0.80, ("sl", 5.0): 0.78}
+
+
 def main():
     t0 = time.perf_counter()
     out = run(stds=(0.0, 2.0), sls=(0.0, 5.0), episodes=4, steps=150,
               cols=(64,))
     dt = (time.perf_counter() - t0) * 1e6
     for r in out["variation"]:
-        print(f"fig5_var_std{r['std']}_c{r['cols']},{dt/4:.0f},acc={r['acc']:.3f}")
+        fl = FLOORS.get(("var", r["std"]))
+        guard = f"_acc_floor={fl}" if fl is not None else ""
+        print(f"fig5_var_std{r['std']}_c{r['cols']},{dt/4:.0f},"
+              f"acc={r['acc']:.3f}{guard}")
     for r in out["sensing_limit"]:
-        print(f"fig5_sl{r['sl']}_c{r['cols']},{dt/4:.0f},acc={r['acc']:.3f}")
+        fl = FLOORS.get(("sl", r["sl"]))
+        guard = f"_acc_floor={fl}" if fl is not None else ""
+        print(f"fig5_sl{r['sl']}_c{r['cols']},{dt/4:.0f},"
+              f"acc={r['acc']:.3f}{guard}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,145 @@
+"""Reliability benchmark: accuracy vs fault rate and vs drift age (MANN).
+
+Two curves, mitigation on vs off, on the shared MANN few-shot substrate:
+
+1. **Fault curve** — stuck cells + dead rows injected at increasing rates
+   into the support store.  Unmitigated (``verify_retries=0``, no spares)
+   the dead support entries silently never match and accuracy decays;
+   mitigated, write-verify detects the bad rows at program time and heals
+   them onto same-bank spare rows, so accuracy holds at the clean level.
+
+2. **Aging curve** — conductance drift decays the stored rows as the
+   serve engine steps.  Without scrubbing the store ages to garbage;
+   with background scrubbing the engine re-programs the most-drifted
+   rows every ``scrub_every`` steps through the mutation lane and
+   accuracy holds.
+
+The headline rows carry ``acc_floor=`` (mitigated must stay above) and
+``acc_ceil=`` (unmitigated must stay BELOW — the fault injection is real,
+not a no-op), both enforced by ``benchmarks.run.check_floors``.  Floors
+are pinned ~0.05 under the measured CI values; the ceilings sit between
+the two curves.
+
+``main(backend=...)`` runs the whole bench on the functional or sharded
+backend (CI smoke-runs both; the sharded leg under forced host devices).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.serve_loop import CAMSearchServer
+
+from . import mann_task
+
+# Measured on the CI container (functional backend; the sharded backend is
+# bit-identical).  Mitigated accuracy at the headline fault rate / final
+# age must clear the floor; unmitigated must sit below the ceiling.
+FAULT_RATES = (0.0, 0.1, 0.3)
+HEADLINE_FAULT = 0.3
+FAULT_ACC_FLOOR = 0.72     # measured 0.784 mitigated (clean 0.787)
+FAULT_ACC_CEIL = 0.60      # measured 0.444 unmitigated
+AGES = (0, 150, 300)
+AGE_ACC_FLOOR = 0.80       # measured 0.900 scrubbed (fresh 0.927)
+AGE_ACC_CEIL = 0.60        # measured 0.273 unscrubbed
+
+
+def _rel_cfg(dim: int, *, mitigated: bool, stuck: float = 0.0,
+             dead_rows: float = 0.0, drift: float = 0.0,
+             scrub_every: int = 0, backend: str = "functional"):
+    """MANN config with one 64-row bank per 50-row support set plus spare
+    head-room, reliability on, mitigation knobs on/off."""
+    cfg = mann_task.mann_cam_config(dim, 3, rows=64, cols=64)
+    mit = dict(verify_retries=2, verify_tol=0.5, spares_per_bank=16,
+               scrub_every=scrub_every, scrub_rows=16) if mitigated else {}
+    return cfg.replace(
+        sim=dict(backend=backend, capacity=128),
+        reliability=dict(enabled=True, stuck_frac=stuck,
+                         dead_row_frac=dead_rows, drift_rate=drift,
+                         fault_seed=7, **mit))
+
+
+def fault_curve(net, dim: int, episodes: int = 3, backend="functional"):
+    """10-way 1-SHOT episodes: every class rides on one support row, so an
+    unhealed dead row loses its whole class — the regime where spare-row
+    healing is the difference between working and broken."""
+    out = []
+    for f in FAULT_RATES:
+        for mitigated in (True, False):
+            cfg = _rel_cfg(dim, mitigated=mitigated, stuck=f / 100,
+                           dead_rows=f, backend=backend)
+            acc = mann_task.eval_mann(net, cfg, episodes=episodes,
+                                      n_shot=1, n_query=15)
+            out.append(dict(rate=f, mitigated=mitigated, acc=acc))
+    return out
+
+
+def aging_curve(net, dim: int, backend="functional", drift: float = 0.01,
+                n_way: int = 10, n_shot: int = 5, n_query: int = 15):
+    """Self-retrieval accuracy of one episode's support store as the serve
+    engine steps: the engine's reliability tick ages the store every step
+    and (scrub leg only) re-programs the most-drifted rows on schedule.
+    Accuracy is probed through the same search path the server runs."""
+    from repro.core import CAMASim
+    from repro.models.cam_memory import CAMMemory
+
+    sup, sup_y, qry, qry_y = mann_task.make_episode(
+        jax.random.PRNGKey(42), n_way, n_shot, n_query)
+    es, eq = mann_task.embed(net, sup), mann_task.embed(net, qry)
+    s = jnp.std(es) * 3.0
+    es, eq = jnp.clip(es, -s, s), jnp.clip(eq, -s, s)
+
+    out = []
+    for scrub in (True, False):
+        cfg = _rel_cfg(dim, mitigated=scrub, drift=drift,
+                       scrub_every=5 if scrub else 0, backend=backend)
+        sim = CAMASim(cfg)
+        state = sim.write(es, jax.random.PRNGKey(3))
+        srv = CAMSearchServer(sim=sim, state=state,
+                              key=jax.random.PRNGKey(4))
+        age = 0
+        for target in AGES:
+            while age < target:
+                srv.step()          # idle steps still age (and scrub)
+                age += 1
+            idx, _ = sim.query(srv.state, eq, jax.random.PRNGKey(5))
+            pred = np.asarray(jnp.take(sup_y, jnp.maximum(idx[:, 0], 0)))
+            acc = float((pred == np.asarray(qry_y)).mean())
+            out.append(dict(age=target, scrub=scrub, acc=acc))
+    return out
+
+
+def main(backend: str = "functional", episodes: int = 3,
+         train_steps: int = 120, dim: int = 64):
+    t0 = time.perf_counter()
+    net = mann_task.train_embedding(dim=dim, steps=train_steps)
+    rows = fault_curve(net, dim, episodes=episodes, backend=backend)
+    dt = (time.perf_counter() - t0) * 1e6 / max(1, len(rows))
+    tag = "" if backend == "functional" else f"_{backend}"
+    for r in rows:
+        kind = "mit" if r["mitigated"] else "unmit"
+        guard = ""
+        if r["rate"] == HEADLINE_FAULT:
+            guard = (f"_acc_floor={FAULT_ACC_FLOOR}" if r["mitigated"]
+                     else f"_acc_ceil={FAULT_ACC_CEIL}")
+        print(f"reliability_fault{r['rate']}_{kind}{tag},{dt:.0f},"
+              f"acc={r['acc']:.3f}{guard}")
+    t1 = time.perf_counter()
+    ages = aging_curve(net, dim, backend=backend)
+    dt = (time.perf_counter() - t1) * 1e6 / max(1, len(ages))
+    for r in ages:
+        kind = "scrub" if r["scrub"] else "noscrub"
+        guard = ""
+        if r["age"] == AGES[-1]:
+            guard = (f"_acc_floor={AGE_ACC_FLOOR}" if r["scrub"]
+                     else f"_acc_ceil={AGE_ACC_CEIL}")
+        print(f"reliability_age{r['age']}_{kind}{tag},{dt:.0f},"
+              f"acc={r['acc']:.3f}{guard}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(backend=sys.argv[1] if len(sys.argv) > 1 else "functional")

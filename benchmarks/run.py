@@ -79,6 +79,19 @@ def check_floors(rows: list) -> None:
         if er and rc and float(er.group(1)) > float(rc.group(1)):
             bad.append(f"{r['name']}: est_ratio {er.group(1)} > ceiling "
                        f"{rc.group(1)} ({d})")
+        # accuracy guards (fig5 / reliability_bench): a row's acc= must
+        # clear its own acc_floor= (mitigated/self-healing legs) and stay
+        # under its acc_ceil= (unmitigated legs — proves the injected
+        # faults are real, not a silent no-op)
+        a = re.search(r"(?:^|_)acc=([0-9.]+)", d)
+        af = re.search(r"(?:^|_)acc_floor=([0-9.]+)", d)
+        ac = re.search(r"(?:^|_)acc_ceil=([0-9.]+)", d)
+        if a and af and float(a.group(1)) < float(af.group(1)):
+            bad.append(f"{r['name']}: acc {a.group(1)} < floor "
+                       f"{af.group(1)} ({d})")
+        if a and ac and float(a.group(1)) > float(ac.group(1)):
+            bad.append(f"{r['name']}: acc {a.group(1)} > ceiling "
+                       f"{ac.group(1)} ({d})")
     if bad:
         raise RuntimeError("benchmark floor violations:\n  "
                            + "\n  ".join(bad))
@@ -108,8 +121,9 @@ def main() -> None:
     if "--devices" in sys.argv:
         devices = int(sys.argv[sys.argv.index("--devices") + 1])
     from . import (autotune_bench, cascade_bench, fig4_sweep,
-                   fig5_nonidealities, kernel_bench, serve_bench,
-                   sharded_bench, sharded_perf, table4_validation)
+                   fig5_nonidealities, kernel_bench, reliability_bench,
+                   serve_bench, sharded_bench, sharded_perf,
+                   table4_validation)
 
     rows: list = []
 
@@ -124,6 +138,8 @@ def main() -> None:
     _run_and_collect(sharded_perf.main, rows)
     _run_and_collect(fig4_sweep.main, rows)
     _run_and_collect(fig5_nonidealities.main, rows)
+    _run_and_collect(lambda: reliability_bench.main(backend="functional"),
+                     rows)
     _run_and_collect(kernel_bench.main, rows)
     _run_and_collect(lambda: cascade_bench.main(ci=not full), rows)
     _run_and_collect(lambda: serve_bench.main(backend="both"), rows)

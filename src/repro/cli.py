@@ -121,6 +121,12 @@ def main(argv: Optional[list] = None) -> int:
               f"{args.entries}x{args.dims} store, "
               f"{hits} with >=1 match", file=sys.stderr)
         print(f"arch   : {sim.arch_specifics().describe()}", file=sys.stderr)
+        if getattr(state, "rel", None) is not None:
+            import numpy as np
+            healed = int(np.asarray(state.rel.retired).sum())
+            unhealed = int(np.asarray(state.rel.failed).sum())
+            print(f"reliab : {healed} rows healed onto spares, "
+                  f"{unhealed} failed unhealed", file=sys.stderr)
 
     perf = sim.eval_perf(n_queries=args.queries,
                          include_write=args.include_write)

@@ -7,18 +7,20 @@ application / architecture / circuit / device levels (paper Table III).
 from .backend import Backend, make_backend
 from .camasim import CAMASim
 from .config import (AppConfig, ArchConfig, CAMConfig, CircuitConfig,
-                     DeviceConfig, SimConfig)
+                     DeviceConfig, ReliabilityConfig, SimConfig)
 from .functional import CAMState, FunctionalSimulator
 from .perf import (MeshLink, MeshSpec, PerfReport, PerfResult, estimate_arch,
                    predict_schedule, predict_search, predict_search_sharded,
                    predict_write)
+from .reliability import ReliabilityState
 from .results import SearchResult
 from .sharded import ShardedCAMSimulator
 from . import plan
 
 __all__ = [
     "Backend", "CAMASim", "CAMConfig", "AppConfig", "ArchConfig",
-    "CircuitConfig", "DeviceConfig", "SimConfig", "CAMState",
+    "CircuitConfig", "DeviceConfig", "ReliabilityConfig",
+    "ReliabilityState", "SimConfig", "CAMState",
     "FunctionalSimulator", "PerfReport", "PerfResult", "SearchResult",
     "MeshLink", "MeshSpec", "ShardedCAMSimulator", "estimate_arch",
     "make_backend", "plan", "predict_schedule", "predict_search",

@@ -55,6 +55,14 @@ class Backend(Protocol):
     def compact(self, state: CAMState,
                 key: Optional[jax.Array] = None) -> CAMState: ...
 
+    # reliability contract (no-ops / errors unless config.reliability is
+    # enabled): the serve engine ages the store once per step and scrubs
+    # the most-drifted rows on its schedule
+    def age_tick(self, state: CAMState, steps: int = 1) -> CAMState: ...
+
+    def scrub(self, state: CAMState,
+              key: Optional[jax.Array] = None) -> CAMState: ...
+
     def segment_queries(self, state: CAMState,
                         queries: jax.Array) -> jax.Array: ...
 

@@ -95,6 +95,20 @@ class CAMASim:
         fresh ``write`` of them); row ids renumber 0..K_live-1."""
         return self.backend.compact(state, key)
 
+    # ------------------------------------------------------ reliability
+    def age_tick(self, state: CAMState, steps: int = 1) -> CAMState:
+        """Advance the store's logical age by ``steps`` (drift clock).
+        The serve engine calls this once per ``step()``; a no-op when
+        ``config.reliability`` is off."""
+        return self.backend.age_tick(state, steps)
+
+    def scrub(self, state: CAMState,
+              key: Optional[jax.Array] = None) -> CAMState:
+        """Re-program the most-drifted live rows from their clean codes
+        (and heal any rows that fail verify onto spares).  The serve
+        engine drives this every ``reliability.scrub_every`` steps."""
+        return self.backend.scrub(state, key)
+
     # ------------------------------------------------------------ query
     def query(self, state: CAMState, queries: jax.Array,
               key: Optional[jax.Array] = None,

@@ -150,6 +150,14 @@ class SimConfig:
     # noise-free integral codes).  False is the bit- and schedule-identical
     # off-switch: the historical per-tile grid with the VMEM formula tile.
     pipeline: bool = True
+    # Measured-model constant overrides (kernels.cam_search): per-grid-step
+    # dispatch seconds and the VPU broadcast-block byte cap the Q-tile
+    # autotune ranks rungs with.  None keeps the module defaults (which
+    # the CAMASIM_STEP_OVERHEAD_S / CAMASIM_BCAST_BUDGET_BYTES env vars
+    # override at import); fit fresh values on new hardware with
+    # benchmarks/calibrate_kernel_model.py.
+    step_overhead_s: Optional[float] = None
+    bcast_budget_bytes: Optional[int] = None
 
     def __post_init__(self):
         _check(self.backend, BACKENDS, "backend")
@@ -180,6 +188,12 @@ class SimConfig:
                 raise ValueError(
                     "q_tile must be a power of two in [1, 256] "
                     "(or None = the kernels' VMEM formula)")
+        if self.step_overhead_s is not None and self.step_overhead_s <= 0:
+            raise ValueError(
+                "step_overhead_s must be > 0 (or None = module default)")
+        if self.bcast_budget_bytes is not None and self.bcast_budget_bytes <= 0:
+            raise ValueError(
+                "bcast_budget_bytes must be > 0 (or None = module default)")
 
     def cascade_enabled(self) -> bool:
         """Both stages configured: a prefilter is selected AND a bank
@@ -188,9 +202,59 @@ class SimConfig:
         return self.prefilter != "off" and self.top_p_banks is not None
 
 
+@dataclass(frozen=True)
+class ReliabilityConfig:
+    """Device reliability model: fault injection + self-healing knobs.
+
+    ``enabled=False`` (the default) is the hard off-switch — every
+    consumer gates on it, so a config without this section (or with it
+    disabled) behaves bit-identically to the pre-reliability code.
+
+    Fault maps are deterministic functions of ``fault_seed`` keyed per
+    global row SLOT (``fold_in`` — the same fold the mutable store's
+    ``d2d_fold='row'`` noise uses), so the functional and sharded
+    backends derive bit-identical faults regardless of how the bank axis
+    is split.
+    """
+    enabled: bool = False
+    stuck_frac: float = 0.0       # fraction of cells stuck at a random level
+    dead_row_frac: float = 0.0    # fraction of row slots entirely dead
+    dead_col_frac: float = 0.0    # fraction of subarray columns dead
+    endurance_writes: int = 0     # programs per slot before cells freeze
+                                  # (0 = unlimited endurance)
+    drift_rate: float = 0.0       # conductance decay per unit age:
+                                  # g_eff = g * exp(-rate * (age - prog_age))
+    verify_retries: int = 0       # write-verify re-program attempts
+    verify_tol: float = 0.0       # max |readback - target| accepted by
+                                  # verify (code-domain LSBs)
+    spares_per_bank: int = 0      # free slots a bank may donate to remap
+                                  # dead/worn rows (0 = no redundancy)
+    scrub_every: int = 0          # serve steps between background scrub
+                                  # passes (0 = scrubbing off)
+    scrub_rows: int = 1           # most-drifted rows re-programmed per pass
+    fault_seed: int = 0           # RNG seed the fault maps derive from
+
+    def __post_init__(self):
+        for f_ in ("stuck_frac", "dead_row_frac", "dead_col_frac"):
+            v = getattr(self, f_)
+            if not (0.0 <= v <= 1.0):
+                raise ValueError(f"{f_} must be in [0, 1]")
+        for f_ in ("endurance_writes", "verify_retries", "spares_per_bank",
+                   "scrub_every"):
+            if getattr(self, f_) < 0:
+                raise ValueError(f"{f_} must be >= 0")
+        if self.drift_rate < 0:
+            raise ValueError("drift_rate must be >= 0")
+        if self.verify_tol < 0:
+            raise ValueError("verify_tol must be >= 0")
+        if self.scrub_rows < 1:
+            raise ValueError("scrub_rows must be >= 1")
+
+
 _SECTIONS = {
     "app": "AppConfig", "arch": "ArchConfig", "circuit": "CircuitConfig",
     "device": "DeviceConfig", "sim": "SimConfig",
+    "reliability": "ReliabilityConfig",
 }
 
 
@@ -202,10 +266,17 @@ class CAMConfig:
     circuit: CircuitConfig = field(default_factory=CircuitConfig)
     device: DeviceConfig = field(default_factory=DeviceConfig)
     sim: SimConfig = field(default_factory=SimConfig)
+    reliability: ReliabilityConfig = field(
+        default_factory=ReliabilityConfig)
 
     # ------------------------------------------------------------------ io
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        # an all-default reliability section means "subsystem absent":
+        # leave it out so pre-reliability configs round-trip verbatim
+        if self.reliability == ReliabilityConfig():
+            del d["reliability"]
+        return d
 
     def to_json(self, **kw) -> str:
         return json.dumps(self.to_dict(), **kw)
@@ -224,6 +295,9 @@ class CAMConfig:
                 **known_fields(CircuitConfig, d.get("circuit", {}))),
             device=DeviceConfig(**dev),
             sim=SimConfig(**known_fields(SimConfig, d.get("sim", {}))),
+            reliability=ReliabilityConfig(
+                **known_fields(ReliabilityConfig,
+                               d.get("reliability", {}))),
         )
 
     @classmethod
@@ -273,6 +347,15 @@ class CAMConfig:
             raise ValueError(
                 "the search cascade with C2C variation requires "
                 "sim.c2c_fold='bank' (per-bank RNG fold)")
+        if (self.reliability.enabled
+                and self.device.variation in ("d2d", "both")
+                and self.sim.d2d_fold != "row"):
+            # verified programming (and scrub/heal re-programming) draws
+            # noise per row slot; the grid-level D2D draw cannot be
+            # reproduced for individual rows
+            raise ValueError(
+                "reliability with D2D variation requires "
+                "sim.d2d_fold='row' (per-row-slot RNG fold)")
 
 
 def known_fields(section_cls, d: dict) -> dict:

@@ -34,8 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import mapping, merge, prefilter, quantize, subarray, variation
+from . import mapping, merge, prefilter, quantize, reliability, subarray, \
+    variation
 from .config import CAMConfig
+from .reliability import ReliabilityState
 from .results import SearchResult
 
 
@@ -82,16 +84,32 @@ class CAMState:
                                           # ``compact`` can re-place live
                                           # rows bit-identically to a
                                           # fresh write
+    rel: Optional[ReliabilityState] = None  # reliability bookkeeping (age,
+                                            # wear, retired/failed flags);
+                                            # only when config.reliability
+                                            # is enabled
 
 
 jax.tree_util.register_pytree_node(
     CAMState,
     lambda s: ((s.grid, s.lo, s.hi, s.col_valid, s.row_valid, s.sigs,
-                s.sig_thr, s.perm, s.codes), s.spec),
+                s.sig_thr, s.perm, s.codes, s.rel), s.spec),
     lambda spec, leaves: CAMState(leaves[0], leaves[1], leaves[2], spec,
                                   leaves[3], leaves[4], leaves[5],
-                                  leaves[6], leaves[7], leaves[8]),
+                                  leaves[6], leaves[7], leaves[8],
+                                  leaves[9]),
 )
+
+
+def _replace_state(state: CAMState, **kw) -> CAMState:
+    """CAMState copy with the given fields replaced."""
+    fields = dict(grid=state.grid, lo=state.lo, hi=state.hi,
+                  spec=state.spec, col_valid=state.col_valid,
+                  row_valid=state.row_valid, sigs=state.sigs,
+                  sig_thr=state.sig_thr, perm=state.perm,
+                  codes=state.codes, rel=state.rel)
+    fields.update(kw)
+    return CAMState(**fields)
 
 
 class FunctionalSimulator:
@@ -121,11 +139,14 @@ class FunctionalSimulator:
         # noise keep the float path.  0 disables; else the code width in
         # bits (threaded to kernels.ops as ``int_codes``).
         app, dev, circ = config.app, config.device, config.circuit
+        # (reliability faults/drift turn the sensed grid into floats, so
+        # the exact-integer fast path is also gated on reliability off)
         self.int_codes = (
             app.data_bits
             if (self.pipeline and app.data_bits and app.data_bits <= 8
                 and app.distance in ("hamming", "l1", "l2", "dot")
-                and dev.variation == "none" and circ.cell_type != "acam")
+                and dev.variation == "none" and circ.cell_type != "acam"
+                and not config.reliability.enabled)
             else 0)
         # 'grid': one normal draw over the whole (nv, nh, R, C) grid per
         # cycle (the historical single-device draw).  'bank': one draw per
@@ -133,6 +154,14 @@ class FunctionalSimulator:
         # matter how the nv axis is split across devices, so the sharded
         # simulator (core.sharded) always runs its reference in this mode.
         self.c2c_fold = config.sim.c2c_fold
+        # measured-model overrides: fitted constants from
+        # benchmarks/calibrate_kernel_model.py, pinned in the config
+        if (config.sim.step_overhead_s is not None
+                or config.sim.bcast_budget_bytes is not None):
+            from repro.kernels.cam_search import set_kernel_model
+            set_kernel_model(
+                step_overhead_s=config.sim.step_overhead_s,
+                bcast_budget_bytes=config.sim.bcast_budget_bytes)
         self._arch = None          # perf.ArchSpecifics, set by write()/plan()
 
     # ------------------------------------------------------------- perf
@@ -193,9 +222,8 @@ class FunctionalSimulator:
         self.plan(K, N)            # record arch specifics for eval_perf
         spec = mapping.grid_spec(K, N, cfg.circuit.rows, cfg.circuit.cols,
                                  cfg.sim.capacity)
-        return self._write_jit(stored, spec,
-                               key if key is not None
-                               else jax.random.PRNGKey(0))
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return self._heal_failed(self._write_jit(stored, spec, key), key)
 
     @partial(jax.jit, static_argnums=(0, 2))
     def _write_jit(self, stored, spec, key):
@@ -231,7 +259,30 @@ class FunctionalSimulator:
             sigs = prefilter.row_signatures(cvals, sig_thr, spec,
                                             cfg.sim.signature_bits)
         clean = mapping.partition_stored(codes, spec)
-        if cfg.sim.d2d_fold == "row":
+        relcfg = cfg.reliability
+        rel = None
+        if relcfg.enabled:
+            # verified programming over every slot: attempt 0 draws the
+            # legacy per-slot noise, so with verify/faults all zero the
+            # grid is bit-identical to apply_d2d_rowfold
+            nv, nh, R, C = clean.shape[:4]
+            extra = clean.shape[4:]
+            rows = jnp.moveaxis(clean, 2, 1).reshape(nv * R, nh, C, *extra)
+            slots = jnp.arange(nv * R, dtype=jnp.int32)
+            live = slots < spec.K
+            prog, attempts, ok = reliability.program_rows_verified(
+                rows, jnp.zeros_like(rows), slots, dev=cfg.device,
+                rel=relcfg, bits=cfg.app.data_bits, key=key,
+                col_valid=mapping.col_valid_mask(spec),
+                code_hi=reliability.code_ceiling(cfg), R=R, live=live)
+            grid = jnp.moveaxis(prog.reshape(nv, R, nh, C, *extra), 1, 2)
+            rel = ReliabilityState(
+                age=jnp.zeros((), jnp.int32),
+                prog_age=jnp.zeros((nv, R), jnp.int32),
+                writes=jnp.where(live, attempts, 0).reshape(nv, R),
+                retired=jnp.zeros((nv, R), bool),
+                failed=(~ok & live).reshape(nv, R))
+        elif cfg.sim.d2d_fold == "row":
             grid = variation.apply_d2d_rowfold(clean, cfg.device,
                                                cfg.app.data_bits, key)
         else:
@@ -240,7 +291,8 @@ class FunctionalSimulator:
         return CAMState(grid=grid, lo=lo, hi=hi, spec=spec,
                         col_valid=mapping.col_valid_mask(spec),
                         row_valid=mapping.row_valid_mask(spec),
-                        sigs=sigs, sig_thr=sig_thr, perm=perm, codes=clean)
+                        sigs=sigs, sig_thr=sig_thr, perm=perm, codes=clean,
+                        rel=rel)
 
     # --------------------------------------------------------- mutations
     # Online edits of the resident store (free-list allocation over the
@@ -274,11 +326,23 @@ class FunctionalSimulator:
                 f"row width {rows.shape[1]} != stored dims {state.spec.N}")
 
     def free_slots(self, state: CAMState) -> np.ndarray:
-        """Global row slots currently free (ascending).  Only slots below
+        """Global row slots currently free.  Only slots below
         ``spec.padded_K`` count — a sharded state's all-invalid padding
-        banks are not allocatable capacity."""
-        rv = np.asarray(state.row_valid).reshape(-1)[:state.spec.padded_K]
-        return np.where(rv == 0)[0]
+        banks are not allocatable capacity.  Without reliability the
+        order is ascending; with it the allocator is wear-aware: retired
+        slots never come back, and the least-worn (fewest programming
+        pulses) free slot is claimed first (ascending slot id breaks
+        ties, so an unworn store allocates exactly like the legacy
+        free list)."""
+        padded_K = state.spec.padded_K
+        rv = np.asarray(state.row_valid).reshape(-1)[:padded_K]
+        free = np.where(rv == 0)[0]
+        if state.rel is not None and self.config.reliability.enabled:
+            retired = np.asarray(state.rel.retired).reshape(-1)[:padded_K]
+            free = free[~retired[free]]
+            writes = np.asarray(state.rel.writes).reshape(-1)[:padded_K]
+            free = free[np.argsort(writes[free], kind="stable")]
+        return free
 
     def _slots_of(self, state: CAMState, ids) -> jax.Array:
         """Map caller-order row ids to global row slots (inverse of the
@@ -321,9 +385,12 @@ class FunctionalSimulator:
                 "free slots — delete rows, compact(), or re-write with a "
                 "larger sim.capacity")
         slots = jnp.asarray(free[:rows.shape[0]], jnp.int32)
-        new_state = self._write_rows(state, rows, slots,
-                                     key if key is not None
-                                     else jax.random.PRNGKey(0), True)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        new_state = self._heal_failed(
+            self._write_rows(state, rows, slots, key, True), key)
+        # ids come from the pre-heal perm: healing swaps a failed slot's
+        # perm entry along with its data, so the returned NAME stays
+        # valid wherever the row physically lands
         ids = (jnp.take(state.perm, slots) if state.perm is not None
                else slots)
         return new_state, ids
@@ -334,11 +401,8 @@ class FunctionalSimulator:
         mask on ``row_valid``) and their slots return to the free list."""
         slots = self._slots_of(state, ids)
         v, r = slots // state.spec.R, slots % state.spec.R
-        return CAMState(grid=state.grid, lo=state.lo, hi=state.hi,
-                        spec=state.spec, col_valid=state.col_valid,
-                        row_valid=state.row_valid.at[v, r].set(0.0),
-                        sigs=state.sigs, sig_thr=state.sig_thr,
-                        perm=state.perm, codes=state.codes)
+        return _replace_state(state,
+                              row_valid=state.row_valid.at[v, r].set(0.0))
 
     def update(self, state: CAMState, ids, rows: jax.Array,
                key: Optional[jax.Array] = None) -> CAMState:
@@ -351,28 +415,55 @@ class FunctionalSimulator:
         if slots.shape[0] != rows.shape[0]:
             raise ValueError(
                 f"{slots.shape[0]} ids but {rows.shape[0]} rows")
-        return self._write_rows(state, rows, slots,
-                                key if key is not None
-                                else jax.random.PRNGKey(0), False)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return self._heal_failed(
+            self._write_rows(state, rows, slots, key, False), key)
 
-    @partial(jax.jit, static_argnums=(0, 5))
-    def _write_rows(self, state: CAMState, rows, slots, key, set_valid):
+    @partial(jax.jit, static_argnums=(0, 5, 6))
+    def _write_rows(self, state: CAMState, rows, slots, key, set_valid,
+                    is_codes=False):
         """Program ``rows`` (M, N[, 2]) into global slots ``slots`` (M,):
         quantize with the store's frozen scale, scatter clean codes +
         per-slot-folded D2D noise, refresh only the touched rows'
-        signatures."""
+        signatures.  ``is_codes`` skips quantization for rows already in
+        the code domain (scrub and spare-heal re-program resident clean
+        codes).  With reliability enabled, programming runs write-verify
+        (``reliability.program_rows_verified``) and updates the wear
+        counters / failed flags."""
         cfg = self.config
         bits = cfg.app.data_bits
         spec = state.spec
-        if rows.ndim == 3:          # ACAM ranges: no quantization
+        if is_codes or rows.ndim == 3:   # ACAM ranges: no quantization
             codes = rows
         else:
             codes, _, _ = quantize.quantize_for_cell(
                 rows, cfg.circuit.cell_type, bits, state.lo, state.hi)
         segs = mapping.partition_rows(codes, spec)       # (M, nh, C[, 2])
-        noisy = variation.apply_d2d_slots(segs, cfg.device, bits, key,
-                                          slots)
         v, r = slots // spec.R, slots % spec.R
+        rel = state.rel
+        relcfg = cfg.reliability
+        if relcfg.enabled and rel is not None:
+            old = state.grid[v, :, r]                    # (M, nh, C[, 2])
+            worn = (rel.writes[v, r] >= relcfg.endurance_writes
+                    if relcfg.endurance_writes > 0
+                    else jnp.zeros(slots.shape, bool))
+            noisy, attempts, ok = reliability.program_rows_verified(
+                segs, old, slots, dev=cfg.device, rel=relcfg, bits=bits,
+                key=key, col_valid=state.col_valid,
+                code_hi=reliability.code_ceiling(cfg), R=spec.R,
+                worn=worn)
+            rel = ReliabilityState(
+                age=rel.age,
+                # worn cells never actually re-program, so their drift
+                # clock keeps running from the last real program
+                prog_age=rel.prog_age.at[v, r].set(
+                    jnp.where(worn, rel.prog_age[v, r], rel.age)),
+                writes=rel.writes.at[v, r].add(attempts),
+                retired=rel.retired,
+                failed=rel.failed.at[v, r].set(~ok))
+        else:
+            noisy = variation.apply_d2d_slots(segs, cfg.device, bits, key,
+                                              slots)
         grid = state.grid.at[v, :, r].set(noisy)
         clean = (state.codes.at[v, :, r].set(segs)
                  if state.codes is not None else None)
@@ -387,7 +478,7 @@ class FunctionalSimulator:
         return CAMState(grid=grid, lo=state.lo, hi=state.hi, spec=spec,
                         col_valid=state.col_valid, row_valid=row_valid,
                         sigs=sigs, sig_thr=state.sig_thr, perm=state.perm,
-                        codes=clean)
+                        codes=clean, rel=rel)
 
     def compact(self, state: CAMState,
                 key: Optional[jax.Array] = None) -> CAMState:
@@ -418,9 +509,11 @@ class FunctionalSimulator:
         new_spec = mapping.grid_spec(int(live.size), spec.N, spec.R, spec.C,
                                      cfg.sim.capacity)
         self.plan(int(live.size), spec.N)
-        return self._place_jit(rows, state.lo, state.hi, new_spec,
-                               key if key is not None
-                               else jax.random.PRNGKey(0))
+        key = key if key is not None else jax.random.PRNGKey(0)
+        # reliability note: compaction models a re-deployment onto a
+        # fresh slab, so wear/age counters reset with the placement
+        return self._heal_failed(
+            self._place_jit(rows, state.lo, state.hi, new_spec, key), key)
 
     @partial(jax.jit, static_argnums=(0,))
     def _gather_code_rows(self, state: CAMState, slots) -> jax.Array:
@@ -435,6 +528,103 @@ class FunctionalSimulator:
     @partial(jax.jit, static_argnums=(0, 4))
     def _place_jit(self, codes, lo, hi, spec, key):
         return self._place_codes(codes, lo, hi, spec, key)
+
+    # ------------------------------------------------------- reliability
+    def _heal_failed(self, state: CAMState, key) -> CAMState:
+        """Spare-row healing: remap live rows that failed write-verify
+        (dead/stuck/worn slots) onto same-bank spare slots, re-programming
+        their resident clean codes there.  The placement permutation
+        swaps along with the data, so callers' row ids never change.
+        Rounds repeat while verify still fails and spares remain (a spare
+        can itself be dead — the next round retires it and tries the
+        next-least-worn one); a row whose bank runs out of spare budget
+        stays flagged ``failed`` in place (degraded, honestly reported)."""
+        relcfg = self.config.reliability
+        if (state.rel is None or not relcfg.enabled
+                or relcfg.spares_per_bank < 1 or state.codes is None):
+            return state
+        # each round retires at least one slot, so this terminates; the
+        # explicit bound is a backstop against pathological fault maps
+        for _ in range(8):
+            healed = self._heal_round(state, key)
+            if healed is None:
+                break
+            state = healed
+        return state
+
+    def _heal_round(self, state: CAMState, key):
+        relcfg = self.config.reliability
+        spec = state.spec
+        padded_K = spec.padded_K
+        rv = np.asarray(state.row_valid).reshape(-1)[:padded_K]
+        rel = state.rel
+        src, dst = reliability.plan_spares(
+            rv,
+            np.asarray(rel.failed).reshape(-1)[:padded_K],
+            np.asarray(rel.retired).reshape(-1)[:padded_K],
+            np.asarray(rel.writes).reshape(-1)[:padded_K],
+            spec.R, relcfg.spares_per_bank)
+        if not src:
+            return None
+        src_j = jnp.asarray(src, jnp.int32)
+        dst_j = jnp.asarray(dst, jnp.int32)
+        rows = self._gather_code_rows(state, src_j)
+        # the spare slots draw the same per-slot noise a direct write
+        # with this key would, keeping insert/fresh-write parity intact
+        state = self._write_rows(state, rows, dst_j, key, True, True)
+        vs, rs = src_j // spec.R, src_j % spec.R
+        rel = state.rel
+        rel = ReliabilityState(
+            age=rel.age, prog_age=rel.prog_age, writes=rel.writes,
+            retired=rel.retired.at[vs, rs].set(True),
+            failed=rel.failed.at[vs, rs].set(False))
+        perm = (np.asarray(state.perm).copy() if state.perm is not None
+                else np.arange(padded_K))
+        perm[np.asarray(dst)], perm[np.asarray(src)] = \
+            perm[np.asarray(src)], perm[np.asarray(dst)].copy()
+        return _replace_state(
+            state,
+            row_valid=state.row_valid.at[vs, rs].set(0.0),
+            perm=jnp.asarray(perm, jnp.int32), rel=rel)
+
+    def age_tick(self, state: CAMState, steps: int = 1) -> CAMState:
+        """Advance the logical store age (drift clock) by ``steps``.
+        The serve engine calls this once per ``CAMSearchServer.step()``."""
+        if state.rel is None:
+            return state
+        rel = state.rel
+        return _replace_state(state, rel=ReliabilityState(
+            age=(rel.age + jnp.int32(steps)).astype(jnp.int32),
+            prog_age=rel.prog_age, writes=rel.writes,
+            retired=rel.retired, failed=rel.failed))
+
+    def scrub(self, state: CAMState,
+              key: Optional[jax.Array] = None) -> CAMState:
+        """Background scrub: re-program the ``scrub_rows`` most-drifted
+        live rows from their resident clean codes (write-verify applies;
+        a row that can no longer hold its data is spare-healed).  A
+        no-op when nothing has drifted."""
+        relcfg = self.config.reliability
+        if not relcfg.enabled or state.rel is None:
+            raise ValueError("scrub() requires config.reliability.enabled "
+                             "and a reliability-tracked state")
+        if state.codes is None:
+            raise ValueError("state has no resident clean codes — re-write "
+                             "the store to enable scrub()")
+        self._check_mutable()
+        spec = state.spec
+        padded_K = spec.padded_K
+        slots = reliability.pick_scrub_slots(
+            np.asarray(state.row_valid).reshape(-1)[:padded_K],
+            np.asarray(state.rel.prog_age).reshape(-1)[:padded_K],
+            int(np.asarray(state.rel.age)), relcfg.scrub_rows)
+        if slots.size == 0:
+            return state
+        key = key if key is not None else jax.random.PRNGKey(0)
+        slots_j = jnp.asarray(slots, jnp.int32)
+        rows = self._gather_code_rows(state, slots_j)
+        return self._heal_failed(
+            self._write_rows(state, rows, slots_j, key, False, True), key)
 
     # ------------------------------------------------------------- query
     def query(self, state: CAMState, queries: jax.Array,
@@ -471,8 +661,20 @@ class FunctionalSimulator:
         idx, mask = self._query_inner(state, queries, key, valid_count)
         return self._to_original(state, idx, mask)
 
+    def _effective_state(self, state: CAMState) -> CAMState:
+        """Read path: what a search senses.  Overlays drift decay and the
+        deterministic fault maps on the stored grid (a no-op unless
+        reliability is enabled — the off path touches nothing)."""
+        cfg = self.config
+        if not cfg.reliability.enabled or state.rel is None:
+            return state
+        return _replace_state(
+            state, grid=reliability.effective_grid(state.grid, state.rel,
+                                                   cfg))
+
     def _query_inner(self, state: CAMState, queries, key, valid_count=None):
         cfg = self.config
+        state = self._effective_state(state)
         bits = cfg.app.data_bits
         qcodes = self.query_codes(state, queries)            # (Q, N)
         qseg = mapping.partition_query(qcodes, state.spec)   # (Q, nh, C)

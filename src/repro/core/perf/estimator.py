@@ -457,6 +457,20 @@ def perf_report(config: CAMConfig, arch: ArchSpecifics, *,
     w1 = predict_write(config, arch, rows=1).latency_ns
     out["device_inserts_per_s"] = 1e9 / w1
     out["inserts_per_s"] = 1e9 / (w1 + HOST_STEP_OVERHEAD_NS)
+    # reliability billing: additive keys, present ONLY when the
+    # reliability subsystem is on, so the off-report (and the golden
+    # Table IV snapshot) stays key-for-key identical
+    if config.reliability.enabled:
+        rel = config.reliability
+        out["expected_row_programs"] = expected_row_programs(
+            config, arch.spec.nh * config.circuit.cols)
+        scrub = predict_scrub(config, arch)
+        out["scrub"] = scrub
+        # scrub duty cycle: one scrub pass amortized over its period of
+        # serve-engine steps (0 when scrubbing is off)
+        out["scrub_energy_pj_per_step"] = (
+            scrub.energy_pj / rel.scrub_every if rel.scrub_every > 0
+            else 0.0)
     return PerfReport(out)
 
 
@@ -558,6 +572,60 @@ def predict_write(config: CAMConfig, arch: ArchSpecifics,
         e = (cell.write_energy_pj(R, C) * arch.spec.nh
              * min(rows, arch.spec.padded_K) / R)
     a = cell.area_um2(R, C) * arch.n_subarrays
+    E = expected_row_programs(cfg, arch.spec.nh * C)
+    if E != 1.0:
+        # write-verify billing: every programmed row costs E expected row
+        # programs (initial attempt + re-programs of out-of-tolerance rows)
+        t, e = t * E, e * E
     return PerfResult(latency_ns=t, energy_pj=e, area_um2=a,
                       breakdown={"write": {"latency_ns": t, "energy_pj": e,
                                            "area_um2": a}})
+
+
+# ---------------------------------------------------------------------------
+# reliability billing (core.reliability): write-verify retries + scrubbing
+# ---------------------------------------------------------------------------
+def expected_row_programs(config: CAMConfig, ncells: int) -> float:
+    """Expected row-program count per written row under write-verify.
+
+    Analytic model of ``reliability.program_rows_verified``: each of the
+    row's ``ncells`` cells independently lands outside ``verify_tol``
+    with the Gaussian tail probability erfc(tol / (sigma*sqrt(2))) of the
+    D2D programming noise; the row is re-programmed while any live cell
+    is out of tolerance, up to ``verify_retries`` times.  Rows holding a
+    hard fault (stuck cell / dead row) can never verify and burn every
+    retry.  Exactly 1.0 when reliability is off or ``verify_retries`` is
+    0, so legacy write billing is untouched.
+    """
+    rel = config.reliability
+    r = rel.verify_retries
+    if not rel.enabled or r < 1:
+        return 1.0
+    dev = config.device
+    sigma = 0.0
+    if dev.variation in ("d2d", "both"):
+        if (dev.variation_spec == "exper" and dev.exper_table
+                and config.app.data_bits > 0):
+            sigma = sum(dev.exper_table) / len(dev.exper_table)
+        else:
+            sigma = dev.variation_std
+    if sigma > 0:
+        p_cell = math.erfc(rel.verify_tol / (sigma * math.sqrt(2.0)))
+    else:
+        p_cell = 0.0
+    p_cell = min(1.0, max(0.0, p_cell))
+    # soft (re-programmable) row failure per attempt
+    p_soft = 1.0 - (1.0 - p_cell) ** ncells
+    # hard faults: a dead row, or any stuck cell in the row
+    p_stuck = 1.0 - (1.0 - rel.stuck_frac) ** ncells
+    p_hard = rel.dead_row_frac + (1.0 - rel.dead_row_frac) * p_stuck
+    e_soft = 1.0 + sum(p_soft ** a for a in range(1, r + 1))
+    return p_hard * (1.0 + r) + (1.0 - p_hard) * e_soft
+
+
+def predict_scrub(config: CAMConfig, arch: ArchSpecifics) -> PerfResult:
+    """One background scrub pass: re-program the ``scrub_rows``
+    most-drifted rows from their clean codes (a partial write, including
+    the expected write-verify retries ``predict_write`` already bills)."""
+    return predict_write(config, arch,
+                         rows=max(1, config.reliability.scrub_rows))

@@ -158,8 +158,13 @@ def simulated_qps(config: CAMConfig, entries: int, dims: int, *,
     measurement by ``benchmarks/autotune_bench.py`` and
     ``benchmarks/kernel_bench.py``.
     """
-    from repro.kernels.cam_search import (STEP_OVERHEAD_S, choose_q_tile,
-                                          default_q_tile, resident_banks)
+    # module (not value) import: set_kernel_model / env overrides mutate
+    # cam_search.STEP_OVERHEAD_S and the estimator must see the same
+    # constant the kernel drivers rank with
+    from repro.kernels import cam_search
+    choose_q_tile = cam_search.choose_q_tile
+    default_q_tile = cam_search.default_q_tile
+    resident_banks = cam_search.resident_banks
 
     spec = estimate_arch(config, entries, dims).spec
     planes = 2 if config.app.distance == "range" else 1
@@ -203,7 +208,7 @@ def simulated_qps(config: CAMConfig, entries: int, dims: int, *,
     # local-group time; the dispatch term matters off-TPU (interpret mode)
     # and only sharpens the ranking on hardware
     t_s = ((stream + q_bytes + out_bytes) / HBM_BYTES_PER_S
-           + steps * STEP_OVERHEAD_S)
+           + steps * cam_search.STEP_OVERHEAD_S)
     return Q / t_s
 
 

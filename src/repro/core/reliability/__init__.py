@@ -1,0 +1,21 @@
+"""Device reliability subsystem: fault injection + self-healing store.
+
+``faults``     — deterministic, shard-invariant fault maps (stuck cells,
+                 dead rows/columns), conductance drift, and the
+                 ``ReliabilityState`` pytree the store carries.
+``mitigation`` — write-verify programming, wear-aware spare selection,
+                 and the scrub policy that picks the most-drifted rows.
+
+Everything is gated on ``config.reliability.enabled``: with the section
+absent or disabled, no code in this package runs and the store behaves
+bit-identically to the pre-reliability simulator.
+"""
+from .faults import (ReliabilityState, code_ceiling, effective_grid,
+                     has_cell_faults, init_state)
+from .mitigation import pick_scrub_slots, plan_spares, program_rows_verified
+
+__all__ = [
+    "ReliabilityState", "code_ceiling", "effective_grid", "has_cell_faults",
+    "init_state", "pick_scrub_slots", "plan_spares",
+    "program_rows_verified",
+]

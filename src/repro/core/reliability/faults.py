@@ -1,0 +1,184 @@
+"""Fault models: stuck cells, dead rows/columns, conductance drift.
+
+Every fault map is a *deterministic function* of ``reliability.fault_seed``
+and global cell coordinates, keyed per row SLOT with the same
+``fold_in(key, slot)`` pattern the mutable store's ``d2d_fold='row'``
+noise uses (``variation._row_noise``).  Because draws depend only on
+global indices — never on how the nv (bank) axis happens to be split —
+the functional and sharded backends derive bit-identical fault maps, and
+a sharded state's padding banks simply draw extra (harmless, row-invalid)
+values.
+
+Faults live on the READ path: the stored grid always holds what
+programming achieved, and ``effective_grid`` overlays what a search
+actually senses — drift decay first (a function of the logical store
+age), then stuck-at levels, then dead columns.  Write-verify
+(``mitigation``) uses the same overlay as its readback, so a cell that
+cannot hold its target is detected at program time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..config import CAMConfig, ReliabilityConfig
+from ..variation import sort_ranges
+
+# RNG lane tags: distinct fold_in salts so each fault mechanism (and the
+# verify re-draws in ``mitigation``) consumes an independent stream.
+STUCK_LANE = 0x73747563      # 'stuc'
+DEAD_ROW_LANE = 0x64726F77   # 'drow'
+DEAD_COL_LANE = 0x64636F6C   # 'dcol'
+VERIFY_LANE = 0x76726679     # 'vrfy'
+
+
+@dataclass
+class ReliabilityState:
+    """Per-store reliability bookkeeping (a pytree; rides on CAMState).
+
+    All (nv, R) fields are shaped like ``row_valid`` so the sharded
+    backend pads and places them with the same bank sharding.
+    """
+    age: jax.Array       # () int32 — logical store age (serve steps)
+    prog_age: jax.Array  # (nv, R) int32 — age at last programming
+    writes: jax.Array    # (nv, R) int32 — cumulative programming pulses
+    retired: jax.Array   # (nv, R) bool — slots taken out of service
+    failed: jax.Array    # (nv, R) bool — live rows that failed verify
+
+
+jax.tree_util.register_pytree_node(
+    ReliabilityState,
+    lambda s: ((s.age, s.prog_age, s.writes, s.retired, s.failed), None),
+    lambda _, leaves: ReliabilityState(*leaves),
+)
+
+
+def init_state(nv: int, R: int) -> ReliabilityState:
+    return ReliabilityState(
+        age=jnp.zeros((), jnp.int32),
+        prog_age=jnp.zeros((nv, R), jnp.int32),
+        writes=jnp.zeros((nv, R), jnp.int32),
+        retired=jnp.zeros((nv, R), bool),
+        failed=jnp.zeros((nv, R), bool))
+
+
+def has_cell_faults(rel: ReliabilityConfig) -> bool:
+    return rel.stuck_frac > 0 or rel.dead_row_frac > 0
+
+
+def code_ceiling(config: CAMConfig) -> float:
+    """Top of the code domain — stuck-at levels land uniformly in
+    [0, ceiling].  Analog cells (bits == 0) span [0, 1]."""
+    bits = config.app.data_bits
+    return float(2 ** bits - 1) if bits else 1.0
+
+
+def fault_base_key(rel: ReliabilityConfig) -> jax.Array:
+    return jax.random.PRNGKey(rel.fault_seed)
+
+
+def slot_fault_maps(rel: ReliabilityConfig, slots: jax.Array,
+                    seg_shape: tuple, dtype, code_hi: float):
+    """Stuck/dead-row overlays for row slots ``slots`` (M,).
+
+    Returns ``(mask, vals)`` each (M, *seg_shape): cells where ``mask``
+    holds read ``vals`` regardless of what was programmed.  A dead row
+    is modeled as every cell stuck at 0 (its match line never fires for
+    real data).  For ACAM range grids ``seg_shape`` carries the trailing
+    [lo, hi] plane axis — the two devices of a cell fail independently.
+    """
+    key = fault_base_key(rel)
+    ks = jax.random.fold_in(key, STUCK_LANE)
+    kd = jax.random.fold_in(key, DEAD_ROW_LANE)
+    zero = jnp.zeros((), dtype)
+
+    def one(s):
+        km, kv = jax.random.split(jax.random.fold_in(ks, s))
+        m = jax.random.uniform(km, seg_shape) < rel.stuck_frac
+        v = (jax.random.uniform(kv, seg_shape) * code_hi).astype(dtype)
+        dead = jax.random.uniform(jax.random.fold_in(kd, s), ()) \
+            < rel.dead_row_frac
+        return m | dead, jnp.where(dead, zero, v)
+
+    return jax.vmap(one)(slots.astype(jnp.int32))
+
+
+def dead_row_flags(rel: ReliabilityConfig, slots: jax.Array) -> jax.Array:
+    """(M,) bool — which of the given global row slots are dead."""
+    kd = jax.random.fold_in(fault_base_key(rel), DEAD_ROW_LANE)
+    return jax.vmap(
+        lambda s: jax.random.uniform(jax.random.fold_in(kd, s), ())
+        < rel.dead_row_frac)(slots.astype(jnp.int32))
+
+
+def col_fault_banks(rel: ReliabilityConfig, banks: jax.Array,
+                    nh: int, C: int) -> jax.Array:
+    """Dead-column masks for the given bank ids: (M, nh, C) bool.
+
+    Folded per global (bank, horizontal-subarray) pair so any bank-axis
+    split draws the same columns dead.
+    """
+    kc = jax.random.fold_in(fault_base_key(rel), DEAD_COL_LANE)
+
+    def one(v):
+        return jax.vmap(
+            lambda h: jax.random.uniform(
+                jax.random.fold_in(kc, v * nh + h), (C,))
+            < rel.dead_col_frac)(jnp.arange(nh, dtype=jnp.int32))
+
+    return jax.vmap(one)(banks.astype(jnp.int32))
+
+
+def apply_read_faults(x: jax.Array, stuck_mask, stuck_vals,
+                      col_dead) -> jax.Array:
+    """Overlay read faults on row segments ``x`` (..., nh, C[, 2]).
+
+    ``stuck_mask``/``stuck_vals`` broadcast against ``x`` (or None);
+    ``col_dead`` is (..., nh, C) (or None) — dead columns read 0.
+    """
+    if stuck_mask is not None:
+        x = jnp.where(stuck_mask, stuck_vals, x)
+    if col_dead is not None:
+        if x.ndim == col_dead.ndim + 1:      # ACAM [lo, hi] planes
+            col_dead = col_dead[..., None]
+        x = jnp.where(col_dead, jnp.zeros((), x.dtype), x)
+    return x
+
+
+def effective_grid(grid: jax.Array, rel_state: ReliabilityState,
+                   config: CAMConfig) -> jax.Array:
+    """What a search senses: drift decay, then stuck cells, then dead
+    columns, over the full (nv, nh, R, C[, 2]) stored grid.
+
+    Purely elementwise in global coordinates, so it commutes with any
+    bank-axis sharding.  C2C sensing noise (if configured) applies on
+    top of this grid downstream — stuck cells still see cycle noise, a
+    deliberate simplification (the sense path, not the cell, is noisy).
+    """
+    rel = config.reliability
+    nv, nh, R, C = grid.shape[:4]
+    extra = grid.shape[4:]
+    g = grid
+    if rel.drift_rate > 0:
+        dt = jnp.maximum(rel_state.age - rel_state.prog_age, 0)  # (nv, R)
+        decay = jnp.exp(-rel.drift_rate * dt.astype(g.dtype))
+        g = g * decay.reshape(nv, 1, R, *([1] * (g.ndim - 3)))
+    if has_cell_faults(rel):
+        slots = jnp.arange(nv * R, dtype=jnp.int32)
+        m, v = slot_fault_maps(rel, slots, (nh, C, *extra), g.dtype,
+                               code_ceiling(config))
+        m = jnp.moveaxis(m.reshape(nv, R, nh, C, *extra), 1, 2)
+        v = jnp.moveaxis(v.reshape(nv, R, nh, C, *extra), 1, 2)
+        g = jnp.where(m, v, g)
+    if rel.dead_col_frac > 0:
+        cm = col_fault_banks(rel, jnp.arange(nv), nh, C)   # (nv, nh, C)
+        cm = cm.reshape(nv, nh, 1, C, *([1] * len(extra)))
+        g = jnp.where(cm, jnp.zeros((), g.dtype), g)
+    if g is not grid and g.ndim == 5:
+        # faults can invert a [lo, hi] pair; an inverted range matches
+        # nothing, while physically the two conductances still bound an
+        # interval — same rationale as variation.sort_ranges
+        g = sort_ranges(g)
+    return g

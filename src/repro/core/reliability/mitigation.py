@@ -1,0 +1,148 @@
+"""Mitigation stack: write-verify, spare-row healing, scrub selection.
+
+``program_rows_verified`` is the jit-side programming core shared by
+fresh writes, inserts/updates, spare-row re-programming, and scrub: it
+draws the legacy per-slot D2D noise as attempt 0 (so with verify off the
+programmed cells are bit-identical to ``variation.apply_d2d_slots``),
+reads each attempt back through the fault overlay, and re-programs only
+the out-of-tolerance cells up to ``verify_retries`` times.  The attempt
+counts it returns are the extra row programs the estimator bills.
+
+``plan_spares`` / ``pick_scrub_slots`` are the host-side policies: both
+operate on numpy copies of the (replicated-scalar and row-mask) state,
+so the functional and sharded backends make identical decisions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import variation
+from ..config import DeviceConfig, ReliabilityConfig
+from . import faults
+
+
+def program_rows_verified(
+        clean_segs: jax.Array, old_segs: jax.Array, slots: jax.Array, *,
+        dev: DeviceConfig, rel: ReliabilityConfig, bits: int,
+        key: jax.Array, col_valid: jax.Array, code_hi: float, R: int,
+        live: Optional[jax.Array] = None,
+        worn: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Write-verify programming of (M, nh, C[, 2]) row segments.
+
+    ``old_segs`` holds the slots' current grid content: cells of a
+    ``worn`` slot (past their write endurance) are frozen there — pulses
+    still land (and are billed) but the stored value never moves.
+    ``live`` masks which rows verify actually checks (free/padding rows
+    are programmed exactly like the legacy path but never retried).
+
+    Returns ``(programmed, attempts, ok)``: the final cell values to
+    scatter into the grid, per-row pulse counts (attempt 0 included),
+    and whether every live checked cell ended within ``verify_tol`` of
+    its target.
+    """
+    M = clean_segs.shape[0]
+    is_range = clean_segs.ndim == 4
+    seg_shape = clean_segs.shape[1:]
+    noisy_write = dev.variation in ("d2d", "both")
+    nh, C = col_valid.shape
+
+    if faults.has_cell_faults(rel):
+        sm, sv = faults.slot_fault_maps(rel, slots, seg_shape,
+                                        clean_segs.dtype, code_hi)
+    else:
+        sm = jnp.zeros((M, *seg_shape), bool)
+        sv = jnp.zeros((M, *seg_shape), clean_segs.dtype)
+    if rel.dead_col_frac > 0:
+        cd = faults.col_fault_banks(rel, slots // R, nh, C)
+    else:
+        cd = jnp.zeros((M, nh, C), bool)
+    cv = col_valid > 0
+    if is_range:
+        cv = cv[..., None]
+    if live is None:
+        live = jnp.ones((M,), bool)
+    if worn is None:
+        worn = jnp.zeros((M,), bool)
+
+    def one(s, seg, old, sm_i, sv_i, cd_i, live_i, worn_i):
+        def attempt(k):
+            cand = (variation._row_noise(seg, dev, bits, k, s)
+                    if noisy_write else seg)
+            return jnp.where(worn_i, old, cand)
+
+        # verify compares interval endpoints for ranges (sorted on both
+        # sides), through the same read-fault overlay a search sees
+        tgt = jnp.sort(seg, -1) if is_range else seg
+
+        def bad_of(x):
+            rb = faults.apply_read_faults(
+                jnp.sort(x, -1) if is_range else x, sm_i, sv_i, cd_i)
+            return (jnp.abs(rb - tgt) > rel.verify_tol) & cv & live_i
+
+        cur = attempt(key)          # attempt 0 == the legacy slot draw
+        bad = bad_of(cur)
+        attempts = jnp.ones((), jnp.int32)
+        for a in range(1, rel.verify_retries + 1):
+            retried = bad.any()
+            redraw = attempt(jax.random.fold_in(key,
+                                                faults.VERIFY_LANE + a))
+            cur = jnp.where(bad, redraw, cur)
+            attempts = attempts + retried.astype(jnp.int32)
+            bad = bad_of(cur)
+        return cur, attempts, ~bad.any()
+
+    prog, attempts, ok = jax.vmap(one)(
+        slots.astype(jnp.int32), clean_segs, old_segs, sm, sv, cd,
+        live, worn)
+    prog = variation._maybe_sort_ranges(prog, is_range and noisy_write)
+    return prog, attempts, ok
+
+
+def plan_spares(rv: np.ndarray, failed: np.ndarray, retired: np.ndarray,
+                writes: np.ndarray, R: int, spares_per_bank: int
+                ) -> Tuple[list, list]:
+    """Spare-row remap plan: for each live failed slot, pick a free
+    non-retired slot in the SAME bank (hardware spare wordlines are
+    bank-local, and staying in-bank preserves IVF cluster placement),
+    least-worn first.  A bank stops donating once ``spares_per_bank``
+    of its slots are retired.
+
+    All inputs are flat (padded_K,) numpy views; returns ``(src, dst)``
+    slot lists (possibly empty).  Deterministic: iteration is in
+    ascending failed-slot order with stable least-worn tie-breaks.
+    """
+    rv = rv.copy()
+    retired = retired.copy()
+    src, dst = [], []
+    for j in np.where((rv > 0) & failed)[0]:
+        v = int(j) // R
+        bank = np.arange(v * R, min((v + 1) * R, rv.size))
+        if int(retired[bank].sum()) >= spares_per_bank:
+            continue
+        cand = bank[(rv[bank] == 0) & ~retired[bank]]
+        if cand.size == 0:
+            continue
+        pick = int(cand[np.argsort(writes[cand], kind="stable")][0])
+        src.append(int(j))
+        dst.append(pick)
+        retired[j] = True
+        rv[j] = 0.0
+        rv[pick] = 1.0
+    return src, dst
+
+
+def pick_scrub_slots(rv: np.ndarray, prog_age: np.ndarray, age: int,
+                     scrub_rows: int) -> np.ndarray:
+    """Scrub policy: the ``scrub_rows`` live slots with the largest
+    drift age (``age - prog_age``), most-drifted first, skipping rows
+    with nothing to gain (dt <= 0).  Returns ascending slot ids (the
+    programming order; deterministic under stable ties)."""
+    dt = np.where(rv > 0, age - prog_age, -1)
+    order = np.argsort(-dt, kind="stable")[:max(scrub_rows, 0)]
+    order = order[dt[order] > 0]
+    return np.sort(order).astype(np.int64)

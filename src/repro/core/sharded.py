@@ -49,6 +49,7 @@ from . import merge, prefilter, variation
 from .config import CAMConfig
 from .functional import (CAMState, FunctionalSimulator,
                          resolve_sim_overrides)
+from .reliability import ReliabilityState
 from .perf import ArchSpecifics, MeshLink, MeshSpec, perf_report
 from .results import SearchResult
 
@@ -117,7 +118,7 @@ class ShardedCAMSimulator:
         nv = state.grid.shape[0]
         pad = (-nv) % self.n_banks
         grid, row_valid, sigs = state.grid, state.row_valid, state.sigs
-        codes = state.codes
+        codes, rel = state.codes, state.rel
         if pad:
             grid = jnp.pad(grid,
                            ((0, pad),) + ((0, 0),) * (grid.ndim - 1))
@@ -127,7 +128,23 @@ class ShardedCAMSimulator:
             if codes is not None:
                 codes = jnp.pad(codes,
                                 ((0, pad),) + ((0, 0),) * (codes.ndim - 1))
+            if rel is not None:
+                # padding banks: never programmed (age 0, no wear) and
+                # row-invalid, like the in-bank padding rows
+                rel = ReliabilityState(
+                    age=rel.age,
+                    prog_age=jnp.pad(rel.prog_age, ((0, pad), (0, 0))),
+                    writes=jnp.pad(rel.writes, ((0, pad), (0, 0))),
+                    retired=jnp.pad(rel.retired, ((0, pad), (0, 0))),
+                    failed=jnp.pad(rel.failed, ((0, pad), (0, 0))))
         sh = cam_state_shardings(self.mesh, grid.ndim)
+        if rel is not None:
+            rel = ReliabilityState(
+                age=jax.device_put(rel.age, sh["rel_age"]),
+                prog_age=jax.device_put(rel.prog_age, sh["rel_rows"]),
+                writes=jax.device_put(rel.writes, sh["rel_rows"]),
+                retired=jax.device_put(rel.retired, sh["rel_rows"]),
+                failed=jax.device_put(rel.failed, sh["rel_rows"]))
         return CAMState(
             grid=jax.device_put(grid, sh["grid"]),
             lo=jax.device_put(state.lo, sh["lo"]),
@@ -142,7 +159,8 @@ class ShardedCAMSimulator:
             perm=(jax.device_put(state.perm, sh["perm"])
                   if state.perm is not None else None),
             codes=(jax.device_put(codes, sh["codes"])
-                   if codes is not None else None))
+                   if codes is not None else None),
+            rel=rel)
 
     # --------------------------------------------------------- mutations
     # The mutation logic is shape-preserving and bank-local (scatter into
@@ -166,6 +184,19 @@ class ShardedCAMSimulator:
     def compact(self, state: CAMState,
                 key: Optional[jax.Array] = None) -> CAMState:
         return self.shard_state(self.sim.compact(state, key))
+
+    # ------------------------------------------------------- reliability
+    def free_slots(self, state: CAMState):
+        return self.sim.free_slots(state)
+
+    def age_tick(self, state: CAMState, steps: int = 1) -> CAMState:
+        # only the replicated age scalar changes; the sharded row arrays
+        # keep their placement, so no re-shard is needed
+        return self.sim.age_tick(state, steps)
+
+    def scrub(self, state: CAMState,
+              key: Optional[jax.Array] = None) -> CAMState:
+        return self.shard_state(self.sim.scrub(state, key))
 
     # ------------------------------------------------------------- perf
     def plan(self, entries: int, dims: int) -> ArchSpecifics:
@@ -257,6 +288,11 @@ class ShardedCAMSimulator:
     @partial(jax.jit, static_argnums=(0,))
     def _query_jit(self, state: CAMState, queries, key, valid_count=None):
         cfg = self.config
+        # reliability read path: drift + fault overlay is elementwise in
+        # global coordinates, so it applies to the placed grid before the
+        # shard_map and partitions along with it (bit-identical to the
+        # functional reference's overlay)
+        state = self.sim._effective_state(state)
         qcodes = self.sim.query_codes(state, queries)        # (Q, N)
         qseg = self.sim.segment_queries(state, queries)      # (Q, nh, C)
         qsig = qvalid = None

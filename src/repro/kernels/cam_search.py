@@ -73,6 +73,7 @@ materializes a (Qt, R, C) block in registers on the VPU.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -96,8 +97,10 @@ RESIDENT_BUDGET_BYTES = 12 * 1024 * 1024
 # choice.  Interpret mode pays this in host dispatch per step; compiled
 # Mosaic pays a (much smaller) scalar-core cost — either way the model only
 # RANKS ladder rungs, and kernel_bench.py validates the ranking against
-# wall clock.
-STEP_OVERHEAD_S = 2e-4
+# wall clock.  Overridable at import via CAMASIM_STEP_OVERHEAD_S (or at
+# runtime via set_kernel_model / sim.step_overhead_s; see
+# benchmarks/calibrate_kernel_model.py for a fitting script).
+STEP_OVERHEAD_S = float(os.environ.get("CAMASIM_STEP_OVERHEAD_S", 2e-4))
 
 # Nominal HBM bandwidth for the traffic term of the Q-tile model; the same
 # constant plan.autotune.simulated_qps uses (bytes/s).
@@ -109,8 +112,11 @@ HBM_BYTES_PER_S = 819e9
 # (l2 / dot) and the bit-packed hamming path never build this block, so the
 # cap binds only where the block is real — measured on the ACAM Q-sweep
 # geometry (8 banks x 512 x 128): rungs past this cliff run ~4x slower and
-# non-monotonically (kernel_bench.py qps_monotone contract).
-BCAST_BUDGET_BYTES = 24 * 1024 * 1024
+# non-monotonically (kernel_bench.py qps_monotone contract).  Overridable
+# at import via CAMASIM_BCAST_BUDGET_BYTES (or at runtime via
+# set_kernel_model / sim.bcast_budget_bytes).
+BCAST_BUDGET_BYTES = int(float(
+    os.environ.get("CAMASIM_BCAST_BUDGET_BYTES", 24 * 1024 * 1024)))
 
 # Interpret-mode grids pay per-step dispatch overhead; below this batch size
 # the identical jnp tile math wins (BENCH: kernel_acam_range_q1 at 0.18x).
@@ -118,6 +124,35 @@ SMALL_Q_CROSSOVER = 4
 
 # The power-of-two Q-tile ladder (what SimConfig.q_tile validates against).
 Q_TILES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def set_kernel_model(step_overhead_s: Optional[float] = None,
+                     bcast_budget_bytes: Optional[int] = None) -> None:
+    """Override the measured-model constants at runtime.
+
+    ``None`` leaves a constant untouched.  The constants only RANK
+    ladder rungs; re-fit them on new hardware with
+    ``benchmarks/calibrate_kernel_model.py`` and pin the results via the
+    ``CAMASIM_STEP_OVERHEAD_S`` / ``CAMASIM_BCAST_BUDGET_BYTES``
+    environment variables or the ``sim.step_overhead_s`` /
+    ``sim.bcast_budget_bytes`` config fields (which call this).
+    """
+    global STEP_OVERHEAD_S, BCAST_BUDGET_BYTES
+    if step_overhead_s is not None:
+        if step_overhead_s <= 0:
+            raise ValueError("step_overhead_s must be > 0")
+        STEP_OVERHEAD_S = float(step_overhead_s)
+    if bcast_budget_bytes is not None:
+        if bcast_budget_bytes <= 0:
+            raise ValueError("bcast_budget_bytes must be > 0")
+        BCAST_BUDGET_BYTES = int(bcast_budget_bytes)
+
+
+def kernel_model() -> dict:
+    """The active measured-model constants (after env/config overrides)."""
+    return {"step_overhead_s": STEP_OVERHEAD_S,
+            "bcast_budget_bytes": BCAST_BUDGET_BYTES,
+            "hbm_bytes_per_s": HBM_BYTES_PER_S}
 
 
 def default_q_tile(rows: int, cols: int, planes: int = 1, *,
@@ -173,7 +208,7 @@ def choose_q_tile(rows: int, cols: int, planes: int = 1, *, banks: int = 1,
                   bcast_cols: int = 0,
                   budget_bytes: int = RESIDENT_BUDGET_BYTES,
                   hbm_bytes_per_s: float = HBM_BYTES_PER_S,
-                  step_overhead_s: float = STEP_OVERHEAD_S) -> int:
+                  step_overhead_s: Optional[float] = None) -> int:
     """Measured-model Q-tile autotune hook for the pipelined drivers.
 
     Walks the power-of-two ladder and scores every rung with the same
@@ -197,6 +232,8 @@ def choose_q_tile(rows: int, cols: int, planes: int = 1, *, banks: int = 1,
     operand and growing it past the cache cliff is what made large-Q
     batches SLOWER per query (the throughput collapse this driver fixes).
     """
+    if step_overhead_s is None:     # resolve at call time, not def time,
+        step_overhead_s = STEP_OVERHEAD_S   # so set_kernel_model applies
     vb = resident_banks(banks, segs, rows, cols, planes, itemsize=itemsize,
                         budget_bytes=budget_bytes)
     out_planes = 2 if want_dist else 1

@@ -232,6 +232,7 @@ class CAMSearchServer:
         self._next_rid = 0
         self._steps = 0
         self._mut_steps = 0
+        self._ticks = 0      # reliability: serve steps = drift age units
 
     # ----------------------------------------------------------- submit
     def _admit(self, req):
@@ -357,10 +358,31 @@ class CAMSearchServer:
             r.done, r.t_done = True, now
             self.finished.append(r)
 
+    def _reliability_tick(self) -> None:
+        """Advance the store's drift clock by one serve step and, every
+        ``scrub_every`` steps, re-program the most-drifted rows through
+        the mutation RNG lane — scrub keys fold exactly like coalesced
+        mutations, so the search key schedule is untouched."""
+        cfg = getattr(self.sim, "config", None)
+        rel = getattr(cfg, "reliability", None)
+        if (rel is None or not rel.enabled
+                or getattr(self.state, "rel", None) is None
+                or not hasattr(self.sim, "age_tick")):
+            return
+        self.state = self.sim.age_tick(self.state)
+        self._ticks += 1
+        if rel.scrub_every > 0 and self._ticks % rel.scrub_every == 0:
+            mkey = jax.random.fold_in(self._mut_key, self._mut_steps)
+            self.state = self.sim.scrub(self.state, key=mkey)
+            self._mut_steps += 1
+
     def step(self) -> int:
         """Apply the queue's leading mutation runs, then serve one search
         batch; returns #requests completed.  A failing unit restores its
-        popped requests to the queue front before re-raising."""
+        popped requests to the queue front before re-raising.  With
+        reliability enabled the store ages (and is scrubbed) every step,
+        queue empty or not — drift does not wait for traffic."""
+        self._reliability_tick()
         if not self.queue:
             return 0
         served = 0

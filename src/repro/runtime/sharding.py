@@ -230,6 +230,10 @@ def cam_state_shardings(mesh: Mesh, grid_ndim: int = 4,
         # mutable-store field: the clean (pre-noise) codes grid shards
         # exactly like the noisy grid it shadows
         "codes": NamedSharding(mesh, gspec),
+        # reliability fields: the (nv, R) wear/age/health masks shard
+        # with their rows; the scalar store age replicates
+        "rel_age": NamedSharding(mesh, PartitionSpec()),
+        "rel_rows": NamedSharding(mesh, gspec),
     }
 
 

@@ -1,0 +1,357 @@
+"""Device reliability subsystem: fault injection, drift, self-healing.
+
+The load-bearing guarantees:
+  * ``reliability`` off (section absent OR ``enabled=False``) is
+    BIT-IDENTICAL to the pre-reliability code — grids, queries, mutable
+    store, both backends;
+  * fault maps are deterministic functions of ``fault_seed`` keyed per
+    global row slot, so the same config always injects the same faults
+    and insert == fresh-write parity survives fault injection;
+  * mitigation is invisible at the API: spare-row healing remaps failed
+    rows without changing any returned id, and with noiseless writes the
+    healed store answers EXACTLY like a fault-free one;
+  * drift decays the sensed grid with logical age and scrubbing restores
+    it, driven by the serve engine without perturbing the search RNG
+    schedule;
+  * the estimator bills write-verify retries and the scrub duty cycle
+    only when the subsystem is on (the off-report stays key-for-key
+    identical — Table IV golden safe).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import CAMASim, CAMConfig
+from repro.core.config import ReliabilityConfig
+from repro.core.perf.estimator import (estimate_arch, expected_row_programs,
+                                       perf_report, predict_scrub)
+from repro.runtime.serve_loop import CAMSearchServer
+
+jax.config.update("jax_platforms", "cpu")
+
+
+def _cfg(backend="functional", variation="none", std=0.05, cell="mcam",
+         rel=None, **sim):
+    base = dict(capacity=40, c2c_fold="bank", d2d_fold="row",
+                backend=backend)
+    base.update(sim)
+    d = dict(
+        app=dict(distance="l2", match_type="best", match_param=1,
+                 data_bits=3),
+        arch=dict(h_merge="adder", v_merge="comparator"),
+        circuit=dict(rows=8, cols=8, cell_type=cell, sensing="best"),
+        device=dict(device="fefet", variation=variation,
+                    variation_std=std),
+        sim=base)
+    if rel is not None:
+        d["reliability"] = rel
+    return CAMConfig.from_dict(d)
+
+
+def _data(k=24, n=8, seed=0):
+    x = jax.random.uniform(jax.random.PRNGKey(seed), (k, n))
+    return x.at[0].set(0.0).at[1].set(1.0)
+
+
+WKEY = jax.random.PRNGKey(5)
+QKEY = jax.random.PRNGKey(3)
+
+
+def _q(q=6, n=8):
+    return jax.random.uniform(jax.random.PRNGKey(9), (q, n))
+
+
+def _run(cfg, stored=None, queries=None):
+    sim = CAMASim(cfg)
+    st = sim.write(stored if stored is not None else _data(), WKEY)
+    idx, mask = sim.query(st, queries if queries is not None else _q(),
+                          QKEY)
+    return np.asarray(idx), np.asarray(mask), st
+
+
+# ---------------------------------------------------------------------------
+# off-switch bit-identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [
+    dict(),                                          # noiseless mcam
+    dict(variation="both", std=0.3),                 # D2D + C2C noise
+    dict(prefilter="signature", top_p_banks=2),      # search cascade
+    dict(backend="sharded"),                         # 1-device sharded
+])
+def test_disabled_section_is_bit_identical(kw):
+    sim_kw = {k: v for k, v in kw.items()
+              if k in ("prefilter", "top_p_banks", "backend")}
+    dev_kw = {k: v for k, v in kw.items() if k in ("variation", "std")}
+    a = _run(_cfg(**dev_kw, **sim_kw))
+    b = _run(_cfg(**dev_kw, **sim_kw,
+                  rel=dict(enabled=False, stuck_frac=0.5,
+                           dead_row_frac=0.5, drift_rate=1.0)))
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    np.testing.assert_array_equal(np.asarray(a[2].grid),
+                                  np.asarray(b[2].grid))
+    assert b[2].rel is None
+
+
+def test_disabled_mutable_store_bit_identical():
+    extra = jax.random.uniform(jax.random.PRNGKey(7), (4, 8))
+    outs = []
+    for rel in (None, dict(enabled=False, stuck_frac=0.9)):
+        sim = CAMASim(_cfg(rel=rel))
+        st = sim.write(_data(), WKEY)
+        st, ids = sim.insert(st, extra, jax.random.PRNGKey(11))
+        st = sim.delete(st, ids[:1])
+        idx, mask = sim.query(st, _q(), QKEY)
+        outs.append((np.asarray(ids), np.asarray(idx), np.asarray(mask)))
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_enabled_zero_faults_zero_verify_matches_legacy_grid():
+    """All knobs zero: the verified-programming path's attempt-0 draw is
+    EXACTLY the legacy per-slot noise, so the grid is bit-identical."""
+    a = _run(_cfg(variation="d2d", std=0.3))
+    b = _run(_cfg(variation="d2d", std=0.3, rel=dict(enabled=True)))
+    np.testing.assert_array_equal(np.asarray(a[2].grid),
+                                  np.asarray(b[2].grid))
+    np.testing.assert_array_equal(a[0], b[0])
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+def test_fault_maps_deterministic_in_fault_seed():
+    rel = dict(enabled=True, stuck_frac=0.2, dead_row_frac=0.2)
+    a = _run(_cfg(rel=dict(rel, fault_seed=1)))
+    b = _run(_cfg(rel=dict(rel, fault_seed=1)))
+    c = _run(_cfg(rel=dict(rel, fault_seed=2)))
+    np.testing.assert_array_equal(a[0], b[0])
+    assert not np.array_equal(a[0], c[0]) or not np.array_equal(a[1], c[1])
+
+
+def test_all_rows_dead_nothing_matches():
+    cfg = _cfg(rel=dict(enabled=True, dead_row_frac=1.0))
+    cfg = cfg.replace(app=dict(match_type="threshold", match_param=2.0),
+                      circuit=dict(sensing="threshold"),
+                      arch=dict(v_merge="gather"))
+    idx, mask, _ = _run(cfg)
+    assert (mask == 0).all()
+
+
+def test_faults_perturb_results_unmitigated():
+    clean = _run(_cfg())
+    faulty = _run(_cfg(rel=dict(enabled=True, dead_row_frac=0.5,
+                                fault_seed=3)))
+    assert not np.array_equal(clean[0], faulty[0])
+
+
+def test_drift_decays_then_scrub_recovers():
+    """Self-retrieval under heavy drift: aged store mismatches, scrubbed
+    store answers exactly like the fresh one (noiseless writes)."""
+    stored = _data()
+    rel = dict(enabled=True, drift_rate=0.05, scrub_rows=40,
+               verify_retries=1, verify_tol=0.4)
+    sim = CAMASim(_cfg(rel=rel))
+    st = sim.write(stored, WKEY)
+    fresh_idx, _ = sim.query(st, stored, QKEY)
+    aged = sim.age_tick(st, 60)
+    aged_idx, _ = sim.query(aged, stored, QKEY)
+    assert not np.array_equal(np.asarray(fresh_idx), np.asarray(aged_idx))
+    healed = sim.scrub(aged, jax.random.PRNGKey(21))
+    healed_idx, _ = sim.query(healed, stored, QKEY)
+    np.testing.assert_array_equal(np.asarray(fresh_idx),
+                                  np.asarray(healed_idx))
+
+
+# ---------------------------------------------------------------------------
+# mitigation
+# ---------------------------------------------------------------------------
+def test_spare_healing_invisible_noiseless():
+    """Dead rows + write-verify + spares, noiseless writes: the healed
+    store must answer EXACTLY like a fault-free store — same ids, same
+    masks — because every failed row was remapped behind the perm.
+    Spares are same-bank, so the store keeps per-bank head-room."""
+    rel = dict(enabled=True, dead_row_frac=0.25, verify_retries=1,
+               verify_tol=0.4, spares_per_bank=8, fault_seed=5)
+    data = _data(5)
+    clean = _run(_cfg(capacity=8), stored=data)
+    healed = _run(_cfg(capacity=8, rel=rel), stored=data)
+    np.testing.assert_array_equal(clean[0], healed[0])
+    np.testing.assert_array_equal(clean[1], healed[1])
+    assert int(np.asarray(healed[2].rel.retired).sum()) > 0
+
+
+def test_insert_matches_fresh_write_under_reliability():
+    base, extra = _data(16), jax.random.uniform(jax.random.PRNGKey(7),
+                                                (6, 8))
+    rel = dict(enabled=True, stuck_frac=0.02, dead_row_frac=0.1,
+               verify_retries=2, verify_tol=0.3, spares_per_bank=4,
+               fault_seed=9)
+    cfg = _cfg(variation="d2d", std=0.2, rel=rel)
+    sim = CAMASim(cfg)
+    st_inc, _ = sim.insert(sim.write(base, WKEY), extra, WKEY)
+    st_fresh = sim.write(jnp.concatenate([base, extra]), WKEY)
+    ia, ma = sim.query(st_inc, _q(), QKEY)
+    ib, mb = sim.query(st_fresh, _q(), QKEY)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+
+
+def test_endurance_freeze_keeps_old_data():
+    """A worn row (writes >= endurance_writes) freezes: updates burn
+    retries but the cells keep the OLD values, so the old row still
+    matches and the new one does not."""
+    base = _data(16)
+    rel = dict(enabled=True, endurance_writes=1, verify_retries=1,
+               verify_tol=0.4)
+    sim = CAMASim(_cfg(rel=rel))
+    st = sim.write(base, WKEY)
+    old_row = base[3:4]
+    new_row = 1.0 - old_row
+    st2 = sim.update(st, jnp.asarray([3]), new_row, jax.random.PRNGKey(31))
+    idx, _ = sim.query(st2, old_row, QKEY)
+    assert int(np.asarray(idx)[0, 0]) == 3      # old data still wins
+    assert int(np.asarray(st2.rel.writes).reshape(-1)[3]) > 1
+
+
+def test_wear_aware_free_slots_prefer_least_worn():
+    rel = dict(enabled=True, endurance_writes=0, verify_retries=0)
+    sim = CAMASim(_cfg(rel=rel))
+    st = sim.write(_data(16), WKEY)
+    # artificially wear one free slot; the allocator must skip past it
+    worn_slot = 16
+    from repro.core.reliability import ReliabilityState
+    r = st.rel
+    writes = r.writes.at[worn_slot // 8, worn_slot % 8].add(10)
+    st = type(st)(grid=st.grid, lo=st.lo, hi=st.hi,
+                  col_valid=st.col_valid, row_valid=st.row_valid,
+                  spec=st.spec, sigs=st.sigs, sig_thr=st.sig_thr,
+                  perm=st.perm, codes=st.codes,
+                  rel=ReliabilityState(age=r.age, prog_age=r.prog_age,
+                                       writes=writes, retired=r.retired,
+                                       failed=r.failed))
+    free = sim.backend.free_slots(st)
+    assert free[0] == 17 and worn_slot == free[-1]
+
+
+def test_retired_slots_never_reallocated():
+    rel = dict(enabled=True, dead_row_frac=0.25, verify_retries=1,
+               verify_tol=0.4, spares_per_bank=8, fault_seed=5)
+    sim = CAMASim(_cfg(capacity=8, rel=rel))
+    st = sim.write(_data(5), WKEY)
+    retired = set(np.flatnonzero(np.asarray(st.rel.retired).reshape(-1)))
+    assert retired
+    free = set(int(s) for s in sim.backend.free_slots(st))
+    assert not (free & retired)
+
+
+def test_insert_ids_stay_valid_after_heal():
+    """Ids returned by insert must name the inserted rows wherever they
+    physically land (heal swaps the perm entry with the data)."""
+    base, extra = _data(6), jax.random.uniform(jax.random.PRNGKey(7),
+                                               (4, 8))
+    rel = dict(enabled=True, dead_row_frac=0.3, verify_retries=1,
+               verify_tol=0.4, spares_per_bank=8, fault_seed=13)
+    sim = CAMASim(_cfg(capacity=16, rel=rel))
+    st, ids = sim.insert(sim.write(base, WKEY), extra, WKEY)
+    idx, _ = sim.query(st, extra, QKEY)
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0], np.asarray(ids))
+
+
+# ---------------------------------------------------------------------------
+# serve engine
+# ---------------------------------------------------------------------------
+def test_server_scrub_preserves_search_schedule():
+    """Scrub runs on the mutation lane: with zero drift and noiseless
+    re-programming the scrubbing server's answers are bit-identical to a
+    non-scrubbing one — the search fold_in(key, step) schedule is
+    untouched."""
+    stored = _data()
+    outs = []
+    for scrub_every in (0, 3):
+        rel = dict(enabled=True, scrub_every=scrub_every, scrub_rows=8)
+        sim = CAMASim(_cfg(rel=rel))
+        srv = CAMSearchServer(sim=sim, state=sim.write(stored, WKEY),
+                              key=jax.random.PRNGKey(2), batch=4)
+        reqs = [srv.submit(np.asarray(stored[i])) for i in range(8)]
+        srv.run()
+        outs.append([int(r.indices[0]) for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_server_ages_store_every_step():
+    rel = dict(enabled=True, drift_rate=0.01)
+    sim = CAMASim(_cfg(rel=rel))
+    srv = CAMSearchServer(sim=sim, state=sim.write(_data(), WKEY),
+                          key=jax.random.PRNGKey(2))
+    for _ in range(7):
+        srv.step()                      # idle steps still age the store
+    assert int(np.asarray(srv.state.rel.age)) == 7
+
+
+# ---------------------------------------------------------------------------
+# config + estimator
+# ---------------------------------------------------------------------------
+def test_config_round_trip_and_validation():
+    cfg = _cfg(rel=dict(enabled=True, stuck_frac=0.1, verify_retries=2,
+                        verify_tol=0.3, spares_per_bank=2, scrub_every=5,
+                        drift_rate=0.02, endurance_writes=100,
+                        fault_seed=42))
+    cfg2 = CAMConfig.from_json(cfg.to_json())
+    assert cfg2.reliability == cfg.reliability
+    with pytest.raises(ValueError):
+        ReliabilityConfig(stuck_frac=1.5)
+    with pytest.raises(ValueError):
+        ReliabilityConfig(verify_retries=-1)
+    with pytest.raises(ValueError):
+        # reliability + D2D variation requires the per-row-slot fold
+        _cfg(variation="d2d", d2d_fold="grid",
+             rel=dict(enabled=True)).validate()
+
+
+def test_estimator_keys_gated_on_enabled():
+    cfg_off = _cfg()
+    cfg_on = _cfg(variation="d2d", std=0.2,
+                  rel=dict(enabled=True, verify_retries=2, verify_tol=0.2,
+                           scrub_every=10, scrub_rows=4))
+    arch_off = estimate_arch(cfg_off, 256, 32)
+    arch_on = estimate_arch(cfg_on, 256, 32)
+    rep_off = perf_report(cfg_off, arch_off, include_write=True)
+    rep_on = perf_report(cfg_on, arch_on, include_write=True)
+    assert "expected_row_programs" not in rep_off
+    assert "scrub" not in rep_off
+    E = rep_on["expected_row_programs"]
+    assert E > 1.0
+    assert rep_on["scrub_energy_pj_per_step"] > 0
+    # verified writes bill E row programs each
+    assert (rep_on["write"].energy_pj
+            == pytest.approx(rep_off["write"].energy_pj * E))
+
+
+def test_expected_row_programs_model():
+    assert expected_row_programs(_cfg(), 64) == 1.0
+    # retries off -> exactly 1 even with faults configured
+    cfg0 = _cfg(rel=dict(enabled=True, stuck_frac=0.1))
+    assert expected_row_programs(cfg0, 64) == 1.0
+    # huge tolerance + no hard faults -> no retries expected
+    cfg1 = _cfg(variation="d2d", std=0.01,
+                rel=dict(enabled=True, verify_retries=3, verify_tol=10.0))
+    assert expected_row_programs(cfg1, 64) == pytest.approx(1.0)
+    # zero tolerance + noise -> every attempt fails, 1 + retries
+    cfg2 = _cfg(variation="d2d", std=0.5,
+                rel=dict(enabled=True, verify_retries=3, verify_tol=0.0))
+    assert expected_row_programs(cfg2, 64) == pytest.approx(4.0)
+    # monotone in stuck fraction
+    es = [expected_row_programs(
+        _cfg(rel=dict(enabled=True, verify_retries=2, verify_tol=0.5,
+                      stuck_frac=f)), 64) for f in (0.0, 0.01, 0.1)]
+    assert es[0] <= es[1] <= es[2]
+
+
+def test_predict_scrub_bills_partial_write():
+    cfg = _cfg(rel=dict(enabled=True, scrub_rows=4, verify_retries=1,
+                        verify_tol=0.2))
+    arch = estimate_arch(cfg, 256, 32)
+    s = predict_scrub(cfg, arch)
+    assert s.energy_pj > 0 and s.latency_ns > 0

@@ -5,8 +5,10 @@ Three layers of guarantees:
     bit-identical to the single-device ``FunctionalSimulator`` across all
     {exact, best, threshold} x {l2, l1, hamming, dot} combos, including
     C2C noise (per-bank RNG folding), the Pallas kernel path, ACAM 5-D
-    [lo, hi] range grids on the fused range kernel, and best-match with
-    match_param > padded_K (clamp + -1 pad parity);
+    [lo, hi] range grids on the fused range kernel, best-match with
+    match_param > padded_K (clamp + -1 pad parity), and the device
+    reliability subsystem (slot-keyed fault maps, drift aging, write-verify
+    + spare healing, scrub — with and without the mutable-store path);
   * property tests (hypothesis, offline shim) for the cross-device merge
     invariants: the local-top-k + re-rank comparator is split-invariant,
     associative, and (absent score ties) shard-order permutation
@@ -220,6 +222,60 @@ check_cascade(cfg_for("best", "l2", "voting", "comparator", "best"),
 check_cascade(cfg_for("threshold", "l1", "adder", "gather", "threshold",
                       "c2c"), c2c_tile=2, tag="threshold-c2c")
 n += 4
+
+# device reliability: slot-keyed fault maps, drift aging, write-verify +
+# spare-row healing, and background scrub must all be bit-identical across
+# shardings (fault maps fold per global row slot; every host-side decision
+# — spare planning, scrub-row picks, free-slot order — reads replicated
+# data), including the mutable-store insert/delete path
+REL = dict(enabled=True, stuck_frac=0.02, dead_row_frac=0.05,
+           verify_retries=2, verify_tol=0.3, spares_per_bank=2,
+           drift_rate=0.01, scrub_rows=4, fault_seed=11)
+
+def check_reliability(cfg, tag="", mutate=False, query_axis=None,
+                      c2c_tile=1, Q=9):
+    m = mesh_q if query_axis else mesh
+    base_sim = dict(c2c_fold="bank", d2d_fold="row", capacity=64,
+                    c2c_query_tile=c2c_tile)
+    cfg = cfg.replace(reliability=dict(REL))
+    K, N = 37, 12
+    k1, k2 = jax.random.split(jax.random.PRNGKey(zlib.crc32(tag.encode())))
+    stored = jax.random.uniform(k1, (K, N))
+    if cfg.circuit.cell_type == "acam":
+        stored = jnp.stack([stored, stored + 0.2], axis=-1)
+    queries = jax.random.uniform(k2, (Q, N))
+    wkey, qkey, mkey = (jax.random.PRNGKey(3), jax.random.PRNGKey(7),
+                        jax.random.PRNGKey(5))
+    sim = FunctionalSimulator(cfg.replace(sim=base_sim))
+    ssim = ShardedCAMSimulator(cfg.replace(sim=base_sim), m,
+                               query_axis=query_axis)
+    sa, sb = sim.write(stored, wkey), ssim.write(stored, wkey)
+    if mutate:
+        extra = jax.random.uniform(jax.random.PRNGKey(13), (5, N))
+        sa, ida = sim.insert(sa, extra, mkey)
+        sb, idb = ssim.insert(sb, extra, mkey)
+        np.testing.assert_array_equal(np.asarray(ida), np.asarray(idb),
+                                      err_msg="ids-" + tag)
+        sa, sb = sim.delete(sa, ida[:2]), ssim.delete(sb, idb[:2])
+    sa, sb = sim.age_tick(sa, 10), ssim.age_tick(sb, 10)
+    sa, sb = sim.scrub(sa, mkey), ssim.scrub(sb, mkey)
+    ia, ma = sim.query(sa, queries, key=qkey)
+    ib, mb = ssim.query(sb, queries, key=qkey)
+    np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib), err_msg=tag)
+    np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb), err_msg=tag)
+    print("OK reliability", tag)
+
+check_reliability(cfg_for("best", "l2", "adder", "comparator", "best"),
+                  tag="rel-best")
+check_reliability(cfg_for("exact", "hamming", "and", "gather", "exact",
+                          "both"), tag="rel-noise-exact")
+check_reliability(cfg_for("best", "l2", "adder", "comparator", "best",
+                          "d2d"), mutate=True, tag="rel-mutate")
+check_reliability(acam_cfg("best", "adder", "comparator", "best"),
+                  tag="rel-acam")
+check_reliability(cfg_for("best", "l2", "adder", "comparator", "best"),
+                  Q=8, query_axis="query", tag="rel-qshard")
+n += 5
 print(f"PARITY_OK {n}")
 '''
 
@@ -236,7 +292,7 @@ def _run_subprocess(script: str, timeout: int = 900):
 @pytest.mark.multidevice
 def test_sharded_parity_4_devices():
     proc = _run_subprocess(_PARITY_SCRIPT)
-    assert proc.returncode == 0 and "PARITY_OK 34" in proc.stdout, \
+    assert proc.returncode == 0 and "PARITY_OK 39" in proc.stdout, \
         (proc.stdout[-2000:], proc.stderr[-4000:])
 
 
